@@ -1,0 +1,57 @@
+"""Shared benchmark scaffolding: the paper's testbed simulation runs."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (BASELINE_STATIC_CONTAINERS, ClusterSimulator,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        SimResult, StaticScheduler, generate_workload,
+                        paper_testbed)
+
+# The paper's three Dorm configurations (§V-A.2).
+DORM_CONFIGS: Dict[str, Tuple[float, float]] = {
+    "Dorm-1": (0.2, 0.1),
+    "Dorm-2": (0.1, 0.2),
+    "Dorm-3": (0.1, 0.1),
+}
+
+HORIZON_S = 48 * 3600.0
+ADJUST_COST_S = 60.0
+
+
+@functools.lru_cache(maxsize=32)
+def run_dorm(config_name: str, seed: int = 0, optimizer: str = "greedy",
+             horizon_s: float = HORIZON_S) -> SimResult:
+    theta1, theta2 = DORM_CONFIGS[config_name]
+    wl = generate_workload(seed=seed)
+    master = DormMaster(paper_testbed(), optimizer,
+                        OptimizerConfig(theta1, theta2, time_limit_s=5.0),
+                        protocol=RecordingProtocol())
+    sim = ClusterSimulator(master, wl, adjustment_cost_s=ADJUST_COST_S,
+                           horizon_s=horizon_s)
+    return sim.run()
+
+
+@functools.lru_cache(maxsize=8)
+def run_baseline(seed: int = 0, horizon_s: float = HORIZON_S,
+                 rate_multiplier: float = 1.0) -> SimResult:
+    wl = generate_workload(seed=seed)
+    static = {w.spec.app_id: BASELINE_STATIC_CONTAINERS[w.class_index]
+              for w in wl}
+    sim = ClusterSimulator(StaticScheduler(paper_testbed(), static), wl,
+                           rate_multiplier=rate_multiplier,
+                           horizon_s=horizon_s)
+    return sim.run()
+
+
+def emit(rows):
+    """Print benchmark rows as `name,value,unit,notes` CSV."""
+    for name, value, unit, notes in rows:
+        if isinstance(value, float):
+            value = f"{value:.4g}"
+        print(f"{name},{value},{unit},{notes}")

@@ -1,0 +1,36 @@
+"""Fig 9(a) reproduction: application speedup, Dorm vs static baseline.
+
+Paper's claim: Dorm-1/2/3 speed up applications x2.79 / x2.73 / x2.72 on
+average (duration measured submit -> finish, so queueing waits count).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import speedup_ratios
+
+from .common import DORM_CONFIGS, emit, run_baseline, run_dorm
+
+
+def run(seed: int = 0, optimizer: str = "milp"):
+    base = run_baseline(seed=seed)
+    rows = []
+    for name in DORM_CONFIGS:
+        res = run_dorm(name, seed=seed, optimizer=optimizer)
+        sp = speedup_ratios(res, base)
+        vals = list(sp.values())
+        rows += [
+            (f"fig9a.{name}.mean_speedup",
+             float(np.mean(vals)) if vals else float("nan"), "x",
+             "paper: 2.72-2.79"),
+            (f"fig9a.{name}.max_speedup",
+             float(np.max(vals)) if vals else float("nan"), "x", ""),
+            (f"fig9a.{name}.pairs", len(vals), "apps",
+             "completed under both systems"),
+        ]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

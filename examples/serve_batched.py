@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + KV-cache decode on a small model,
+using the same serve_step the decode dry-run shapes lower.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.serving import generate
+
+
+def main() -> None:
+    cfg = ModelConfig(
+        name="serve-demo", arch_type="dense",
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=1024, vocab_size=4096,
+        dtype="float32", attn_impl="ref", max_seq_len=512)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    B, S_prompt, new = 8, 32, 48
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S_prompt), 0,
+                                 cfg.vocab_size)
+    print(f"serving {B} requests, prompt={S_prompt} tokens, "
+          f"generating {new} tokens each")
+
+    t0 = time.time()
+    out = generate(params, cfg, prompts, max_new_tokens=new,
+                   temperature=0.0)
+    dt = time.time() - t0
+    assert out.shape == (B, S_prompt + new)
+    print(f"generated {B * new} tokens in {dt:.2f}s "
+          f"({B * new / dt:.0f} tok/s on CPU)")
+    print("sample continuation token ids:", out[0, S_prompt:S_prompt + 16])
+
+    # temperature sampling round for contrast
+    out_t = generate(params, cfg, prompts, max_new_tokens=8,
+                     temperature=0.8, seed=7)
+    print("sampled continuation  token ids:", out_t[0, S_prompt:])
+
+
+if __name__ == "__main__":
+    main()

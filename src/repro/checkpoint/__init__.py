@@ -1,0 +1,2 @@
+"""Resharding checkpointer (the adjustment protocol's reliable storage)."""
+from .checkpoint import load_checkpoint, load_meta, save_checkpoint

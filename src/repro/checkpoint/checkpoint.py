@@ -1,0 +1,83 @@
+"""Resharding checkpointer -- the 'reliable storage' of the paper's
+checkpoint-based resource-adjustment protocol (§III-C.2).
+
+Saves any pytree (params + optimizer state + data-pipeline cursor + step) as
+  <dir>/<name>/manifest.json      tree structure, shapes, dtypes, metadata
+  <dir>/<name>/arrays.npz         flat leaf arrays
+and restores it under a possibly DIFFERENT mesh/sharding: leaves are loaded
+to host then `jax.device_put` with the target sharding, which is exactly how
+an application killed at n containers resumes at n' != n.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, name: str, tree: Any,
+                    meta: Optional[Dict[str, Any]] = None) -> str:
+    path = os.path.join(directory, name)
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "keys": sorted(flat.keys()),
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+    return path
+
+
+def load_checkpoint(directory: str, name: str, like: Any,
+                    shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching pytree of
+    jax.sharding.Sharding -- leaves are device_put with it (resharding)."""
+    path = os.path.join(directory, name)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(flat_like))
+    leaves = []
+    for (kpath, leaf), sh in zip(flat_like, shard_leaves):
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in kpath)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != target {want_shape}")
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_meta(directory: str, name: str) -> Dict[str, Any]:
+    with open(os.path.join(directory, name, "manifest.json")) as f:
+        return json.load(f)["meta"]

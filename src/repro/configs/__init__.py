@@ -1,0 +1,3 @@
+"""Assigned-architecture configs (one module per arch) + registry."""
+from .registry import (ARCH_IDS, config_for_shape, get_config,
+                       get_long_variant, shape_supported, smoke_config)

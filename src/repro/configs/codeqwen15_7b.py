@@ -1,0 +1,16 @@
+"""CodeQwen1.5 7B [hf:Qwen/CodeQwen1.5-7B] -- qwen1.5 arch: MHA-equal GQA
+(kv=32), RoPE theta 1e6, SwiGLU."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="codeqwen1.5-7b", arch_type="dense",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+        head_dim=128, d_ff=13_440, vocab_size=92_416,
+        rope_theta=1_000_000.0, act="silu", max_seq_len=65_536,
+        source="hf:Qwen/CodeQwen1.5-7B",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

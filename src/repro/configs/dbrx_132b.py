@@ -1,0 +1,17 @@
+"""DBRX 132B [hf:databricks/dbrx-base] -- fine-grained MoE: 16 experts,
+top-4, 36B active / 132B total, GQA kv=8."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", arch_type="moe",
+        num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+        head_dim=128, d_ff=10_752, vocab_size=100_352,
+        num_experts=16, num_experts_per_tok=4,
+        rope_theta=500_000.0, act="silu", max_seq_len=32_768,
+        source="hf:databricks/dbrx-base",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

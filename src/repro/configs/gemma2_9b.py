@@ -1,0 +1,21 @@
+"""Gemma 2 9B [arXiv:2408.00118] -- dense, local/global alternating attention,
+GQA kv=8, logit soft-capping, tied embeddings."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b", arch_type="dense",
+        num_layers=42, d_model=3584, num_heads=16, num_kv_heads=8,
+        head_dim=256, d_ff=14336, vocab_size=256_000,
+        layer_pattern="local_global", sliding_window=4096,
+        attn_logit_softcap=50.0, final_logit_softcap=30.0,
+        use_post_norms=True, scale_embeddings=True, tie_embeddings=True,
+        rope_theta=10_000.0, act="silu", max_seq_len=8192,
+        source="arXiv:2408.00118",
+    )
+
+def long_context_variant() -> ModelConfig:
+    """500k decode: all layers sliding-window (beyond-paper variant; the
+    native pattern keeps half the layers global => O(S) cache)."""
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=4096, max_seq_len=524_288)

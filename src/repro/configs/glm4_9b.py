@@ -1,0 +1,16 @@
+"""GLM-4 9B [hf:THUDM/glm-4-9b] -- dense, extreme KV sharing (GQA kv=2),
+RoPE."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b", arch_type="dense",
+        num_layers=40, d_model=4096, num_heads=32, num_kv_heads=2,
+        head_dim=128, d_ff=13_696, vocab_size=151_552,
+        rope_theta=10_000.0, act="silu", max_seq_len=131_072,
+        source="hf:THUDM/glm-4-9b",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

@@ -1,0 +1,13 @@
+"""Mamba2 130M [arXiv:2405.21060] -- attention-free SSM with SSD
+(state-space duality): 24 layers, d_model 768, d_state 128."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m", arch_type="ssm",
+        num_layers=24, d_model=768, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50_280,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+        rope_mode="none", tie_embeddings=True, max_seq_len=1_048_576,
+        source="arXiv:2405.21060",
+    )

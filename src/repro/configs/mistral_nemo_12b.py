@@ -1,0 +1,16 @@
+"""Mistral Nemo 12B [hf:mistralai/Mistral-Nemo-Base-2407] -- dense, GQA kv=8,
+128k context."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b", arch_type="dense",
+        num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+        head_dim=128, d_ff=14_336, vocab_size=131_072,
+        rope_theta=1_000_000.0, act="silu", max_seq_len=131_072,
+        source="hf:mistralai/Mistral-Nemo-Base-2407",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

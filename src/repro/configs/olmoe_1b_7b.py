@@ -1,0 +1,17 @@
+"""OLMoE 1B-7B [arXiv:2409.02060] -- fine-grained MoE: 64 experts, top-8,
+d_ff 1024 per expert; 1B active / 7B total."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", arch_type="moe",
+        num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+        head_dim=128, d_ff=1024, vocab_size=50_304,
+        num_experts=64, num_experts_per_tok=8,
+        rope_theta=10_000.0, act="silu", max_seq_len=65_536,
+        source="arXiv:2409.02060",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

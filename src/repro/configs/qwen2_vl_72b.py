@@ -1,0 +1,20 @@
+"""Qwen2-VL 72B [arXiv:2409.12191] -- VLM backbone with M-RoPE (3-section
+multimodal rotary embedding) and dynamic resolution. The ViT vision encoder
+is a STUB per the brief: input_specs() provides (B, n_patches, 8192) patch
+embeddings spliced at the sequence head."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b", arch_type="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        head_dim=128, d_ff=29_568, vocab_size=152_064,
+        rope_mode="mrope", mrope_sections=(16, 24, 24),
+        rope_theta=1_000_000.0, vision_patches=256,
+        act="silu", max_seq_len=131_072,
+        source="arXiv:2409.12191",
+    )
+
+def long_context_variant() -> ModelConfig:
+    return config().with_overrides(layer_pattern="sliding",
+                                   sliding_window=8192, max_seq_len=524_288)

@@ -1,0 +1,75 @@
+"""Architecture registry: the 10 assigned architectures + input-shape specs.
+
+`get_config(arch_id)` -- the exact assigned configuration.
+`get_long_variant(arch_id)` -- sub-quadratic variant for long_500k (native
+for SSM/hybrid; sliding-window variant for attention archs; None = skipped).
+`shape_supported(arch_id, shape)` -- coverage matrix with documented skips.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from ..models.config import (DECODE_32K, INPUT_SHAPES, LONG_500K,
+                             PREFILL_32K, TRAIN_4K, InputShape, ModelConfig)
+from . import (codeqwen15_7b, dbrx_132b, gemma2_9b, glm4_9b, mamba2_130m,
+               mistral_nemo_12b, olmoe_1b_7b, qwen2_vl_72b, whisper_small,
+               zamba2_27b)
+
+_MODULES = {
+    "gemma2-9b": gemma2_9b,
+    "whisper-small": whisper_small,
+    "codeqwen1.5-7b": codeqwen15_7b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "mamba2-130m": mamba2_130m,
+    "glm4-9b": glm4_9b,
+    "zamba2-2.7b": zamba2_27b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "mistral-nemo-12b": mistral_nemo_12b,
+    "dbrx-132b": dbrx_132b,
+}
+
+ARCH_IDS = tuple(_MODULES.keys())
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _MODULES[arch_id].config()
+
+
+def get_long_variant(arch_id: str) -> Optional[ModelConfig]:
+    """Config used for long_500k, or None if the shape is skipped."""
+    mod = _MODULES[arch_id]
+    cfg = mod.config()
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return cfg                     # natively sub-quadratic
+    if hasattr(mod, "long_context_variant"):
+        return mod.long_context_variant()
+    return None                        # e.g. whisper: decode shapes skipped
+
+
+def shape_supported(arch_id: str, shape: InputShape) -> bool:
+    """Coverage matrix. Skips (documented in DESIGN.md §Shape-coverage):
+      * whisper-small: decode shapes (decoder max target 448; enc-dec decode
+        at 32k/500k target positions contradicts the architecture);
+      * long_500k: only for archs with a sub-quadratic path (SSM/hybrid
+        natively; dense/moe/vlm via the sliding-window variant)."""
+    cfg = get_config(arch_id)
+    if cfg.arch_type == "encdec" and shape.is_decode:
+        return False
+    if shape.name == "long_500k":
+        return get_long_variant(arch_id) is not None
+    return True
+
+
+def config_for_shape(arch_id: str, shape: InputShape) -> ModelConfig:
+    if not shape_supported(arch_id, shape):
+        raise ValueError(f"{arch_id} skips {shape.name} (see DESIGN.md)")
+    if shape.name == "long_500k":
+        return get_long_variant(arch_id)
+    return get_config(arch_id)
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family variant (<=2 layers, d_model<=512, <=4 experts)."""
+    return get_config(arch_id).reduced()

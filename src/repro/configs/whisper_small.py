@@ -1,0 +1,14 @@
+"""Whisper small [arXiv:2212.04356] -- encoder-decoder audio backbone.
+The mel+conv frontend is a STUB per the brief: input_specs() provides
+(B, 1500, 768) frame embeddings consumed by the encoder."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small", arch_type="encdec",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        head_dim=64, d_ff=3072, vocab_size=51_865,
+        encoder_layers=12, encoder_seq=1500, cross_attention=True,
+        rope_mode="learned", act="gelu", max_seq_len=32_768,
+        source="arXiv:2212.04356",
+    )

@@ -1,0 +1,16 @@
+"""Zamba2 2.7B [arXiv:2411.15242] -- hybrid: Mamba2 backbone with a weight-
+SHARED attention+MLP block applied every 6 layers (54 mamba layers, 9 shared-
+block applications), each invocation depth carrying its own low-rank (LoRA)
+adapter on the shared q/k/v projections (rank 128, B zero-init)."""
+from ..models.config import ModelConfig
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b", arch_type="hybrid",
+        num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+        head_dim=80, d_ff=10_240, vocab_size=32_000,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+        hybrid_attn_every=6, shared_lora_rank=128,
+        act="silu", max_seq_len=524_288,
+        source="arXiv:2411.15242",
+    )

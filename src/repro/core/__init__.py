@@ -1,0 +1,40 @@
+"""Dorm: dynamically-partitioned cluster management + utilization-fairness
+optimizer (Sun et al., SMARTCOMP 2017) -- the paper's core contribution."""
+from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
+                         RecordingProtocol)
+from .baselines import (MESOS_SCHED_LATENCY_S, StaticScheduler,
+                        TaskLevelOverheadModel)
+from .drf import dominant_share, drf_container_counts, drf_shares, fairness_loss
+from .master import DormMaster, ReallocationResult
+from .metrics import (actual_shares, adjusted_apps, cluster_fairness_loss,
+                      per_resource_utilization, resource_adjustment_overhead,
+                      resource_utilization)
+from .optimizer import (GreedyOptimizer, MilpOptimizer, OptimizerConfig,
+                        adjust_budget, fairness_budget, make_optimizer)
+from .partition import Partition, TaskExecutor, TaskScheduler
+from .simulator import ClusterSimulator, MetricSample, SimResult, speedup_ratios
+from .slave import Container, DormSlave
+from .telemetry import MetricsLogger
+from .types import (Allocation, ApplicationSpec, ClusterSpec, ResourceVector,
+                    SlaveSpec, demand_matrix, validate_allocation)
+from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
+                       TABLE_II, WorkloadApp, generate_workload, paper_testbed,
+                       sample_app_duration_s, sample_task_duration_s)
+
+__all__ = [
+    "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
+    "RecordingProtocol", "MESOS_SCHED_LATENCY_S", "StaticScheduler",
+    "TaskLevelOverheadModel", "dominant_share", "drf_container_counts",
+    "drf_shares", "fairness_loss", "DormMaster", "ReallocationResult",
+    "actual_shares", "adjusted_apps", "cluster_fairness_loss",
+    "per_resource_utilization", "resource_adjustment_overhead",
+    "resource_utilization", "GreedyOptimizer", "MilpOptimizer",
+    "OptimizerConfig", "adjust_budget", "fairness_budget", "make_optimizer",
+    "Partition", "TaskExecutor", "TaskScheduler", "ClusterSimulator",
+    "MetricSample", "SimResult", "speedup_ratios", "Container", "DormSlave",
+    "MetricsLogger", "Allocation", "ApplicationSpec", "ClusterSpec", "ResourceVector",
+    "SlaveSpec", "demand_matrix", "validate_allocation",
+    "BASELINE_STATIC_CONTAINERS", "MEAN_INTERARRIVAL_S", "TABLE_II",
+    "WorkloadApp", "generate_workload", "paper_testbed",
+    "sample_app_duration_s", "sample_task_duration_s",
+]

@@ -1,0 +1,152 @@
+"""Baseline cluster managers the paper compares against (§II, §V-A.4).
+
+* `StaticScheduler` -- the paper's baseline ("Swarm"): each application class
+  gets a FIXED container count (8, 8, 4, 2, 2, 2, 3), placed first-fit at
+  submission, never resized; apps queue FCFS when capacity is unavailable.
+  This also models app-level monolithic/two-level CMSs (Yarn/Mesos app mode),
+  which "can only statically allocate resources".
+
+* `TaskLevelOverheadModel` -- models task-level sharing (Mesos task mode):
+  every task first waits for a resource offer. With the paper's measured
+  ~430 ms mean scheduling latency and the Fig-1(b) task-duration CDF
+  (median 1.5 s), the slowdown factor is (task + latency)/task per task,
+  i.e. an effective rate multiplier << 1 for short-task ML workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .master import ReallocationResult
+from .metrics import cluster_fairness_loss, resource_utilization
+from .types import Allocation, ApplicationSpec, ClusterSpec
+
+MESOS_SCHED_LATENCY_S: float = 0.430      # paper §II-C, 100-node Mesos
+
+
+class StaticScheduler:
+    """Swarm-style static partitioning with FCFS admission."""
+
+    def __init__(self, cluster: ClusterSpec,
+                 static_containers: Dict[str, int]):
+        """`static_containers`: app_id -> fixed container count."""
+        self.cluster = cluster
+        self.static = static_containers
+        self.slave_free = cluster.capacity_matrix().astype(np.float64)
+        self.placements: Dict[str, np.ndarray] = {}    # app_id -> (b,) counts
+        self.specs: Dict[str, ApplicationSpec] = {}
+        self.queue: List[str] = []
+
+    # -- same interface as DormMaster: submit / complete -> ReallocationResult
+
+    def submit(self, spec: ApplicationSpec) -> ReallocationResult:
+        self.specs[spec.app_id] = spec
+        self.queue.append(spec.app_id)
+        self._admit()
+        return self._result(started=(spec.app_id,)
+                            if spec.app_id in self.placements else ())
+
+    def complete(self, app_id: str) -> ReallocationResult:
+        row = self.placements.pop(app_id, None)
+        if row is not None:
+            d = self.specs[app_id].demand.as_array()
+            self.slave_free += row[:, None] * d[None, :]
+        self.specs.pop(app_id, None)
+        if app_id in self.queue:
+            self.queue.remove(app_id)
+        started = self._admit()
+        return self._result(started=tuple(started))
+
+    def containers_of(self, app_id: str) -> int:
+        row = self.placements.get(app_id)
+        return int(row.sum()) if row is not None else 0
+
+    # ------------------------------------------------------------ internals
+
+    def _admit(self) -> List[str]:
+        """FCFS: admit queued apps while their static allocation fits."""
+        started: List[str] = []
+        progressing = True
+        while progressing:
+            progressing = False
+            for app_id in list(self.queue):
+                if app_id in self.placements:
+                    self.queue.remove(app_id)
+                    continue
+                spec = self.specs[app_id]
+                want = self.static.get(app_id, spec.n_min)
+                want = min(max(want, spec.n_min), spec.n_max)
+                row = self._first_fit(spec, want)
+                if row is not None:
+                    self.placements[app_id] = row
+                    self.queue.remove(app_id)
+                    started.append(app_id)
+                    progressing = True
+                else:
+                    # strict FCFS: do not skip ahead of the blocked head app
+                    break
+        return started
+
+    def _first_fit(self, spec: ApplicationSpec, count: int,
+                   ) -> Optional[np.ndarray]:
+        d = spec.demand.as_array()
+        free = self.slave_free.copy()
+        row = np.zeros(free.shape[0], dtype=np.int64)
+        placed = 0
+        for j in range(free.shape[0]):
+            while placed < count and np.all(d <= free[j] + 1e-9):
+                row[j] += 1
+                free[j] -= d
+                placed += 1
+        if placed < count:
+            return None
+        self.slave_free = free
+        return row
+
+    def _allocation(self) -> Allocation:
+        ids = tuple(self.placements.keys())
+        x = (np.stack([self.placements[a] for a in ids]) if ids
+             else np.zeros((0, self.cluster.b), np.int64))
+        return Allocation(ids, x)
+
+    def _result(self, started: Tuple[str, ...]) -> ReallocationResult:
+        alloc = self._allocation()
+        apps = [self.specs[a] for a in alloc.app_ids]
+        # Fairness loss is evaluated over ALL admitted apps: queued apps hold
+        # zero containers (actual share 0 vs a positive DRF target), which is
+        # exactly the static baseline's fairness deficiency in Fig 7.
+        all_ids = tuple(self.specs.keys())
+        full_x = np.zeros((len(all_ids), self.cluster.b), np.int64)
+        for i, a in enumerate(all_ids):
+            if a in self.placements:
+                full_x[i] = self.placements[a]
+        full_alloc = Allocation(all_ids, full_x)
+        return ReallocationResult(
+            allocation=alloc,
+            adjusted_app_ids=(),            # static: never adjusts
+            started_app_ids=started,
+            pending_app_ids=tuple(self.queue),
+            utilization=resource_utilization(alloc, apps, self.cluster),
+            fairness_loss=cluster_fairness_loss(
+                full_alloc, [self.specs[a] for a in all_ids], self.cluster,
+            ) if self.specs else 0.0,
+            adjustment_overhead=0,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskLevelOverheadModel:
+    """Rate multiplier for task-level sharing CMSs (§II-C analysis)."""
+    sched_latency_s: float = MESOS_SCHED_LATENCY_S
+
+    def rate_multiplier(self, task_durations_s: np.ndarray) -> float:
+        """Effective progress rate vs dedicated execution: each task of
+        duration T occupies T + latency wall-clock -> rate = E[T]/E[T+lat]."""
+        t = np.asarray(task_durations_s, dtype=np.float64)
+        return float(t.sum() / (t + self.sched_latency_s).sum())
+
+    def sharing_overhead(self, task_durations_s: np.ndarray) -> float:
+        """Fractional added runtime (the paper's 'sharing overhead')."""
+        return 1.0 / self.rate_multiplier(task_durations_s) - 1.0

@@ -1,0 +1,210 @@
+"""DormMaster: central resource manager (§III-A.1).
+
+Responsibilities:
+  * accept 6-tuple application submissions,
+  * detect arrivals/completions and invoke the utilization-fairness optimizer,
+  * enforce new allocations by creating/destroying containers on DormSlaves,
+    running the checkpoint-based adjustment protocol for resized apps,
+  * keep previous allocations when the optimizer reports infeasibility
+    (paper: "Dorm would keep existing resource allocations until more running
+    applications finish and release their resources").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .adjustment import AdjustmentProtocol, CheckpointHandle, RecordingProtocol
+from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
+                      resource_utilization)
+from .optimizer import GreedyOptimizer, MilpOptimizer, OptimizerConfig
+from .partition import Partition, TaskExecutor, TaskScheduler
+from .slave import DormSlave
+from .types import Allocation, ApplicationSpec, ClusterSpec, validate_allocation
+
+
+@dataclasses.dataclass
+class ReallocationResult:
+    """Outcome of one optimizer invocation + enforcement pass."""
+    allocation: Allocation
+    adjusted_app_ids: Tuple[str, ...]       # killed+resumed (Eq 3's r_i = 1)
+    started_app_ids: Tuple[str, ...]
+    pending_app_ids: Tuple[str, ...]        # admitted but waiting (infeasible)
+    utilization: float
+    fairness_loss: float
+    adjustment_overhead: int
+
+
+class DormMaster:
+    def __init__(self, cluster: ClusterSpec,
+                 optimizer_kind: str = "milp",
+                 optimizer_cfg: OptimizerConfig = OptimizerConfig(),
+                 protocol: Optional[AdjustmentProtocol] = None):
+        self.cluster = cluster
+        self.slaves: Dict[str, DormSlave] = {
+            s.slave_id: DormSlave(s) for s in cluster.slaves}
+        self.slave_ids: Tuple[str, ...] = tuple(s.slave_id for s in cluster.slaves)
+        cfg = optimizer_cfg
+        self.optimizer = (MilpOptimizer(cfg) if optimizer_kind == "milp"
+                          else GreedyOptimizer(cfg))
+        self.protocol: AdjustmentProtocol = protocol or RecordingProtocol()
+        self.partitions: Dict[str, Partition] = {}       # running apps
+        self.specs: Dict[str, ApplicationSpec] = {}      # running + pending
+        self.pending: List[str] = []                     # admitted, not placed
+        self.prev_alloc: Optional[Allocation] = None
+        self.checkpoints: Dict[str, CheckpointHandle] = {}
+        self.executors: Dict[str, List[TaskExecutor]] = {}
+        self.schedulers: Dict[str, List[TaskScheduler]] = {}
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, spec: ApplicationSpec) -> ReallocationResult:
+        """§III-B: submit a 6-tuple; triggers reallocation."""
+        if spec.app_id in self.specs:
+            raise ValueError(f"duplicate app_id {spec.app_id}")
+        self.specs[spec.app_id] = spec
+        self.pending.append(spec.app_id)
+        return self.reallocate()
+
+    def complete(self, app_id: str) -> ReallocationResult:
+        """Application finished; release its partition and reallocate."""
+        if app_id in self.partitions and app_id in self.specs:
+            # notify the protocol so live integrations (ElasticJaxProtocol)
+            # release the finished app's device group
+            self.protocol.kill(self.specs[app_id])
+        self._teardown(app_id)
+        self.specs.pop(app_id, None)
+        if app_id in self.pending:
+            self.pending.remove(app_id)
+        # Drop the finished app from prev_alloc so Eq-4 excludes it.
+        if self.prev_alloc is not None and app_id in self.prev_alloc.app_ids:
+            keep = [i for i, a in enumerate(self.prev_alloc.app_ids)
+                    if a != app_id]
+            self.prev_alloc = Allocation(
+                tuple(self.prev_alloc.app_ids[i] for i in keep),
+                self.prev_alloc.x[keep])
+        return self.reallocate()
+
+    def running_apps(self) -> List[ApplicationSpec]:
+        return [self.specs[a] for a in self.partitions]
+
+    def containers_of(self, app_id: str) -> int:
+        p = self.partitions.get(app_id)
+        return p.n_containers if p else 0
+
+    # --------------------------------------------------------- reallocation
+
+    def reallocate(self) -> ReallocationResult:
+        """Invoke the optimizer over all admitted apps and enforce the result."""
+        apps = [self.specs[a] for a in self.specs]
+        alloc = self.optimizer.solve(apps, self.cluster, self.prev_alloc)
+        if alloc is None:
+            # Infeasible: keep existing allocations; newly admitted apps wait.
+            return self._result(self._current_allocation(), (), (),
+                                tuple(self.pending))
+        return self._enforce(alloc, apps)
+
+    def _current_allocation(self) -> Allocation:
+        app_ids = tuple(self.partitions.keys())
+        x = np.stack([self.partitions[a].placement(self.slave_ids)
+                      for a in app_ids]) if app_ids else \
+            np.zeros((0, len(self.slave_ids)), np.int64)
+        return Allocation(app_ids, x)
+
+    def _enforce(self, alloc: Allocation, apps: Sequence[ApplicationSpec],
+                 ) -> ReallocationResult:
+        """§III-C.2 + Fig 5: apply a new allocation.
+
+        For every running app whose placement changed: save -> kill ->
+        create/destroy containers -> resume. For pending apps that received
+        containers: create containers -> configure executors/schedulers ->
+        start.
+        """
+        validate_allocation(alloc, apps, self.cluster)
+        adjusted: List[str] = []
+        started: List[str] = []
+        spec_of = {a.app_id: a for a in apps}
+
+        # Phase 1 (Fig 5, step 3): save + kill + destroy containers of every
+        # running app whose placement changed -- frees capacity first, so
+        # phase-2 creations never race the teardowns.
+        to_place: List[Tuple[str, np.ndarray, bool]] = []
+        for i, app_id in enumerate(alloc.app_ids):
+            spec = spec_of[app_id]
+            new_row = alloc.x[i]
+            if app_id in self.partitions:
+                old_row = self.partitions[app_id].placement(self.slave_ids)
+                if np.array_equal(old_row, new_row):
+                    continue
+                self.checkpoints[app_id] = self.protocol.save_state(spec)
+                self.protocol.kill(spec)
+                self._teardown(app_id)
+                to_place.append((app_id, new_row, True))
+            elif new_row.sum() > 0:
+                to_place.append((app_id, new_row, False))
+
+        # Phase 2 (Fig 5, step 4): create containers, configure executors and
+        # schedulers, resume adjusted apps / start new ones.
+        for app_id, new_row, was_running in to_place:
+            spec = spec_of[app_id]
+            self._place(spec, new_row)
+            if was_running:
+                self.protocol.resume(spec, int(new_row.sum()),
+                                     self.checkpoints.get(app_id))
+                adjusted.append(app_id)
+            else:
+                self.protocol.start(spec, int(new_row.sum()))
+                started.append(app_id)
+                if app_id in self.pending:
+                    self.pending.remove(app_id)
+
+        result = self._result(alloc, tuple(adjusted), tuple(started),
+                              tuple(self.pending))
+        self.prev_alloc = alloc
+        return result
+
+    # ------------------------------------------------------------- internal
+
+    def _place(self, spec: ApplicationSpec, row: np.ndarray) -> None:
+        part = Partition(spec)
+        execs: List[TaskExecutor] = []
+        scheds: List[TaskScheduler] = []
+        for j, slave_id in enumerate(self.slave_ids):
+            for _ in range(int(row[j])):
+                c = self.slaves[slave_id].create_container(
+                    spec.app_id, spec.demand)
+                part.containers.append(c)
+                # §III-A.3: a TaskExecutor + TaskScheduler per container.
+                execs.append(TaskExecutor(c.container_id, spec.app_id))
+                scheds.append(TaskScheduler(c.container_id, spec.app_id))
+        self.partitions[spec.app_id] = part
+        self.executors[spec.app_id] = execs
+        self.schedulers[spec.app_id] = scheds
+
+    def _teardown(self, app_id: str) -> None:
+        part = self.partitions.pop(app_id, None)
+        if part is None:
+            return
+        for c in part.containers:
+            self.slaves[c.slave_id].destroy_container(c.container_id)
+        self.executors.pop(app_id, None)
+        self.schedulers.pop(app_id, None)
+
+    def _result(self, alloc: Allocation, adjusted: Tuple[str, ...],
+                started: Tuple[str, ...], pending: Tuple[str, ...],
+                ) -> ReallocationResult:
+        apps = [self.specs[a] for a in alloc.app_ids if a in self.specs]
+        sub = Allocation(tuple(a.app_id for a in apps),
+                         np.stack([alloc.row(a.app_id) for a in apps])
+                         if apps else np.zeros((0, self.cluster.b), np.int64))
+        return ReallocationResult(
+            allocation=sub,
+            adjusted_app_ids=adjusted,
+            started_app_ids=started,
+            pending_app_ids=pending,
+            utilization=resource_utilization(sub, apps, self.cluster),
+            fairness_loss=cluster_fairness_loss(sub, apps, self.cluster),
+            adjustment_overhead=len(adjusted),
+        )

@@ -1,0 +1,73 @@
+"""Cluster metrics -- literal implementations of the paper's Eqs 1-4."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .drf import dominant_share, drf_shares
+from .types import Allocation, ApplicationSpec, ClusterSpec, demand_matrix
+
+
+def per_resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
+                             cluster: ClusterSpec) -> np.ndarray:
+    """u_k = sum_i sum_j x_{i,j} d_{i,k} / sum_h c_{h,k}    (Eq 1 inner term)."""
+    if not apps:
+        return np.zeros(cluster.m)
+    d = demand_matrix(apps)                       # (n, m)
+    totals = alloc.x.sum(axis=1)                  # (n,)
+    used = totals @ d                             # (m,)
+    cap = cluster.total_capacity()
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return np.where(cap > 0, used / cap, 0.0)
+
+
+def resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
+                         cluster: ClusterSpec) -> float:
+    """ResourceUtilization(t) = sum_k u_k   (Eq 1). Ranges in [0, m]."""
+    return float(per_resource_utilization(alloc, apps, cluster).sum())
+
+
+def actual_shares(alloc: Allocation, apps: Sequence[ApplicationSpec],
+                  cluster: ClusterSpec) -> Dict[str, float]:
+    """s_i = max_k ( d_{i,k} * sum_j x_{i,j} / sum_h c_{h,k} )."""
+    total = cluster.total_capacity()
+    d = demand_matrix(apps)
+    return {
+        app.app_id: dominant_share(int(alloc.x[i].sum()), d[i], total)
+        for i, app in enumerate(apps)
+    }
+
+
+def cluster_fairness_loss(alloc: Allocation, apps: Sequence[ApplicationSpec],
+                          cluster: ClusterSpec,
+                          theoretical: Optional[Dict[str, float]] = None,
+                          ) -> float:
+    """FairnessLoss(t) = sum_i |s_i - s_hat_i|   (Eq 2)."""
+    if not apps:
+        return 0.0
+    if theoretical is None:
+        theoretical = drf_shares(apps, cluster)
+    actual = actual_shares(alloc, apps, cluster)
+    return float(sum(abs(actual[a.app_id] - theoretical[a.app_id]) for a in apps))
+
+
+def adjusted_apps(prev: Optional[Allocation], new: Allocation) -> Dict[str, int]:
+    """r_i per app (Eq 3): 1 iff any x_{i,j} changed vs the previous allocation.
+
+    Only applications present in BOTH allocations count (Eq 4's A^t ∩ A^{t-1});
+    newly launched and completed apps are excluded by construction.
+    """
+    if prev is None:
+        return {}
+    prev_map = prev.as_dict()
+    out: Dict[str, int] = {}
+    for i, app_id in enumerate(new.app_ids):
+        if app_id in prev_map:
+            out[app_id] = int(not np.array_equal(prev_map[app_id], new.x[i]))
+    return out
+
+
+def resource_adjustment_overhead(prev: Optional[Allocation], new: Allocation) -> int:
+    """ResourceAdjustmentOverhead(t) = sum_{i in A^t ∩ A^{t-1}} r_i   (Eq 4)."""
+    return int(sum(adjusted_apps(prev, new).values()))

@@ -1,0 +1,345 @@
+"""The utilization-fairness optimizer (paper §IV, problem P2).
+
+P2 (Eqs 10-18):  choose x_{i,j} (containers of app i on slave j) to
+
+    max   sum_k sum_i sum_j  x_{i,j} d_{i,k} / C_k          (utilization, Eq 10)
+    s.t.  sum_i x_{i,j} d_{i,k} <= c_{j,k}                  (capacity,   Eq 6)
+          n_min_i <= sum_j x_{i,j} <= n_max_i               (bounds, Eqs 7-8)
+          l_i >= | s_i - s_hat_i |                          (Eqs 11-12, linearized)
+          M r_i >= | x_{i,j} - x^{t-1}_{i,j} |              (Eqs 13-14, big-M)
+          sum_i l_i <= theta1 * 2m     [optionally ceil'd]  (Eq 15)
+          sum_i r_i <= ceil(theta2 * |A^t ∩ A^{t-1}|)       (Eq 16)
+
+Key linearization fact: the dominant resource of app i is argmax_k d_{i,k}/C_k,
+which does NOT depend on the container count, so the actual dominant share is
+s_i = g_i * N_i with the constant g_i = max_k d_{i,k}/C_k and N_i = sum_j x_{i,j}.
+Hence Eqs 11-12 are linear in x.
+
+Two solvers behind one interface:
+  * `MilpOptimizer`  -- exact, scipy.optimize.milp (HiGHS; stands in for CPLEX).
+  * `GreedyOptimizer`-- fast DRF-guided heuristic with placement stickiness
+                        (used for very large instances and as a cross-check).
+
+Paper fallback: if P2 is infeasible, "Dorm would keep existing resource
+allocations until more running applications finish" -- `solve()` returns None
+and the DormMaster keeps the previous allocation (new apps stay pending).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .drf import drf_container_counts, drf_shares
+from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
+                    validate_allocation)
+
+try:  # scipy is available in this environment; keep the import soft anyway.
+    from scipy.optimize import LinearConstraint, milp
+    from scipy.optimize import Bounds as _Bounds
+    _HAVE_SCIPY = True
+except Exception:  # pragma: no cover
+    _HAVE_SCIPY = False
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    theta1: float = 0.1          # fairness-loss threshold   (paper theta_1)
+    theta2: float = 0.1          # adjustment-overhead threshold (paper theta_2)
+    # Eq 15 writes ceil(theta1 * 2m); the observed Fig-7 bounds match the
+    # un-ceiled budget, so that is the default. Set True for the literal text.
+    ceil_fairness_budget: bool = False
+    ceil_adjust_budget: bool = True     # Eq 16's ceil (integer count anyway)
+    time_limit_s: float = 30.0
+    mip_rel_gap: float = 1e-4
+
+
+def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
+    raw = cfg.theta1 * 2 * m
+    return float(math.ceil(raw)) if cfg.ceil_fairness_budget else float(raw)
+
+
+def adjust_budget(cfg: OptimizerConfig, n_common: int) -> int:
+    return int(math.ceil(cfg.theta2 * n_common)) if cfg.ceil_adjust_budget \
+        else int(cfg.theta2 * n_common)
+
+
+def _dominant_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                    ) -> np.ndarray:
+    """g_i = max_k d_{i,k} / C_k  (share per container)."""
+    d = demand_matrix(apps)                     # (n, m)
+    cap = cluster.total_capacity()              # (m,)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratios = np.where(cap > 0, d / cap, 0.0)
+    return ratios.max(axis=1)
+
+
+def _util_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                ) -> np.ndarray:
+    """w_i = sum_k d_{i,k} / C_k -- utilization gained per container of app i."""
+    d = demand_matrix(apps)
+    cap = cluster.total_capacity()
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratios = np.where(cap > 0, d / cap, 0.0)
+    return ratios.sum(axis=1)
+
+
+class MilpOptimizer:
+    """Exact P2 via scipy.optimize.milp (HiGHS)."""
+
+    def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
+        if not _HAVE_SCIPY:  # pragma: no cover
+            raise RuntimeError("scipy not available; use GreedyOptimizer")
+        self.cfg = cfg
+
+    def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+              prev: Optional[Allocation] = None,
+              ) -> Optional[Allocation]:
+        if not apps:
+            return Allocation.empty((), cluster.b)
+        n, b, m = len(apps), cluster.b, cluster.m
+        app_ids = tuple(a.app_id for a in apps)
+        d = demand_matrix(apps)                     # (n, m)
+        cap = cluster.capacity_matrix()             # (b, m)
+        g = _dominant_coeff(apps, cluster)          # (n,)
+        s_hat = drf_shares(apps, cluster)
+        s_hat_vec = np.array([s_hat[a] for a in app_ids])
+
+        prev_map = prev.as_dict() if prev is not None else {}
+        common = [i for i, a in enumerate(app_ids) if a in prev_map]
+        n_r = len(common)
+
+        # Variable layout: [ x (n*b ints) | l (n cont) | r (n_r binary) ]
+        nx, nl = n * b, n
+        nvar = nx + nl + n_r
+
+        def xi(i: int, j: int) -> int:
+            return i * b + j
+
+        c_obj = np.zeros(nvar)
+        util_w = _util_coeff(apps, cluster)         # (n,)
+        for i in range(n):
+            c_obj[i * b:(i + 1) * b] = -util_w[i]   # milp minimizes
+
+        A_rows: List[np.ndarray] = []
+        lb_rows: List[float] = []
+        ub_rows: List[float] = []
+
+        def add(row: np.ndarray, lo: float, hi: float) -> None:
+            A_rows.append(row)
+            lb_rows.append(lo)
+            ub_rows.append(hi)
+
+        # Eq 6: capacity per (slave, resource).
+        for j in range(b):
+            for k in range(m):
+                if not np.any(d[:, k] > 0):
+                    continue
+                row = np.zeros(nvar)
+                for i in range(n):
+                    row[xi(i, j)] = d[i, k]
+                add(row, -np.inf, cap[j, k])
+
+        # Eqs 7-8: container-count bounds.
+        for i in range(n):
+            row = np.zeros(nvar)
+            row[i * b:(i + 1) * b] = 1.0
+            add(row, apps[i].n_min, apps[i].n_max)
+
+        # Eqs 11-12: l_i >= |g_i * N_i - s_hat_i|.
+        for i in range(n):
+            row = np.zeros(nvar)
+            row[i * b:(i + 1) * b] = g[i]
+            row[nx + i] = -1.0
+            add(row, -np.inf, s_hat_vec[i])         # g N - l <= s_hat
+            row2 = np.zeros(nvar)
+            row2[i * b:(i + 1) * b] = g[i]
+            row2[nx + i] = 1.0
+            add(row2, s_hat_vec[i], np.inf)         # g N + l >= s_hat
+
+        # Eqs 13-14: M r_i >= |x_ij - x^{t-1}_ij|,  M = max over n_max.
+        bigM = float(max(a.n_max for a in apps) + 1)
+        for ridx, i in enumerate(common):
+            xprev = prev_map[app_ids[i]]
+            for j in range(b):
+                row = np.zeros(nvar)
+                row[xi(i, j)] = 1.0
+                row[nx + nl + ridx] = -bigM
+                add(row, -np.inf, float(xprev[j]))  # x - M r <= x_prev
+                row2 = np.zeros(nvar)
+                row2[xi(i, j)] = 1.0
+                row2[nx + nl + ridx] = bigM
+                add(row2, float(xprev[j]), np.inf)  # x + M r >= x_prev
+
+        # Eq 15: total fairness loss budget.
+        row = np.zeros(nvar)
+        row[nx:nx + nl] = 1.0
+        add(row, -np.inf, fairness_budget(self.cfg, m))
+
+        # Eq 16: adjustment budget.
+        if n_r:
+            row = np.zeros(nvar)
+            row[nx + nl:] = 1.0
+            add(row, -np.inf, float(adjust_budget(self.cfg, n_r)))
+
+        A = np.stack(A_rows)
+        constraints = LinearConstraint(A, np.array(lb_rows), np.array(ub_rows))
+
+        lb = np.zeros(nvar)
+        ub = np.full(nvar, np.inf)
+        for i in range(n):
+            ub[i * b:(i + 1) * b] = apps[i].n_max
+        ub[nx + nl:] = 1.0
+        integrality = np.concatenate([
+            np.ones(nx), np.zeros(nl), np.ones(n_r)])
+
+        res = milp(c=c_obj, constraints=constraints,
+                   bounds=_Bounds(lb, ub), integrality=integrality,
+                   options={"time_limit": self.cfg.time_limit_s,
+                            "mip_rel_gap": self.cfg.mip_rel_gap})
+        if not res.success or res.x is None:
+            return None
+        x = np.rint(res.x[:nx]).astype(np.int64).reshape(n, b)
+        alloc = Allocation(app_ids, x)
+        validate_allocation(alloc, apps, cluster)
+        return alloc
+
+
+class GreedyOptimizer:
+    """DRF-guided heuristic for P2 with placement stickiness.
+
+    1. Target container counts from weighted-DRF progressive filling (the
+       fairness-optimal point, loss ~= 0), then greedily add containers to the
+       apps with the best utilization-per-fairness-cost while the Eq-15 budget
+       holds (utilization maximization is P2's objective).
+    2. Place counts onto slaves, preferring each app's previous placement
+       (stickiness) and best-fit for the rest.
+    3. Enforce the Eq-16 adjustment budget by reverting whole apps (restore
+       their previous rows) in order of least utilization gain until within
+       budget; reverted capacity is reused where possible.
+    """
+
+    def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
+        self.cfg = cfg
+
+    def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+              prev: Optional[Allocation] = None,
+              ) -> Optional[Allocation]:
+        if not apps:
+            return Allocation.empty((), cluster.b)
+        n, b, m = len(apps), cluster.b, cluster.m
+        app_ids = tuple(a.app_id for a in apps)
+        d = demand_matrix(apps)
+        cap = cluster.capacity_matrix().astype(np.float64)
+        g = _dominant_coeff(apps, cluster)
+        util_w = _util_coeff(apps, cluster)
+        s_hat = drf_shares(apps, cluster)
+        s_hat_vec = np.array([s_hat[a] for a in app_ids])
+        budget_l = fairness_budget(self.cfg, m)
+
+        # -- step 1: choose target counts.
+        drf_counts = drf_container_counts(apps, cluster)
+        target = np.array([drf_counts[a] for a in app_ids], dtype=np.int64)
+        if np.any(target < np.array([a.n_min for a in apps])):
+            # Aggregate capacity cannot host every app's minimum -> infeasible;
+            # paper behaviour: keep existing allocations (master handles it).
+            return None
+
+        def total_loss(counts: np.ndarray) -> float:
+            return float(np.abs(g * counts - s_hat_vec).sum())
+
+        # Greedy utilization push above the DRF point within the Eq-15 budget.
+        remaining = cluster.total_capacity() - target @ d
+        improved = True
+        while improved:
+            improved = False
+            order = np.argsort(-util_w)       # best utilization gain first
+            for i in order:
+                if target[i] >= apps[i].n_max:
+                    continue
+                if not np.all(d[i] <= remaining + 1e-9):
+                    continue
+                target[i] += 1
+                if total_loss(target) <= budget_l + 1e-9:
+                    remaining = remaining - d[i]
+                    improved = True
+                else:
+                    target[i] -= 1
+
+        # -- step 2: placement with stickiness.
+        prev_map = prev.as_dict() if prev is not None else {}
+        x = np.zeros((n, b), dtype=np.int64)
+        free = cap.copy()
+        # Keep previous placements first (up to the new target).
+        for i, a in enumerate(app_ids):
+            if a in prev_map:
+                keep = np.minimum(prev_map[a], 10**9)
+                total_keep = 0
+                for j in range(b):
+                    cnt = int(keep[j])
+                    while cnt > 0 and total_keep + x[i].sum() < target[i] and \
+                            np.all(d[i] <= free[j] + 1e-9):
+                        x[i, j] += 1
+                        free[j] -= d[i]
+                        cnt -= 1
+        # Best-fit the remainder.
+        for i in range(n):
+            while x[i].sum() < target[i]:
+                fits = [j for j in range(b) if np.all(d[i] <= free[j] + 1e-9)]
+                if not fits:
+                    break
+                # best-fit: slave with least residual dominant capacity after.
+                j = min(fits, key=lambda jj: float(
+                    ((free[jj] - d[i]) / np.maximum(cap[jj], 1e-9)).sum()))
+                x[i, j] += 1
+                free[j] -= d[i]
+            if x[i].sum() < apps[i].n_min:
+                # Packing failed below n_min: give up -> infeasible signal.
+                return None
+
+        # -- step 3: adjustment budget.
+        common = [i for i, a in enumerate(app_ids) if a in prev_map]
+        if common:
+            budget_r = adjust_budget(self.cfg, len(common))
+            changed = [i for i in common
+                       if not np.array_equal(x[i], prev_map[app_ids[i]])]
+            # Revert least-valuable changes until within budget (reverting must
+            # stay capacity-feasible; reverts free or consume capacity).
+            changed.sort(key=lambda i: util_w[i] * (x[i].sum()
+                                                    - prev_map[app_ids[i]].sum()))
+            while len(changed) > budget_r:
+                reverted = False
+                for pos in range(len(changed) - 1, -1, -1):
+                    i = changed[pos]
+                    trial = x.copy()
+                    trial[i] = prev_map[app_ids[i]]
+                    used = trial.T @ d
+                    if np.all(used <= cap + 1e-6):
+                        x = trial
+                        changed.pop(pos)
+                        reverted = True
+                        break
+                if not reverted:
+                    return None     # cannot satisfy Eq 16 -> infeasible
+            # Re-check fairness budget after reverts; if blown, also infeasible
+            # (paper keeps previous allocation in that case).
+            if total_loss(x.sum(axis=1)) > budget_l + 1e-6:
+                drf_loss = total_loss(np.array(
+                    [min(max(drf_counts[a], apps[i].n_min), apps[i].n_max)
+                     for i, a in enumerate(app_ids)]))
+                if drf_loss <= budget_l + 1e-6:
+                    return None
+
+        alloc = Allocation(app_ids, x)
+        validate_allocation(alloc, apps, cluster)
+        return alloc
+
+
+def make_optimizer(kind: str, cfg: OptimizerConfig = OptimizerConfig()):
+    if kind == "milp":
+        return MilpOptimizer(cfg)
+    if kind == "greedy":
+        return GreedyOptimizer(cfg)
+    raise ValueError(f"unknown optimizer kind: {kind!r}")

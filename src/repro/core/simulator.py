@@ -1,0 +1,222 @@
+"""Event-driven cluster simulator driving Dorm or a baseline scheduler.
+
+Reproduces the paper's evaluation (§V): the Table-II workload is submitted
+online; on every arrival/completion the scheduler reallocates; application
+progress follows linear data-parallel scaling (work is measured in
+container-seconds); each Dorm adjustment (save → kill → resume) pauses the
+affected application for the protocol's adjustment cost -- that pause IS the
+sharing overhead of Fig 9(b).
+
+Outputs a metric timeline (utilization Eq 1, fairness loss Eq 2, adjustment
+overhead Eq 4) plus per-application completion records for speedup (Fig 9a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .master import DormMaster, ReallocationResult
+from .workload import WorkloadApp
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class AppRuntime:
+    app: WorkloadApp
+    remaining_work: float            # container-seconds
+    containers: int = 0
+    paused_until: float = 0.0        # adjustment downtime
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    n_adjustments: int = 0
+
+    def rate(self, t: float) -> float:
+        if t < self.paused_until - _EPS:
+            return 0.0
+        return float(self.containers)
+
+
+@dataclasses.dataclass
+class MetricSample:
+    t: float
+    utilization: float               # Eq 1 (sum over m resources, in [0, m])
+    fairness_loss: float             # Eq 2
+    adjustment_overhead: int         # Eq 4 for this reallocation event
+    running: int
+    pending: int
+
+
+@dataclasses.dataclass
+class SimResult:
+    samples: List[MetricSample]
+    completions: Dict[str, AppRuntime]
+    total_adjustments: int
+    horizon_s: float
+
+    def time_averaged_utilization(self, t_max: Optional[float] = None) -> float:
+        """Time-weighted mean of Eq-1 utilization over [0, t_max]."""
+        if not self.samples:
+            return 0.0
+        t_end = t_max if t_max is not None else self.horizon_s
+        total, prev_t, prev_u = 0.0, 0.0, 0.0
+        for s in self.samples:
+            t = min(s.t, t_end)
+            total += prev_u * (t - prev_t)
+            prev_t, prev_u = t, s.utilization
+            if s.t >= t_end:
+                break
+        total += prev_u * max(0.0, t_end - prev_t)
+        return total / max(t_end, _EPS)
+
+    def max_fairness_loss(self) -> float:
+        return max((s.fairness_loss for s in self.samples), default=0.0)
+
+    def mean_fairness_loss(self) -> float:
+        vals = [s.fairness_loss for s in self.samples]
+        return float(np.mean(vals)) if vals else 0.0
+
+    def durations(self) -> Dict[str, float]:
+        return {a: (rt.finished_at - rt.submitted_at)
+                for a, rt in self.completions.items()
+                if rt.finished_at is not None}
+
+
+class ClusterSimulator:
+    """Drives a scheduler (DormMaster or StaticScheduler) over a workload."""
+
+    def __init__(self, scheduler, workload: Sequence[WorkloadApp],
+                 adjustment_cost_s: float = 60.0,
+                 rate_multiplier: float = 1.0,
+                 horizon_s: float = 48 * 3600.0,
+                 logger=None):
+        """`rate_multiplier` < 1 models task-level scheduling overhead
+        (baselines.TaskLevelOverheadModel); Dorm runs at 1.0 because its
+        TaskSchedulers place tasks locally (§III-D). `logger`: optional
+        core.telemetry.MetricsLogger receiving every sample/event row."""
+        self.scheduler = scheduler
+        self.workload = list(workload)
+        self.adjustment_cost_s = adjustment_cost_s
+        self.rate_multiplier = rate_multiplier
+        self.horizon_s = horizon_s
+        self.logger = logger
+        self.runtimes: Dict[str, AppRuntime] = {}
+        self.samples: List[MetricSample] = []
+        self.total_adjustments = 0
+
+    # ------------------------------------------------------------------ run
+
+    def run(self) -> SimResult:
+        arrivals = sorted(self.workload, key=lambda w: w.spec.submit_time)
+        ai = 0
+        t = 0.0
+        active: Dict[str, AppRuntime] = {}
+
+        while True:
+            t_arr = (arrivals[ai].spec.submit_time
+                     if ai < len(arrivals) else np.inf)
+            t_fin, fin_app = self._next_completion(active, t)
+            t_next = min(t_arr, t_fin)
+            if not np.isfinite(t_next) or t_next > self.horizon_s:
+                self._advance(active, t, min(self.horizon_s, t_next))
+                break
+            self._advance(active, t, t_next)
+            t = t_next
+
+            if t_fin <= t_arr and fin_app is not None:
+                rt = active.pop(fin_app)
+                rt.finished_at = t
+                rt.containers = 0
+                res = self.scheduler.complete(fin_app)
+                self._apply(res, active, t)
+                self._sample(res, t, len(active))
+            else:
+                w = arrivals[ai]
+                ai += 1
+                rt = AppRuntime(app=w, remaining_work=w.spec.serial_work,
+                                submitted_at=t)
+                self.runtimes[w.spec.app_id] = rt
+                active[w.spec.app_id] = rt
+                res = self.scheduler.submit(w.spec)
+                self._apply(res, active, t)
+                self._sample(res, t, len(active))
+
+        return SimResult(samples=self.samples, completions=self.runtimes,
+                         total_adjustments=self.total_adjustments,
+                         horizon_s=min(self.horizon_s, t))
+
+    # ------------------------------------------------------------ internals
+
+    def _advance(self, active: Dict[str, AppRuntime], t0: float, t1: float,
+                 ) -> None:
+        """Integrate progress over [t0, t1] (rates are piecewise-constant,
+        changing only at pause expiries inside the interval)."""
+        if t1 <= t0:
+            return
+        for rt in active.values():
+            lo = t0
+            if rt.paused_until > lo:
+                lo = min(rt.paused_until, t1)
+            dt = t1 - lo
+            if dt > 0:
+                rt.remaining_work = max(
+                    0.0, rt.remaining_work
+                    - dt * rt.containers * self.rate_multiplier)
+
+    def _next_completion(self, active: Dict[str, AppRuntime], t: float,
+                         ) -> Tuple[float, Optional[str]]:
+        best_t, best_a = np.inf, None
+        for a, rt in active.items():
+            rate = rt.containers * self.rate_multiplier
+            if rate <= 0:
+                continue
+            start = max(t, rt.paused_until)
+            tf = start + rt.remaining_work / rate
+            if tf < best_t:
+                best_t, best_a = tf, a
+        return best_t, best_a
+
+    def _apply(self, res: ReallocationResult, active: Dict[str, AppRuntime],
+               t: float) -> None:
+        # container counts
+        counts = {a: 0 for a in active}
+        for i, app_id in enumerate(res.allocation.app_ids):
+            counts[app_id] = int(res.allocation.x[i].sum())
+        for a, rt in active.items():
+            rt.containers = counts.get(a, 0)
+            if rt.containers > 0 and rt.started_at is None:
+                rt.started_at = t
+        # adjustment downtime (save -> kill -> resume)
+        for a in res.adjusted_app_ids:
+            if a in active:
+                active[a].paused_until = t + self.adjustment_cost_s
+                active[a].n_adjustments += 1
+        self.total_adjustments += len(res.adjusted_app_ids)
+
+    def _sample(self, res: ReallocationResult, t: float, n_active: int,
+                ) -> None:
+        self.samples.append(MetricSample(
+            t=t,
+            utilization=res.utilization,
+            fairness_loss=res.fairness_loss,
+            adjustment_overhead=res.adjustment_overhead,
+            running=len(res.allocation.app_ids),
+            pending=len(res.pending_app_ids)))
+        if self.logger is not None:
+            self.logger.log("sample", t=t, utilization=res.utilization,
+                            fairness_loss=res.fairness_loss,
+                            adjustment_overhead=res.adjustment_overhead,
+                            running=len(res.allocation.app_ids),
+                            pending=len(res.pending_app_ids),
+                            adjusted=list(res.adjusted_app_ids),
+                            started=list(res.started_app_ids))
+
+
+def speedup_ratios(dorm: SimResult, baseline: SimResult) -> Dict[str, float]:
+    """Fig 9(a): per-app duration(baseline) / duration(dorm)."""
+    d1, d0 = dorm.durations(), baseline.durations()
+    return {a: d0[a] / d1[a] for a in d1 if a in d0 and d1[a] > 0}

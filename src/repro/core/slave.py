@@ -1,0 +1,72 @@
+"""DormSlave: manages the local resources of one cluster server (§III-A.2).
+
+A slave reports its available resources to the DormMaster and hosts
+*containers* -- logical resource bundles -- for multiple applications.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .types import ResourceVector, SlaveSpec
+
+
+@dataclasses.dataclass
+class Container:
+    """A logical bundle of resources on one server, owned by one application.
+
+    In the live JAX integration a container additionally owns a device group;
+    in simulation it is purely a resource reservation.
+    """
+    container_id: str
+    app_id: str
+    slave_id: str
+    resources: ResourceVector
+    devices: tuple = ()      # device ids (live integration only)
+
+
+class DormSlave:
+    """Tracks capacity and hosted containers for one server."""
+
+    def __init__(self, spec: SlaveSpec):
+        self.spec = spec
+        self.containers: Dict[str, Container] = {}
+        self._next_id = 0
+
+    @property
+    def slave_id(self) -> str:
+        return self.spec.slave_id
+
+    def used(self) -> np.ndarray:
+        used = np.zeros(self.spec.capacity.m)
+        for c in self.containers.values():
+            used += c.resources.as_array()
+        return used
+
+    def available(self) -> np.ndarray:
+        """Reported to the DormMaster (heartbeat in a real deployment)."""
+        return self.spec.capacity.as_array() - self.used()
+
+    def can_host(self, demand: ResourceVector) -> bool:
+        return bool(np.all(demand.as_array() <= self.available() + 1e-9))
+
+    def create_container(self, app_id: str, demand: ResourceVector) -> Container:
+        if not self.can_host(demand):
+            raise RuntimeError(
+                f"slave {self.slave_id}: cannot host container for {app_id} "
+                f"(demand {demand.values}, available {self.available()})")
+        cid = f"{self.slave_id}/c{self._next_id}"
+        self._next_id += 1
+        c = Container(cid, app_id, self.slave_id, demand)
+        self.containers[cid] = c
+        return c
+
+    def destroy_container(self, container_id: str) -> None:
+        if container_id not in self.containers:
+            raise KeyError(container_id)
+        del self.containers[container_id]
+
+    def containers_of(self, app_id: str) -> List[Container]:
+        return [c for c in self.containers.values() if c.app_id == app_id]

@@ -1,0 +1,56 @@
+"""Telemetry: structured metric logging for cluster runs.
+
+Production CMSs stream scheduler state for dashboards and postmortems; Dorm's
+equivalent is a JSONL metrics log. `MetricsLogger` is accepted by the
+simulator (timeline export) and usable by ElasticTrainers (per-step rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+
+class MetricsLogger:
+    """Append-only JSONL metrics sink with an in-memory mirror."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.rows: List[Dict[str, Any]] = []
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a")
+
+    def log(self, kind: str, **fields: Any) -> None:
+        row = {"kind": kind, **fields}
+        self.rows.append(row)
+        if self._fh:
+            self._fh.write(json.dumps(row) + "\n")
+            self._fh.flush()
+
+    def of_kind(self, kind: str) -> List[Dict[str, Any]]:
+        return [r for r in self.rows if r["kind"] == kind]
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+    # ------------------------------------------------------------ exports
+
+    def utilization_timeline(self):
+        """[(t, utilization)] from simulator samples."""
+        return [(r["t"], r["utilization"]) for r in self.of_kind("sample")]
+
+    def summary(self) -> Dict[str, Any]:
+        samples = self.of_kind("sample")
+        if not samples:
+            return {}
+        return {
+            "events": len(samples),
+            "max_fairness_loss": max(r["fairness_loss"] for r in samples),
+            "total_adjustments": sum(r["adjustment_overhead"]
+                                     for r in samples),
+        }

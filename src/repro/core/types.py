@@ -1,0 +1,182 @@
+"""Core datatypes for the Dorm cluster-management system.
+
+Mirrors the paper's §III definitions:
+  * a *resource vector* over m resource types (e.g. <CPU, GPU, RAM-GB>),
+  * a *container* -- a logical bundle of resources on a server,
+  * the 6-tuple application submission spec (executor, d, w, n_max, n_min, cmd),
+  * cluster / slave capacity descriptions,
+  * an *allocation*: x[i, j] = number of containers of app i on slave j.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+# Canonical resource-type names for the paper's testbed (m = 3).
+DEFAULT_RESOURCE_TYPES: Tuple[str, ...] = ("cpu", "gpu", "ram")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceVector:
+    """An m-dimensional non-negative resource quantity."""
+
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        if any(v < 0 for v in self.values):
+            raise ValueError(f"resource vector must be non-negative: {self.values}")
+
+    @staticmethod
+    def of(*values: float) -> "ResourceVector":
+        return ResourceVector(tuple(float(v) for v in values))
+
+    @property
+    def m(self) -> int:
+        return len(self.values)
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray(self.values, dtype=np.float64)
+
+    def __add__(self, other: "ResourceVector") -> "ResourceVector":
+        return ResourceVector(tuple(a + b for a, b in zip(self.values, other.values)))
+
+    def __sub__(self, other: "ResourceVector") -> "ResourceVector":
+        return ResourceVector(tuple(a - b for a, b in zip(self.values, other.values)))
+
+    def __mul__(self, k: float) -> "ResourceVector":
+        return ResourceVector(tuple(a * k for a in self.values))
+
+    __rmul__ = __mul__
+
+    def fits_in(self, other: "ResourceVector") -> bool:
+        return all(a <= b + 1e-9 for a, b in zip(self.values, other.values))
+
+    def __iter__(self):
+        return iter(self.values)
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplicationSpec:
+    """The paper's 6-tuple: (executor, d, w, n_max, n_min, cmd)."""
+
+    app_id: str
+    executor: str                     # e.g. "MxNet", "TensorFlow", "MPI-Caffe", "Petuum"
+    demand: ResourceVector            # d: per-container resource demand
+    weight: int = 1                   # w
+    n_max: int = 1
+    n_min: int = 1
+    cmd: Tuple[str, ...] = ("start.sh", "resume.sh")
+    # Extra (not in the 6-tuple, used by the simulator / live integration):
+    model: str = ""                   # e.g. "VGG-16"; or an assigned arch id
+    serial_work: float = 0.0          # total work units; duration = work / n_containers
+    submit_time: float = 0.0
+
+    def __post_init__(self):
+        if self.n_min < 1 or self.n_max < self.n_min:
+            raise ValueError(
+                f"require 1 <= n_min <= n_max, got [{self.n_min}, {self.n_max}]")
+        if self.weight < 1:
+            raise ValueError("weight must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlaveSpec:
+    """A DormSlave: one cluster server with a resource capacity c_j."""
+
+    slave_id: str
+    capacity: ResourceVector
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """The whole cluster: resource types + the set of DormSlaves."""
+
+    resource_types: Tuple[str, ...]
+    slaves: Tuple[SlaveSpec, ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.resource_types)
+
+    @property
+    def b(self) -> int:
+        return len(self.slaves)
+
+    def capacity_matrix(self) -> np.ndarray:
+        """(b, m) per-slave capacities."""
+        return np.stack([s.capacity.as_array() for s in self.slaves])
+
+    def total_capacity(self) -> np.ndarray:
+        """(m,) cluster-wide capacity  sum_h c_{h,k}."""
+        return self.capacity_matrix().sum(axis=0)
+
+    @staticmethod
+    def homogeneous(n_slaves: int, capacity: ResourceVector,
+                    resource_types: Sequence[str] = DEFAULT_RESOURCE_TYPES,
+                    ) -> "ClusterSpec":
+        return ClusterSpec(
+            resource_types=tuple(resource_types),
+            slaves=tuple(
+                SlaveSpec(slave_id=f"slave-{j}", capacity=capacity)
+                for j in range(n_slaves)),
+        )
+
+
+@dataclasses.dataclass
+class Allocation:
+    """x[i, j]: containers of application i on slave j (paper Table I)."""
+
+    app_ids: Tuple[str, ...]
+    x: np.ndarray  # (n_apps, b) non-negative ints
+
+    def __post_init__(self):
+        self.x = np.asarray(self.x, dtype=np.int64)
+        if self.x.shape[0] != len(self.app_ids):
+            raise ValueError("x rows must match app_ids")
+        if (self.x < 0).any():
+            raise ValueError("allocations must be non-negative")
+
+    def containers_of(self, app_id: str) -> int:
+        return int(self.x[self.app_ids.index(app_id)].sum())
+
+    def row(self, app_id: str) -> np.ndarray:
+        return self.x[self.app_ids.index(app_id)]
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        return {a: self.x[i].copy() for i, a in enumerate(self.app_ids)}
+
+    @staticmethod
+    def empty(app_ids: Sequence[str], b: int) -> "Allocation":
+        return Allocation(tuple(app_ids), np.zeros((len(app_ids), b), np.int64))
+
+
+def demand_matrix(apps: Sequence[ApplicationSpec]) -> np.ndarray:
+    """(n_apps, m) per-container demand d_{i,k}."""
+    if not apps:
+        return np.zeros((0, 0))
+    return np.stack([a.demand.as_array() for a in apps])
+
+
+def validate_allocation(alloc: Allocation, apps: Sequence[ApplicationSpec],
+                        cluster: ClusterSpec,
+                        enforce_n_min: bool = True) -> None:
+    """Raise if an allocation violates capacity (Eq 6) or bounds (Eqs 7-9)."""
+    if not apps:
+        if alloc.x.size:
+            raise ValueError("allocation rows for zero apps")
+        return
+    d = demand_matrix(apps)                    # (n, m)
+    cap = cluster.capacity_matrix()            # (b, m)
+    used = alloc.x.T @ d                       # (b, m)
+    if (used > cap + 1e-6).any():
+        j, k = np.argwhere(used > cap + 1e-6)[0]
+        raise ValueError(
+            f"capacity violated on slave {j} resource {k}: {used[j, k]} > {cap[j, k]}")
+    totals = alloc.x.sum(axis=1)
+    for i, app in enumerate(apps):
+        if totals[i] > app.n_max:
+            raise ValueError(f"{app.app_id}: {totals[i]} > n_max={app.n_max}")
+        if enforce_n_min and totals[i] < app.n_min:
+            raise ValueError(f"{app.app_id}: {totals[i]} < n_min={app.n_min}")

@@ -1,0 +1,120 @@
+"""Synthetic workload generator -- paper §V-A.3, Table II and Fig 1.
+
+Reproduces the Sensetime production-cluster workload model:
+  * 7 application classes (system, dataset, model, per-container demand,
+    weight, n_max, n_min, count) exactly as Table II -- 50 applications total,
+  * random online submission with exponential inter-arrival, mean 20 minutes,
+  * application durations matching Fig 1(a): ~90% of apps run > 6 h,
+  * task durations matching Fig 1(b): ~50% of tasks < 1.5 s.
+
+Also defines the paper's testbed (§V-A.1): 20 DormSlaves, 240 CPU cores,
+5 GPUs, 2.5 TB RAM total (5 GPU slaves + 15 CPU-only slaves), and the baseline
+("Swarm") static container counts 8, 8, 4, 2, 2, 2, 3 per class (§V-A.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .types import ApplicationSpec, ClusterSpec, ResourceVector, SlaveSpec
+
+# (system, dataset, model, (cpu, gpu, ram_gb), weight, n_max, n_min, count)
+TABLE_II: Tuple[Tuple[str, str, str, Tuple[int, int, int], int, int, int, int], ...] = (
+    ("MxNet",      "Criteo-Log", "LR",        (2, 0, 8),  1, 32, 1, 20),
+    ("TensorFlow", "MovieLens",  "MF",        (2, 0, 6),  2, 32, 1, 20),
+    ("MPI-Caffe",  "CIFAR-10",   "CaffeNet",  (4, 0, 6),  4,  8, 1, 6),
+    ("MxNet",      "ImageNet",   "VGG-16",    (4, 1, 32), 1,  5, 1, 1),
+    ("TensorFlow", "ImageNet",   "GoogLeNet", (6, 1, 16), 1,  5, 1, 1),
+    ("Petuum",     "ImageNet",   "AlexNet",   (6, 1, 16), 2,  5, 1, 1),
+    ("MPI-Caffe",  "ImageNet",   "ResNet-50", (4, 1, 32), 4,  5, 1, 1),
+)
+
+# §V-A.4: Swarm statically creates these container counts per class.
+BASELINE_STATIC_CONTAINERS: Tuple[int, ...] = (8, 8, 4, 2, 2, 2, 3)
+
+MEAN_INTERARRIVAL_S: float = 20.0 * 60.0            # 20 minutes
+
+
+def paper_testbed() -> ClusterSpec:
+    """§V-A.1: 21 servers (1 master + 20 slaves); slaves total 240 CPUs,
+    5 GPUs, 2.5 TB RAM. We model 5 GPU slaves and 15 CPU-only slaves."""
+    slaves: List[SlaveSpec] = []
+    for j in range(20):
+        gpu = 1 if j < 5 else 0
+        slaves.append(SlaveSpec(
+            slave_id=f"slave-{j}",
+            capacity=ResourceVector.of(12, gpu, 128)))
+    return ClusterSpec(resource_types=("cpu", "gpu", "ram"),
+                       slaves=tuple(slaves))
+
+
+def sample_app_duration_s(rng: np.random.Generator) -> float:
+    """Fig 1(a): CDF with ~90% of applications longer than 6 hours.
+
+    Lognormal fitted so that P(D > 6 h) ~= 0.9, median ~= 14 h:
+      ln D ~ Normal(mu=ln(14*3600), sigma=0.66)  ->  P(D>6h) ~= 0.90.
+    """
+    mu = np.log(14 * 3600.0)
+    sigma = 0.66
+    return float(rng.lognormal(mu, sigma))
+
+
+def sample_task_duration_s(rng: np.random.Generator, size: int = 1) -> np.ndarray:
+    """Fig 1(b): CDF with ~50% of tasks under 1.5 s (median 1.5 s).
+
+    Lognormal with median 1.5 s and a moderate tail (sigma=1.0)."""
+    return rng.lognormal(np.log(1.5), 1.0, size=size)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadApp:
+    spec: ApplicationSpec
+    class_index: int            # row of TABLE_II
+    base_duration_s: float      # duration at 1 container (serial)
+
+
+def generate_workload(seed: int = 0,
+                      mean_interarrival_s: float = MEAN_INTERARRIVAL_S,
+                      ) -> List[WorkloadApp]:
+    """50 apps of Table II, shuffled, with exponential arrivals.
+
+    `serial_work` is expressed in container-seconds: an app running with n
+    containers for dt seconds completes n*dt work (linear data-parallel
+    scaling, per §III-A.4 "balance the workloads across all TaskExecutors").
+    The base duration is drawn from the Fig-1 model and anchored so that the
+    app running at the BASELINE static container count finishes in that time
+    (this makes baseline durations match Fig 1 and lets Dorm's scale-up show
+    up as speedup, as in Fig 9a).
+    """
+    rng = np.random.default_rng(seed)
+    entries: List[Tuple[int, int]] = []      # (class_index, instance)
+    for ci, row in enumerate(TABLE_II):
+        for inst in range(row[7]):
+            entries.append((ci, inst))
+    order = rng.permutation(len(entries))
+
+    apps: List[WorkloadApp] = []
+    t = 0.0
+    for slot, idx in enumerate(order):
+        ci, inst = entries[idx]
+        system, dataset, model, demand, weight, n_max, n_min, _ = TABLE_II[ci]
+        t += float(rng.exponential(mean_interarrival_s))
+        dur = sample_app_duration_s(rng)
+        static_n = BASELINE_STATIC_CONTAINERS[ci]
+        spec = ApplicationSpec(
+            app_id=f"app-{slot:02d}-{model}-{inst}",
+            executor=system,
+            demand=ResourceVector.of(*demand),
+            weight=weight,
+            n_max=n_max,
+            n_min=n_min,
+            cmd=("start.sh", "resume.sh"),
+            model=model,
+            serial_work=dur * static_n,     # container-seconds
+            submit_time=t,
+        )
+        apps.append(WorkloadApp(spec=spec, class_index=ci,
+                                base_duration_s=dur))
+    return apps

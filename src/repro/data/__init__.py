@@ -1,0 +1,2 @@
+"""Data substrate: shard-aware resumable synthetic pipeline."""
+from .pipeline import DataConfig, TokenPipeline

@@ -1,0 +1,92 @@
+"""Deterministic, shard-aware, checkpoint-resumable synthetic data pipeline.
+
+Each distributed-ML "application" in the paper equally partitions its training
+dataset across TaskExecutors (§III-A.4). This pipeline realizes that: given
+(num_shards, shard_id) it yields disjoint slices of a deterministic synthetic
+token stream, and its cursor state is a small dict that checkpoints alongside
+the model -- so the Dorm adjustment protocol can kill an application and
+resume it at a DIFFERENT shard count without replaying or skipping data
+(the cursor is global-step based, not shard-local).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic structure: repeated n-gram motifs make the loss learnable
+    motif_len: int = 16
+    num_motifs: int = 64
+
+
+class TokenPipeline:
+    """Synthetic LM token stream with resumable global cursor."""
+
+    def __init__(self, cfg: DataConfig, num_shards: int = 1,
+                 shard_id: int = 0, start_step: int = 0):
+        if cfg.global_batch % num_shards:
+            raise ValueError(f"global_batch {cfg.global_batch} must divide "
+                             f"num_shards {num_shards}")
+        self.cfg = cfg
+        self.num_shards = num_shards
+        self.shard_id = shard_id
+        self.step = start_step
+        rng = np.random.default_rng(cfg.seed)
+        self._motifs = rng.integers(
+            0, cfg.vocab_size, size=(cfg.num_motifs, cfg.motif_len),
+            dtype=np.int32)
+
+    # ------------------------------------------------------------ sampling
+
+    def _sample_sequence(self, rng: np.random.Generator) -> np.ndarray:
+        cfg = self.cfg
+        n_chunks = cfg.seq_len // cfg.motif_len + 1
+        ids = rng.integers(0, cfg.num_motifs, size=n_chunks)
+        seq = self._motifs[ids].reshape(-1)[:cfg.seq_len]
+        # inject noise tokens so the task is not trivially memorizable
+        noise = rng.random(cfg.seq_len) < 0.05
+        seq = np.where(noise,
+                       rng.integers(0, cfg.vocab_size, cfg.seq_len), seq)
+        return seq.astype(np.int32)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        """Local shard slice of global step `self.step`'s batch."""
+        cfg = self.cfg
+        local_b = cfg.global_batch // self.num_shards
+        rows = []
+        for i in range(local_b):
+            global_row = self.shard_id * local_b + i
+            # deterministic per (step, global_row): reshard-stable
+            rng = np.random.default_rng(
+                (cfg.seed, self.step, global_row))
+            rows.append(self._sample_sequence(rng))
+        tokens = np.stack(rows)
+        labels = np.concatenate(
+            [tokens[:, 1:], np.full((local_b, 1), -100, np.int32)], axis=1)
+        self.step += 1
+        return {"tokens": tokens, "labels": labels}
+
+    # --------------------------------------------------------- checkpointing
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: Dict[str, int],
+                num_shards: int = 1, shard_id: int = 0) -> "TokenPipeline":
+        """Resume at the recorded global step with a possibly DIFFERENT shard
+        layout -- the core requirement of Dorm's resize protocol."""
+        return cls(cfg, num_shards=num_shards, shard_id=shard_id,
+                   start_step=int(state["step"]))
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,139 @@
+"""GQA-aware flash attention Pallas TPU kernel.
+
+TPU adaptation of the (GPU-origin) FlashAttention algorithm:
+  * grid (batch, kv_head, q_block, kv_block) -- the kv_block axis is the
+    innermost sequential TPU grid dimension, so the online-softmax running
+    state (m, l, acc) lives in VMEM scratch and carries across kv iterations;
+  * BlockSpec tiles are MXU-aligned: q blocks (G, Bq, Dh) and k/v blocks
+    (Bk, Dh) with Bq/Bk multiples of 128 at production shapes and Dh the
+    lane dimension;
+  * GQA is native: the q block carries the G = Hq/Hkv query heads of one kv
+    head, so k/v tiles are fetched from HBM once per kv head (not per q head);
+  * causal + sliding-window masking by block-level position arithmetic
+    (fully-masked tiles short-circuit via pl.when);
+  * optional logit soft-capping (Gemma 2).
+
+Layouts: q (B, Hkv, G, S, Dh); k, v (B, Hkv, S, Dh); out like q.
+`ops.flash_attention` wraps the (B, S, H, Dh) model layout around this.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: Optional[int], logit_softcap: float, dh: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Tile-level reachability: skip tiles that are fully masked.
+    reachable = True
+    if causal:
+        reachable = jnp.asarray(q_start + block_q - 1 >= k_start)
+    if window is not None:
+        # tile contains a pair with q - k < window iff the SMALLEST diff in
+        # the tile, q_start - (k_start + block_k - 1), is below the window
+        reachable = jnp.logical_and(
+            reachable, q_start - k_start < window + block_k - 1)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, Bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (Bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)          # (Bk, Dh)
+        s = jax.lax.dot_general(
+            q.reshape(-1, dh), k,
+            (((1,), (1,)), ((), ()))) / math.sqrt(dh)  # (G*Bq, Bk)
+        G = q.shape[0]
+        s = s.reshape(G, block_q, block_k)
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        ok = k_pos < seq_len
+        if causal:
+            ok &= q_pos >= k_pos
+        if window is not None:
+            ok &= (q_pos - k_pos) < window
+        s = jnp.where(ok[None], s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (G, Bq)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(ok[None], p, 0.0)
+        scale = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(-1, block_k), v,
+            (((1,), (0,)), ((), ()))).reshape(G, block_q, dh)
+        acc_ref[...] = acc_ref[...] * scale[..., None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_gqa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        logit_softcap: float = 0.0, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False,
+                        ) -> jnp.ndarray:
+    """q (B,Hkv,G,S,Dh), k/v (B,Hkv,S,Dh) -> (B,Hkv,G,S,Dh)."""
+    B, Hkv, G, S, Dh = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    if S % block_q or S % block_k:
+        raise ValueError(f"seq {S} must divide blocks ({block_q},{block_k})")
+    grid = (B, Hkv, S // block_q, S // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        causal=causal, window=window, logit_softcap=logit_softcap, dh=Dh)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, block_q, Dh),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, block_q, Dh),
+                               lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, block_q), jnp.float32),            # m (running max)
+            pltpu.VMEM((G, block_q), jnp.float32),            # l (running sum)
+            pltpu.VMEM((G, block_q, Dh), jnp.float32),        # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These are deliberately the *simplest correct* implementations -- no chunking,
+no online softmax -- so kernel bugs cannot be masked by shared structure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  logit_softcap: float = 0.0) -> jnp.ndarray:
+    """q (B,Hq,S,Dh), k/v (B,Hkv,S,Dh) -> (B,Hq,S,Dh). GQA by head grouping."""
+    B, Hq, S, Dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, Dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(Dh)
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    pos = jnp.arange(S)
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        ok &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, S, Dh).astype(q.dtype)
+
+
+def ssd_ref(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray,
+            h0: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive step-by-step SSD recurrence (lax.scan over time).
+
+    xh (B,S,H,P), dt (B,S,H) post-softplus, A (H,) negative,
+    Bm/Cm (B,S,N). Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h0 = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)                               # (B,H)
+        h = (dA[:, :, None, None] * h
+             + jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t,
+                          x_t.astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", C_t, h)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h_final
+
+
+def moe_gemm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped (per-expert) GEMM oracle. x (E,C,D), w (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+                ) -> jnp.ndarray:
+    """x (R, D), w (D,) stored as (weight - 1)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, shardings, dry-run, train/serve drivers."""

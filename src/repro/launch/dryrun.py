@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: the dry-run needs 512 placeholder host
+# devices before jax locks the device count on first init. Never set this
+# globally -- smoke tests and benches must see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, proving the sharding config is
+coherent, and extract the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, config_for_shape, shape_supported
+from ..models import (decode_step, init_cache, loss_fn, param_shapes, prefill)
+from ..models import meshctx
+from ..models.config import INPUT_SHAPES, InputShape, ModelConfig
+from ..training.optimizer import OptimizerSpec, init_opt_state
+from ..training.train_loop import make_train_step
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .roofline import (RooflineTerms, analytic_hbm_bytes_per_chip,
+                       collective_bytes_per_chip, model_flops, params_bytes)
+from .shardings import (batch_specs, batch_specs_fsdp, cache_specs,
+                        param_specs, param_specs_fsdp, to_named)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if shape.is_decode:
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.arch_type == "vlm":
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_patches, cfg.d_model), dt)
+    if cfg.arch_type == "encdec":
+        batch["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dt)
+    return batch
+
+
+def _train_artifacts(cfg: ModelConfig, shape: InputShape, mesh,
+                     remat_policy: str = "full", strategy: str = "tp"):
+    spec = OptimizerSpec()
+    step = make_train_step(cfg, spec, microbatches=1, remat=True,
+                           remat_policy=remat_policy)
+    state_like = jax.eval_shape(
+        lambda: {"params": param_shapes(cfg),
+                 "opt": init_opt_state(spec, param_shapes(cfg))})
+    batch_like = input_specs(cfg, shape)
+    if strategy == "fsdp":
+        in_sh = (to_named(param_specs_fsdp(state_like, mesh), mesh),
+                 to_named(batch_specs_fsdp(batch_like, mesh), mesh))
+    else:
+        in_sh = (to_named(param_specs(state_like, mesh), mesh),
+                 to_named(batch_specs(batch_like, mesh), mesh))
+    fn = jax.jit(step, in_shardings=in_sh)
+    return fn, (state_like, batch_like)
+
+
+def _prefill_artifacts(cfg: ModelConfig, shape: InputShape, mesh):
+    params_like = param_shapes(cfg)
+    batch_like = input_specs(cfg, shape)
+    in_sh = (to_named(param_specs(params_like, mesh), mesh),
+             {k: to_named(v, mesh)
+              for k, v in batch_specs(batch_like, mesh).items()})
+
+    if cfg.arch_type == "encdec":
+        # whisper prefill = encode + full decoder forward (no decode cache;
+        # decode shapes are skipped for enc-dec per DESIGN.md)
+        def fn(params, batch):
+            logits, _ = loss_fn(
+                params, cfg,
+                dict(batch, labels=jnp.zeros_like(batch["tokens"])))
+            return logits
+        jfn = jax.jit(fn, in_shardings=in_sh)
+        return jfn, (params_like, batch_like)
+
+    def fn(params, batch):
+        logits, cache = prefill(
+            params, cfg, batch["tokens"], shape.seq_len,
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"))
+        return logits[:, -1, :], cache
+
+    jfn = jax.jit(fn, in_shardings=in_sh)
+    return jfn, (params_like, batch_like)
+
+
+def _decode_artifacts(cfg: ModelConfig, shape: InputShape, mesh):
+    params_like = param_shapes(cfg)
+    batch_like = input_specs(cfg, shape)
+    cache_like = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    in_sh = (to_named(param_specs(params_like, mesh), mesh),
+             to_named(batch_specs(batch_like, mesh), mesh)["tokens"],
+             to_named(cache_specs(cache_like, mesh), mesh))
+
+    def fn(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+
+    jfn = jax.jit(fn, in_shardings=in_sh)
+    return jfn, (params_like, batch_like["tokens"], cache_like)
+
+
+def dry_run_one(arch_id: str, shape: InputShape, *, multi_pod: bool = False,
+                collect_roofline: bool = True,
+                override_cfg: Optional[ModelConfig] = None,
+                remat_policy: str = "full",
+                strategy: str = "tp",
+                ) -> Dict[str, Any]:
+    """Lower + compile one combination; return analysis record."""
+    t0 = time.time()
+    cfg = override_cfg or config_for_shape(arch_id, shape)
+    if cfg.num_experts:
+        cfg = cfg.with_overrides(expert_axis="model")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    with meshctx.use_mesh(mesh), mesh:
+        if shape.is_decode:
+            fn, args = _decode_artifacts(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            fn, args = _prefill_artifacts(cfg, shape, mesh)
+        else:
+            fn, args = _train_artifacts(cfg, shape, mesh,
+                                        remat_policy=remat_policy,
+                                        strategy=strategy)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    flops = float((cost or {}).get("flops", 0.0))
+    bytes_accessed = float((cost or {}).get("bytes accessed", 0.0))
+
+    record: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape.name, "mesh": mesh_name,
+        "chips": chips, "ok": True,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                record[attr] = int(v)
+
+    if collect_roofline:
+        # cost_analysis is per-partition AND counts while (scan) bodies once;
+        # analyze_hlo re-derives dot flops / collective bytes with trip-count
+        # multiplication (see hlo_analysis.py). The memory term uses the
+        # documented analytic per-chip HBM model (CPU-backend bytes neither
+        # reflect TPU fusion nor scanned layers).
+        hlo = compiled.as_text()
+        totals = analyze_hlo(hlo)
+        params_like = param_shapes(cfg)
+        if shape.is_decode:
+            tokens = shape.global_batch
+            decode = True
+            cache_like = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+            cache_total = params_bytes(cache_like)
+        else:
+            tokens = shape.global_batch * shape.seq_len
+            decode = False
+            cache_total = 0
+        mf = model_flops(cfg, params_like, tokens, decode=decode,
+                         forward_only=(shape.kind == "prefill"))
+        mesh_model = 16
+        mesh_data = chips // mesh_model
+        from .roofline import sharded_resident_bytes
+        resident = sharded_resident_bytes(
+            params_like, param_specs(params_like, mesh), mesh_model)
+        hbm_per_chip = analytic_hbm_bytes_per_chip(
+            cfg, shape, params_like, kind=shape.kind,
+            mesh_data=mesh_data, mesh_model=mesh_model,
+            cache_bytes_total=cache_total, resident_override=resident)
+        coll_tpu = totals.tpu_corrected_bytes(cfg.dtype == "bfloat16")
+        terms = RooflineTerms(
+            arch=arch_id, shape=shape.name, mesh=mesh_name, chips=chips,
+            hlo_flops=totals.dot_flops * chips,
+            hlo_bytes=hbm_per_chip * chips,
+            collective_bytes=coll_tpu * chips,
+            collective_breakdown={k: int(v) for k, v in
+                                  totals.collective_bytes.items()},
+            model_flops=mf,
+            bytes_per_chip_peak=record.get("temp_size_in_bytes"))
+        record["roofline"] = terms.row()
+        record["raw_cost_analysis"] = {"flops_per_partition": flops,
+                                       "bytes_per_partition": bytes_accessed}
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in INPUT_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"],
+                    default="pod1")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--no-roofline", action="store_true")
+    # §Perf beyond-paper variants (EXPERIMENTS.md):
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "save_dots",
+                             "save_nothing_but_dots_with_no_batch"])
+    ap.add_argument("--moe-dispatch", default="psum",
+                    choices=["psum", "alltoall"])
+    args = ap.parse_args(argv)
+
+    combos = []
+    arches = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = (INPUT_SHAPES if (args.all or not args.shape)
+              else tuple(s for s in INPUT_SHAPES if s.name == args.shape))
+    meshes = {"pod1": (False,), "pod2": (True,),
+              "both": (False, True)}[args.mesh]
+    for a in arches:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for a, s, mp in combos:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if not shape_supported(a, s):
+            rec = {"arch": a, "shape": s.name, "mesh": mesh_name,
+                   "ok": True, "skipped": True,
+                   "reason": "documented skip (DESIGN.md)"}
+            print(f"SKIP  {a:18s} {s.name:12s} {mesh_name}")
+        else:
+            try:
+                override = None
+                if args.moe_dispatch != "psum":
+                    from ..configs import get_config
+                    cfg0 = config_for_shape(a, s)
+                    override = cfg0.with_overrides(
+                        moe_dispatch=args.moe_dispatch)
+                rec = dry_run_one(a, s, multi_pod=mp,
+                                  collect_roofline=not args.no_roofline,
+                                  remat_policy=args.remat_policy,
+                                  override_cfg=override)
+                r = rec.get("roofline", {})
+                print(f"OK    {a:18s} {s.name:12s} {mesh_name} "
+                      f"compile={rec['compile_s']:.0f}s "
+                      f"bottleneck={r.get('bottleneck','-')}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                rec = {"arch": a, "shape": s.name, "mesh": mesh_name,
+                       "ok": False, "error": f"{type(e).__name__}: {e}"}
+                print(f"FAIL  {a:18s} {s.name:12s} {mesh_name}: {e}")
+                traceback.print_exc()
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

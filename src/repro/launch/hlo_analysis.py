@@ -1,0 +1,247 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's HloCostAnalysis (and hence ``compiled.cost_analysis()``) visits each
+while-loop body ONCE -- it does not multiply by the trip count -- so any
+scan-over-layers model is massively under-counted (verified: an 8-step
+lax.scan of a matmul reports 1x matmul flops; the unrolled version 8x).
+This module re-derives dot FLOPs and collective bytes from the optimized
+HLO text, recursively multiplying each while body by its trip count.
+
+Trip counts come from the while instruction's
+``backend_config={"known_trip_count":{"n":"N"}}`` annotation (emitted by
+XLA for counted loops), falling back to the `constant(N)` in the condition
+computation, else 1 (conservative).
+
+FLOPs counted: dot ops, 2 * prod(output dims) * prod(lhs contracting dims),
+with operand shapes resolved through a per-computation instruction-shape
+map. Elementwise/reduce flops are ignored (dots dominate transformer
+compute; roofline.py's analytic model covers the rest).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+"
+                    r"([\w\-]+)\(")
+_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_COND_CONST = re.compile(r"constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?$")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = tot = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES[dtype]
+    return elems, tot
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    lines: List[str] = dataclasses.field(default_factory=list)
+    dot_flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_bytes_f32: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    # (body_name, trip_count)
+    whiles: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    cond_const: int = 1
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        h = _HDR.match(line)
+        if h:
+            cur = Computation(h.group(2), is_entry=bool(h.group(1)))
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    return comps, entry
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+_LHS = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COLL_OP = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _split_instr(line: str):
+    """-> (name, type_str, rest_from_type) or None. Comments stripped."""
+    m = _LHS.match(_COMMENT.sub("", line))
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+def _analyze(c: Computation, comps: Dict[str, Computation]) -> None:
+    shapes: Dict[str, str] = {}
+    parsed = []
+    for line in c.lines:
+        sp = _split_instr(line)
+        if sp is None:
+            continue
+        name, rest = sp
+        parsed.append((name, rest))
+        # the type is everything before the opcode token; for shape lookup we
+        # only need the leading shape expressions, so store the full rest.
+        shapes[name] = rest
+    for name, rest in parsed:
+        cm = _COLL_OP.search(rest)
+        if cm and cm.group(2) != "-done":
+            type_str = rest[:cm.start()]
+            _, by = _shape_elems_bytes(type_str)
+            if cm.group(2) == "-start" and type_str.lstrip().startswith("("):
+                by /= 2          # async tuple carries (operand, result)
+            c.coll_bytes[cm.group(1)] += by * _WEIGHT[cm.group(1)]
+            if "f32[" in type_str:
+                c.coll_bytes_f32[cm.group(1)] += by * _WEIGHT[cm.group(1)]
+            continue
+        dm = re.search(r"\bdot\(\s*%?([\w.\-]+)", rest)
+        if dm and " dot(" in rest:
+            con = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+            if not con:
+                continue
+            lhs_rest = shapes.get(dm.group(1))
+            if lhs_rest is None:
+                continue
+            sm = _SHAPE.search(lhs_rest)
+            if sm is None:
+                continue
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            k = 1
+            ok = True
+            for ci in con.group(1).split(","):
+                if ci:
+                    idx = int(ci)
+                    if idx >= len(dims):
+                        ok = False
+                        break
+                    k *= dims[idx]
+            if not ok:
+                continue
+            out_elems, _ = _shape_elems_bytes(rest[:dm.start()])
+            c.dot_flops += 2.0 * out_elems * k
+            continue
+        wm = re.search(r"\bwhile\(", rest)
+        if wm:
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w.\-]+)", rest)
+            tm = _TRIP.search(rest)
+            tc = int(tm.group(1)) if tm else 0
+            if not tc and cond and cond.group(1) in comps:
+                consts = [int(x) for x in _COND_CONST.findall(
+                    "\n".join(comps[cond.group(1)].lines))]
+                tc = max(consts) if consts else 1
+            if body:
+                c.whiles.append((body.group(1), max(tc, 1)))
+                if cond:
+                    c.calls.append(cond.group(1))   # counted once; negligible
+        # generic callee references (fusions, reduces, custom calls)
+        for cm2 in re.finditer(
+                r"(?:calls=|to_apply=|called_computations=\{)%?([\w.\-]+)",
+                rest):
+            c.calls.append(cm2.group(1))
+
+
+@dataclasses.dataclass
+class HloTotals:
+    dot_flops: float
+    collective_bytes: Dict[str, float]
+    collective_bytes_f32: Dict[str, float] = None
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def tpu_corrected_bytes(self, model_is_bf16: bool) -> float:
+        """XLA:CPU upcasts bf16 reductions to f32 (verified: an explicit
+        bf16 lax.psum lowers to an f32 all-reduce on the CPU backend). On
+        the TPU target, activation/grad reductions of a bf16 model move
+        bf16 -- halve the f32 collective bytes when the model is bf16."""
+        if not model_is_bf16 or not self.collective_bytes_f32:
+            return self.total_collective_bytes
+        total = 0.0
+        for k, v in self.collective_bytes.items():
+            f32v = self.collective_bytes_f32.get(k, 0.0)
+            total += (v - f32v) + 0.5 * f32v
+        return float(total)
+
+
+def analyze_hlo(hlo: str) -> HloTotals:
+    comps, entry = _parse(hlo)
+    for c in comps.values():
+        _analyze(c, comps)
+    if entry is None:
+        f = sum(c.dot_flops for c in comps.values())
+        coll = {k: sum(c.coll_bytes[k] for c in comps.values())
+                for k in _COLLECTIVES}
+        coll32 = {k: sum(c.coll_bytes_f32[k] for c in comps.values())
+                  for k in _COLLECTIVES}
+        return HloTotals(f, coll, coll32)
+
+    memo = {}
+    while_bodies = {b for c in comps.values() for b, _ in c.whiles}
+
+    def visit(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            z = {k: 0.0 for k in _COLLECTIVES}
+            return 0.0, z, dict(z)
+        c = comps[name]
+        flops = c.dot_flops
+        coll = dict(c.coll_bytes)
+        coll32 = dict(c.coll_bytes_f32)
+        for body, tc in c.whiles:
+            bf, bc, bc32 = visit(body, stack + (name,))
+            flops += tc * bf
+            for k in _COLLECTIVES:
+                coll[k] += tc * bc[k]
+                coll32[k] += tc * bc32[k]
+        for callee in set(c.calls):
+            if callee == name or callee in while_bodies:
+                continue
+            cf, cc, cc32 = visit(callee, stack + (name,))
+            flops += cf
+            for k in _COLLECTIVES:
+                coll[k] += cc[k]
+                coll32[k] += cc32[k]
+        memo[name] = (flops, coll, coll32)
+        return memo[name]
+
+    f, coll, coll32 = visit(entry)
+    return HloTotals(f, coll, coll32)

@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.jsonl.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}us"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def fmt_b(x) -> str:
+    if x is None:
+        return "-"
+    x = float(x)
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(path: str) -> List[Dict]:
+    return [json.loads(l) for l in open(path)]
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | compile | per-chip args | per-chip temp |",
+           "|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP (documented) | - | - |")
+            continue
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"**FAIL** | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f}s | "
+            f"{fmt_b(r.get('argument_size_in_bytes'))} | "
+            f"{fmt_b(r.get('temp_size_in_bytes'))} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "6·N·D / HLO | note |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("skipped") or not r.get("ok") or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        coll = rf["collective_breakdown"]
+        dom_coll = max(coll, key=coll.get) if any(coll.values()) else "-"
+        note = (f"{dom_coll} {fmt_b(max(coll.values()))}/chip"
+                if any(coll.values()) else "no collectives")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['bottleneck']}** | {rf['useful_ratio']:.2f} | {note} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    recs = load(path)
+    print("### Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single pod, 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n### Roofline (multi-pod, 2x16x16)\n")
+    print(roofline_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Roofline-term extraction from compiled dry-run artifacts (TPU v5e target).
+
+    compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes / (chips * HBM_BW)
+    collective term = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the partitioned HLO text and sum
+the (per-partition) buffer sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, weighting all-reduce 2x
+(reduce + broadcast phases in a ring). `collective_bytes` is the total over
+all chips (per-chip bytes x chips), so dividing by chips*LINK_BW yields the
+per-chip ICI serialization time on one link -- a deliberately conservative
+single-link model (v5e has 4-6 usable links; we report the 1-link bound and
+note the optimistic bound in EXPERIMENTS.md).
+
+Also computes MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# bytes multiplier per collective kind (ring-algorithm link traffic)
+_WEIGHT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_per_chip(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind per-chip link bytes from partitioned HLO text.
+
+    `-done` ops are skipped (their `-start` counterpart carries the shape)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        lhs_types, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        out[kind] += int(_shape_bytes(lhs_types) * _WEIGHT[kind])
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # total across chips
+    hlo_bytes: float                 # total across chips
+    collective_bytes: float          # total across chips
+    collective_breakdown: Dict[str, int]
+    model_flops: float
+    bytes_per_chip_peak: Optional[float] = None     # from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def step_time_bound_s(self) -> float:
+        """Lower bound on step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "collective_breakdown": self.collective_breakdown,
+            "bytes_per_chip_peak": self.bytes_per_chip_peak,
+        }
+
+
+def count_params(params_like) -> Tuple[int, int]:
+    """(total, embedding) parameter counts from a shape pytree."""
+    import jax
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_like)
+    total = emb = 0
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("embed", "lm_head", "pos_embed"):
+            emb += n
+    return total, emb
+
+
+def params_bytes(params_like) -> int:
+    import jax
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params_like):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def sharded_resident_bytes(params_like, specs, mesh_model: int) -> float:
+    """Per-chip parameter bytes given the actual PartitionSpecs: leaves whose
+    spec mentions the model axis are divided by its size; replicated leaves
+    count in full (e.g. mamba2's fused w_in, whisper's 12 attention heads)."""
+    import jax
+    total = 0.0
+    leaves = jax.tree_util.tree_leaves(params_like)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: hasattr(x, "index") or x is None or
+        type(x).__name__ == "PartitionSpec")
+    for leaf, spec in zip(leaves, spec_leaves):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        b = n * leaf.dtype.itemsize
+        mentions_model = spec is not None and any(
+            a == "model" or (isinstance(a, (tuple, list)) and "model" in a)
+            for a in tuple(spec))
+        total += b / mesh_model if mentions_model else b
+    return total
+
+
+def analytic_hbm_bytes_per_chip(cfg, shape, params_like, *,
+                                kind: str, mesh_data: int, mesh_model: int,
+                                cache_bytes_total: int = 0,
+                                resident_override: float = None) -> float:
+    """Analytic per-chip HBM traffic estimate for one step (documented model;
+    the CPU backend's cost_analysis bytes under-count scanned layers and do
+    not reflect TPU fusion, so the memory roofline term uses this).
+
+    train : params resident x (3 reads + 1 write) + Adam state (f32 m,v
+            read+write = 16B/param) + grad (f32 rw = 8B/param), activations
+            ~ tokens_local * L * (4*D*wb replicated + 4*F_active*wb / model
+            shards), logits tokens_local * V/model * 8B (f32 rw).
+    prefill: params x 1 read + half the train activation traffic + cache wr.
+    decode : params x 1 read + cache read+write + logits row.
+    """
+    import numpy as _np
+    wb = 2 if cfg.dtype == "bfloat16" else 4
+    p_total = sum(int(_np.prod(l.shape))
+                  for l in __import__("jax").tree_util.tree_leaves(params_like))
+    p_resident = (resident_override if resident_override is not None
+                  else params_bytes(params_like) / mesh_model)
+    tokens_local = shape.global_batch * (1 if kind == "decode"
+                                         else shape.seq_len) / mesh_data
+    L = cfg.num_layers
+    D = cfg.d_model
+    if cfg.num_experts:
+        f_active = cfg.d_ff * cfg.num_experts_per_tok
+    elif cfg.arch_type == "ssm":
+        f_active = 2 * cfg.d_inner
+    else:
+        f_active = cfg.d_ff
+    act_per_tok_layer = 4 * D * wb + 4 * f_active * wb / mesh_model
+    logits_row = (cfg.vocab_size / mesh_model) * 8
+    cache_per_chip = cache_bytes_total / (mesh_data * mesh_model)
+
+    if kind == "train":
+        param_traffic = p_resident * 4 + p_total / mesh_model * (16 + 8)
+        act = tokens_local * L * act_per_tok_layer * 2        # fwd+bwd+remat
+        return param_traffic + act + tokens_local * logits_row
+    if kind == "prefill":
+        return (p_resident + tokens_local * L * act_per_tok_layer
+                + tokens_local * logits_row + cache_per_chip)
+    # decode
+    return (p_resident + 2 * cache_per_chip
+            + tokens_local * (logits_row + L * act_per_tok_layer))
+
+
+def model_flops(cfg, params_like, tokens: int, decode: bool = False,
+                forward_only: bool = False) -> float:
+    """6*N*D (train: fwd+bwd) or 2*N*D (prefill/decode: forward only),
+    with N = active non-embedding params (MoE: only top-k experts)."""
+    total, emb = count_params(params_like)
+    n = total - emb
+    if cfg.num_experts:
+        import jax
+        flat, _ = jax.tree_util.tree_flatten_with_path(params_like)
+        expert_params = 0
+        for path, leaf in flat:
+            if any(str(getattr(p, "key", "")) == "moe" for p in path) and \
+                    str(getattr(path[-1], "key", "")) in ("w_gate", "w_up",
+                                                          "w_down"):
+                m = 1
+                for d in leaf.shape:
+                    m *= d
+                expert_params += m
+        inactive = expert_params * (1 - cfg.num_experts_per_tok
+                                    / cfg.num_experts)
+        n -= inactive
+    factor = 2.0 if (decode or forward_only) else 6.0
+    return factor * n * tokens

@@ -1,0 +1,209 @@
+"""Sharding rules: parameter / optimizer-state / batch / cache PartitionSpecs.
+
+Strategy (paper-faithful baseline):
+  * batch  -> ("pod", "data") joint data-parallel axes,
+  * params -> tensor-parallel over "model": attention heads, MLP hidden dim,
+    MoE experts (expert parallelism), vocab for embed/lm_head, SSM inner dim,
+  * a dimension is sharded only when divisible by the axis size -- otherwise
+    replicated (e.g. whisper's 12 heads or glm4's 2 kv heads on a 16-way
+    model axis).
+
+Rules are name-based over tree paths, so optimizer state (mu/nu mirror the
+param tree) inherits the same specs automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import InputShape, ModelConfig
+from .mesh import axis_size, data_axes, model_axis
+
+# (leaf-name, axis-from-END to shard on the model axis)
+_MODEL_DIM_RULES: Tuple[Tuple[str, int], ...] = (
+    ("wq", 2),        # (..., D, H, Dh)    -> heads
+    ("wk", 2),
+    ("wv", 2),
+    ("wo", 3),        # (..., H, Dh, D)    -> heads
+    ("w_gate", 1),    # mlp (..., D, F)    -> hidden   (moe handled below)
+    ("w_up", 1),
+    ("w_down", 2),    # mlp (..., F, D)    -> hidden
+    ("embed", 2),     # (V, D)             -> vocab
+    ("lm_head", 1),   # (..., D, V)        -> vocab
+    ("w_out", 2),     # mamba (..., Din, D)-> inner
+    ("w_in", 1),      # mamba (..., D, Z)  -> fused proj cols
+)
+_MOE_RULES: Tuple[Tuple[str, int], ...] = (
+    ("w_gate", 3),    # (..., E, D, F) -> experts
+    ("w_up", 3),
+    ("w_down", 3),
+)
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _in_moe(path) -> bool:
+    return any(str(getattr(p, "key", "")) == "moe" for p in path)
+
+
+def param_specs(params_like: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for params (or any tree mirroring its names)."""
+    maxis = model_axis(mesh)
+    msize = axis_size(mesh, "model")
+
+    def spec_for(path, leaf) -> P:
+        if maxis is None:
+            return P()
+        name = _leaf_name(path)
+        rules = _MOE_RULES if _in_moe(path) else ()
+        for rname, from_end in rules + _MODEL_DIM_RULES:
+            if name == rname:
+                ndim = len(leaf.shape)
+                if from_end > ndim:
+                    continue
+                axis = ndim - from_end
+                if leaf.shape[axis] % msize == 0 and leaf.shape[axis] >= msize:
+                    out = [None] * ndim
+                    out[axis] = maxis
+                    return P(*out)
+                return P()
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def param_specs_fsdp(params_like: Any, mesh: Mesh) -> Any:
+    """Fully-sharded data parallel (ZeRO-3) parameter specs: every leaf is
+    sharded over the FLATTENED mesh (("pod",)"data","model") along its
+    largest evenly-divisible non-group dimension; XLA inserts the per-layer
+    all-gathers (weights move, activations stay local). The optimizer state
+    mirrors the param tree, so it is ZeRO-sharded by the same rule.
+
+    §Perf run 1: on train_4k this replaces ~732 GB/chip of tensor-parallel
+    activation all-reduces with ~3x params of weight gathers/scatters."""
+    axes = tuple(mesh.axis_names)
+    full = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def spec_for(path, leaf) -> P:
+        shape = leaf.shape
+        if not shape:
+            return P()
+        # leading group/stack dims of scanned layers stay unsharded
+        start = 1 if len(shape) >= 2 and _is_grouped(path) else 0
+        dims = sorted(range(start, len(shape)),
+                      key=lambda i: -shape[i])
+        for i in dims:
+            if shape[i] % full == 0 and shape[i] >= full:
+                out = [None] * len(shape)
+                out[i] = axes
+                return P(*out)
+        # fall back: shard over the model axis only
+        msize = axis_size(mesh, "model")
+        for i in dims:
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                out = [None] * len(shape)
+                out[i] = "model"
+                return P(*out)
+        return P()
+
+    def _is_grouped(path) -> bool:
+        return any(str(getattr(p, "key", "")) == "groups" for p in path)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def batch_specs_fsdp(batch_like: Dict[str, Any], mesh: Mesh,
+                     ) -> Dict[str, Any]:
+    """Batch sharded over the FULL flattened mesh (pure data parallelism)."""
+    axes = tuple(mesh.axis_names)
+    full = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def spec_for(key: str, leaf) -> P:
+        shape = leaf.shape
+        bdim = 1 if (key == "positions" and len(shape) == 3
+                     and shape[0] == 3) else 0
+        if shape[bdim] % full == 0 and shape[bdim] >= full:
+            out: list = [None] * len(shape)
+            out[bdim] = axes
+            return P(*out)
+        return P(*([None] * len(shape)))
+
+    return {k: spec_for(k, v) for k, v in batch_like.items()}
+
+
+def batch_specs(batch_like: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Batch dims shard over (pod, data) when divisible."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([axis_size(mesh, a) for a in daxes]))
+
+    def spec_for(key: str, leaf) -> P:
+        shape = leaf.shape
+        if key == "positions" and len(shape) == 3 and shape[0] == 3:
+            bdim = 1          # (3, B, S)
+        else:
+            bdim = 0
+        if shape[bdim] % dsize == 0 and shape[bdim] >= dsize:
+            out: list = [None] * len(shape)
+            out[bdim] = daxes if len(daxes) > 1 else daxes[0]
+            return P(*out)
+        return P(*([None] * len(shape)))
+
+    return {k: spec_for(k, v) for k, v in batch_like.items()}
+
+
+def cache_specs(cache_like: Any, mesh: Mesh) -> Any:
+    """Decode-cache specs: batch dim over (pod,data) if divisible, head/inner
+    dims over model if divisible.
+
+    Shapes: attention k/v (G, B, L, Hkv, Dh); mamba h (G, B, H, P, N),
+    conv (G, B, K-1, CH); pos scalar."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([axis_size(mesh, a) for a in daxes]))
+    maxis = model_axis(mesh)
+    msize = axis_size(mesh, "model")
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec_for(path, leaf) -> P:
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        out: list = [None] * nd
+        if name in ("k", "v") and nd == 5:
+            if leaf.shape[1] % dsize == 0:
+                out[1] = dspec
+            if maxis and leaf.shape[3] % msize == 0 and leaf.shape[3] >= msize:
+                out[3] = maxis
+        elif name == "h" and nd == 5:
+            if leaf.shape[1] % dsize == 0:
+                out[1] = dspec
+            if maxis and leaf.shape[2] % msize == 0:
+                out[2] = maxis
+        elif name == "conv" and nd == 4:
+            if leaf.shape[1] % dsize == 0:
+                out[1] = dspec
+            # channel dim stays REPLICATED: the fused [x|B|C] projection's
+            # split boundaries (Din | N | N) do not align with model-axis
+            # shards, so sharding it makes every decode-step slice a
+            # collective-permute (§Perf run 3: 38 permutes/step -> 0);
+            # the cache is ~1 MB -- replication is free.
+        return P(*out)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+"""Model substrate: configs, layers, and the unified model API."""
+from .config import (DECODE_32K, INPUT_SHAPES, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, InputShape, ModelConfig)
+from .model import (decode_step, forward, init_cache, init_params, loss_fn,
+                    param_shapes, prefill)
+
+__all__ = [
+    "DECODE_32K", "INPUT_SHAPES", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
+    "InputShape", "ModelConfig", "decode_step", "forward", "init_cache",
+    "init_params", "loss_fn", "param_shapes", "prefill",
+]

@@ -1,0 +1,195 @@
+"""Unified model configuration covering every assigned architecture family.
+
+One `ModelConfig` describes dense decoder-only transformers (with GQA, RoPE /
+M-RoPE, logit soft-capping, sliding-window / local-global attention),
+encoder-decoder (Whisper-style), SSMs (Mamba2 / SSD), hybrids (Zamba2:
+Mamba2 backbone + shared attention blocks), and MoE (OLMoE / DBRX).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense | encdec | ssm | hybrid | moe | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                      # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+
+    # ---- attention features -------------------------------------------------
+    rope_theta: float = 10000.0
+    rope_mode: str = "standard"         # standard | mrope | none | learned
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)   # qwen2-vl
+    attn_logit_softcap: float = 0.0     # gemma2: 50.0
+    final_logit_softcap: float = 0.0    # gemma2: 30.0
+    sliding_window: int = 0             # 0 = full attention
+    # "global" = all layers full; "local_global" = alternate SW/full (gemma2);
+    # "sliding" = all layers sliding-window (long-context variant).
+    layer_pattern: str = "global"
+    attn_impl: str = "chunked"          # ref | chunked | pallas
+    attn_chunk: int = 1024              # KV chunk for the online-softmax scan
+
+    # ---- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # expert-parallel axis name (set by the launcher for distributed runs;
+    # None = single-device local dispatch). See models/moe.py.
+    expert_axis: Optional[str] = None
+    # expert-parallel combine: "psum" (baseline: every shard computes its
+    # local experts for ALL tokens, partial outputs psum'd -- moves the full
+    # (B,S,D) activation over the expert axis per layer) or "alltoall"
+    # (GShard: only routed tokens move -- §Perf run 2).
+    moe_dispatch: str = "psum"
+
+    # ---- SSM (Mamba2 / SSD) -------------------------------------------------
+    ssm_state: int = 0                  # d_state N
+    ssm_head_dim: int = 64              # P
+    ssm_expand: int = 2                 # d_inner = expand * d_model
+    ssm_chunk: int = 256                # SSD chunk length
+    ssm_conv: int = 4                   # depthwise conv width
+
+    # ---- hybrid (Zamba2) ----------------------------------------------------
+    hybrid_attn_every: int = 6          # apply the shared attn block every k layers
+    # per-application LoRA on the weight-shared block (Zamba2 §2: the shared
+    # transformer block gets a low-rank adapter per invocation depth).
+    shared_lora_rank: int = 0
+
+    # ---- encoder-decoder (Whisper) ------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0                # e.g. 1500 audio frames
+    cross_attention: bool = False
+
+    # ---- VLM (Qwen2-VL) ------------------------------------------------------
+    vision_patches: int = 0             # patch embeddings provided by the stub
+
+    # ---- perf variants (beyond-paper, see EXPERIMENTS.md §Perf) --------------
+    # cast residual-stream cotangents to the model dtype at layer boundaries:
+    # without this, f32 upcasts inside attention/norm layers leak f32
+    # cotangents into the tensor-parallel all-reduces (2x link bytes).
+    bf16_cotangents: bool = False
+    # explicit shard_map tensor-parallel projections with bf16 psum: GSPMD
+    # otherwise all-reduces the f32 dot accumulator (2x link bytes). Set to
+    # the model-parallel mesh axis name by the launcher variant.
+    tp_axis: Optional[str] = None
+    # ---- misc ----------------------------------------------------------------
+    use_post_norms: bool = False        # gemma2: post-attn / post-ffw norms
+    scale_embeddings: bool = False      # gemma2: embed * sqrt(d_model)
+    norm_eps: float = 1e-6
+    act: str = "silu"                   # silu (SwiGLU) | gelu (plain MLP)
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    max_seq_len: int = 131072
+    source: str = ""                    # citation
+
+    # ------------------------------------------------------------- derived --
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic path exists: SSM/hybrid natively; attention archs via
+        sliding-window pattern."""
+        return (self.arch_type in ("ssm", "hybrid")
+                or self.sliding_window > 0
+                or self.layer_pattern in ("local_global", "sliding"))
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, num_layers: int = 2, d_model: int = 256,
+                d_ff: int = 512, vocab_size: int = 512,
+                num_experts: Optional[int] = None) -> "ModelConfig":
+        """Smoke-test variant of the same family (<=2 layers, d_model<=512,
+        <=4 experts), preserving every structural feature."""
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = min(self.num_kv_heads, heads) if heads else 0
+        if heads and self.num_kv_heads:
+            # keep the GQA grouping spirit: kv divides heads
+            kv = max(1, heads // max(1, self.q_per_kv))
+        n_exp = (min(self.num_experts, 4) if num_experts is None
+                 else num_experts) if self.num_experts else 0
+        # rescale mrope sections (t:h:w ~ 1:1.5:1.5) to the reduced head_dim//2
+        half = (d_model // heads) // 2 if heads else 0
+        if self.rope_mode == "mrope" and half:
+            b = (half - half // 4) // 2
+            sections = (half - 2 * b, b, b)
+        else:
+            sections = self.mrope_sections
+        return dataclasses.replace(
+            self,
+            num_layers=num_layers,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=(d_model // heads) if heads else 0,
+            d_ff=d_ff if self.d_ff else 0,
+            vocab_size=vocab_size,
+            num_experts=n_exp,
+            num_experts_per_tok=min(self.num_experts_per_tok, max(n_exp // 2, 1))
+            if n_exp else 0,
+            mrope_sections=sections,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 64) if self.encoder_seq else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=32 if self.ssm_state else self.ssm_chunk,
+            hybrid_attn_every=2 if self.arch_type == "hybrid" else self.hybrid_attn_every,
+            shared_lora_rank=min(self.shared_lora_rank, 8),
+            vision_patches=min(self.vision_patches, 16) if self.vision_patches else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            attn_chunk=64,
+            max_seq_len=4096,
+            dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned global input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)

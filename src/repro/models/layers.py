@@ -1,0 +1,474 @@
+"""Neural-net layer library (pure JAX, pytree params).
+
+Covers every structural feature the assigned architectures need:
+  * RMSNorm (with optional Gemma-style post-norms at the block level),
+  * rotary embeddings: standard RoPE, Qwen2-VL M-RoPE (3-section), learned,
+  * grouped-query attention with causal / sliding-window masks, logit
+    soft-capping, three implementations (ref, chunked online-softmax for long
+    sequences, Pallas flash kernel), KV-cache decode, cross-attention,
+  * SwiGLU / GELU MLPs.
+
+Parameters are plain dicts of jnp arrays so they stack cleanly for
+scan-over-layers and shard cleanly under pjit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------- norms
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+            ) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + weight.astype(jnp.float32))
+            ).astype(dt)
+
+
+def init_rmsnorm(d: int, dtype) -> jnp.ndarray:
+    # stored as (weight - 1), gemma-style "(1 + w)" with zero init == identity
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 ) -> jnp.ndarray:
+    """positions (..., S) -> angles (..., S, head_dim//2)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def _mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) -- temporal / height / width position ids.
+    The head_dim//2 frequency slots are split into 3 contiguous sections;
+    section k takes its rotation angle from positions[k].
+    Returns (B, S, head_dim//2).
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # section id per frequency slot
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)              # (half,)
+    pos_per_slot = jnp.take(positions, sec_id, axis=0)          # (half, B, S)
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)            # (B, S, half)
+    return pos_per_slot.astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               mode: str = "standard",
+               sections: Tuple[int, int, int] = (16, 24, 24)) -> jnp.ndarray:
+    """x: (B, S, H, Dh). positions: (B, S) or (3, B, S) for mrope."""
+    if mode == "none":
+        return x
+    head_dim = x.shape[-1]
+    if mode == "mrope":
+        ang = _mrope_angles(positions, head_dim, theta, sections)   # (B,S,half)
+    else:
+        ang = _rope_angles(positions, head_dim, theta)              # (B,S,half)
+    cos = jnp.cos(ang)[..., None, :]     # (B, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def _softcap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window) -> jnp.ndarray:
+    """Additive mask bias (..., Sq, Sk) from query/key positions.
+    `window=None` disables sliding-window masking."""
+    ok = jnp.ones(q_pos.shape + k_pos.shape[-1:], jnp.bool_)
+    if causal:
+        ok &= q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window=None,
+                  logit_softcap: float = 0.0,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """Reference attention. q (B,Sq,Hq,Dh), k/v (B,Sk,Hkv,Dh) -> (B,Sq,Hq,Dh).
+
+    Handles GQA by reshaping q heads into (Hkv, G). `q_offset` shifts query
+    positions (decode: Sq=1 at cache position `q_offset`)."""
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(Dh)
+    scores = _softcap(scores, logit_softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window=None,
+                      logit_softcap: float = 0.0, chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention, scanned over KV chunks.
+
+    Peak memory is O(Sq * chunk) instead of O(Sq * Sk): this is the XLA
+    (non-Pallas) flash-style path used for 32k prefill. Same signature and
+    semantics as `attention_ref`.
+    """
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if Sk % chunk != 0:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kmask_tail = Sk          # real length
+        Sk_pad = Sk + pad
+    else:
+        kmask_tail = Sk
+        Sk_pad = Sk
+    n_chunks = Sk_pad // chunk
+    qg = (q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+          / math.sqrt(Dh))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, Dh)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dh)
+    kc = jnp.moveaxis(kc, 1, 0)          # (n, B, chunk, Hkv, Dh)
+    vc = jnp.moveaxis(vc, 1, 0)
+    q_pos = jnp.arange(Sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry                # (B,Hkv,G,Sq), same, (B,Sq,Hkv,G,Dh)
+        kb, vb, idx = xs
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb.astype(jnp.float32))
+        scores = _softcap(scores, logit_softcap)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        bias = jnp.where(k_pos < kmask_tail, bias, -jnp.inf)
+        scores = scores + bias
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(scores), p, 0.0)
+        scale = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * scale + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        acc_new = acc * jnp.moveaxis(scale, 3, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks)))
+    l = jnp.maximum(jnp.moveaxis(l, 3, 1), 1e-37)[..., None]
+    out = acc / l
+    return out.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def attention_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray, *, window=None,
+                     logit_softcap: float = 0.0) -> jnp.ndarray:
+    """Single-token decode: q (B,1,Hq,Dh) vs cache (B,S,Hkv,Dh).
+
+    `cache_len` (scalar int32) = number of valid cache entries; the query
+    position is cache_len - 1 (the new token was already written)."""
+    B, _, Hq, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    scores = _softcap(scores, logit_softcap)
+    k_pos = jnp.arange(S)
+    q_pos = cache_len - 1
+    ok = k_pos < cache_len
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    scores = jnp.where(ok, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+# -------------------------------------------------- explicit TP projections
+
+def _tp_specs(mesh, tp_axis: str, batch_dim_shardable: bool):
+    from jax.sharding import PartitionSpec as P
+    daxes = tuple(a for a in mesh.axis_names if a != tp_axis)
+    dspec = (daxes if len(daxes) > 1 else daxes[0]) if (
+        daxes and batch_dim_shardable) else None
+    return P, dspec
+
+
+def tp_head_proj(x: jnp.ndarray, w: jnp.ndarray, tp_axis: str) -> jnp.ndarray:
+    """x (B,S,D) data-sharded, w (D,H,Dh) head-sharded -> q/k/v (B,S,H,Dh)
+    head-sharded. No forward collective; the TRANSPOSE psums dx over the
+    head axis in the residual dtype (bf16), not the f32 dot accumulator."""
+    from jax.experimental.shard_map import shard_map
+
+    from .meshctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None or tp_axis not in mesh.axis_names:
+        return jnp.einsum("bsd,dhk->bshk", x, w)
+    if w.shape[1] % mesh.shape[tp_axis]:
+        return jnp.einsum("bsd,dhk->bshk", x, w)
+    P, dspec = _tp_specs(mesh, tp_axis,
+                         x.shape[0] % _dsize(mesh, tp_axis) == 0)
+
+    def f(xl, wl):
+        return jnp.einsum("bsd,dhk->bshk", xl, wl)
+
+    return shard_map(f, mesh=mesh,
+                     in_specs=(P(dspec, None, None), P(None, tp_axis, None)),
+                     out_specs=P(dspec, None, tp_axis, None))(x, w)
+
+
+def tp_out_proj(out: jnp.ndarray, w: jnp.ndarray, tp_axis: str) -> jnp.ndarray:
+    """out (B,S,H,Dh) head-sharded, w (H,Dh,D) head-sharded -> (B,S,D)
+    replicated over the TP axis via an EXPLICIT bf16 psum of the local
+    partial products (GSPMD would all-reduce the f32 accumulator: 2x bytes).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from .meshctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None or tp_axis not in mesh.axis_names:
+        return jnp.einsum("bshk,hkd->bsd", out, w)
+    if w.shape[0] % mesh.shape[tp_axis]:
+        return jnp.einsum("bshk,hkd->bsd", out, w)
+    P, dspec = _tp_specs(mesh, tp_axis,
+                         out.shape[0] % _dsize(mesh, tp_axis) == 0)
+
+    def f(ol, wl):
+        y = jnp.einsum("bshk,hkd->bsd", ol, wl)
+        return jax.lax.psum(y.astype(ol.dtype), tp_axis)
+
+    return shard_map(f, mesh=mesh,
+                     in_specs=(P(dspec, None, tp_axis, None),
+                               P(tp_axis, None, None)),
+                     out_specs=P(dspec, None, None))(out, w)
+
+
+def tp_mlp(x: jnp.ndarray, w_gate, w_up, w_down, act: str,
+           tp_axis: str) -> jnp.ndarray:
+    """Full TP MLP in one shard_map region: gate/up column-parallel,
+    down row-parallel, single explicit bf16 psum."""
+    from jax.experimental.shard_map import shard_map
+
+    from .meshctx import current_mesh
+    mesh = current_mesh()
+    ok = (mesh is not None and tp_axis in mesh.axis_names
+          and w_up.shape[-1] % mesh.shape[tp_axis] == 0)
+    if not ok:
+        p = {"w_up": w_up, "w_down": w_down}
+        if w_gate is not None:
+            p["w_gate"] = w_gate
+        return mlp_block(p, x, act)
+    P, dspec = _tp_specs(mesh, tp_axis,
+                         x.shape[0] % _dsize(mesh, tp_axis) == 0)
+
+    def f(xl, wg, wu, wd):
+        up = xl @ wu
+        h = jax.nn.silu(xl @ wg) * up if act == "silu" else jax.nn.gelu(up)
+        return jax.lax.psum((h @ wd).astype(xl.dtype), tp_axis)
+
+    wspec_col = P(None, tp_axis)
+    wspec_row = P(tp_axis, None)
+    if w_gate is None:
+        def f2(xl, wu, wd):
+            h = jax.nn.gelu(xl @ wu)
+            return jax.lax.psum((h @ wd).astype(xl.dtype), tp_axis)
+        return shard_map(f2, mesh=mesh,
+                         in_specs=(P(dspec, None, None), wspec_col,
+                                   wspec_row),
+                         out_specs=P(dspec, None, None))(x, w_up, w_down)
+    return shard_map(f, mesh=mesh,
+                     in_specs=(P(dspec, None, None), wspec_col, wspec_col,
+                               wspec_row),
+                     out_specs=P(dspec, None, None))(x, w_gate, w_up, w_down)
+
+
+def _dsize(mesh, tp_axis: str) -> int:
+    import numpy as _np
+    return int(_np.prod([mesh.shape[a] for a in mesh.axis_names
+                         if a != tp_axis])) or 1
+
+
+# ----------------------------------------------------------- attention block
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    Dh = cfg.resolved_head_dim
+    D = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(D)
+    return {
+        "wq": (jax.random.normal(k1, (D, cfg.num_heads, Dh)) * scale).astype(dtype),
+        "wk": (jax.random.normal(k2, (D, cfg.num_kv_heads, Dh)) * scale).astype(dtype),
+        "wv": (jax.random.normal(k3, (D, cfg.num_kv_heads, Dh)) * scale).astype(dtype),
+        "wo": (jax.random.normal(k4, (cfg.num_heads, Dh, D))
+               * (1.0 / math.sqrt(cfg.num_heads * Dh))).astype(dtype),
+    }
+
+
+def init_lora(key, cfg: ModelConfig, rank: int, dtype) -> Params:
+    """Low-rank adapters for the SHARED block's q/k/v projections (Zamba2:
+    each invocation depth of the weight-shared block gets its own adapter).
+    B matrices are zero-init so the adapter starts as identity."""
+    Dh, D = cfg.resolved_head_dim, cfg.d_model
+    ks = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(D)
+    out: Params = {}
+    for name, k_, heads in (("wq", ks[0], cfg.num_heads),
+                            ("wk", ks[1], cfg.num_kv_heads),
+                            ("wv", ks[2], cfg.num_kv_heads)):
+        out[f"{name}_a"] = (jax.random.normal(k_, (D, rank)) * scale
+                            ).astype(dtype)
+        out[f"{name}_b"] = jnp.zeros((rank, heads, Dh), dtype)
+    return out
+
+
+def _lora_delta(x: jnp.ndarray, lora: Params, name: str) -> jnp.ndarray:
+    return jnp.einsum("bsr,rhk->bshk", x @ lora[f"{name}_a"],
+                      lora[f"{name}_b"])
+
+
+def attention_block(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                    cfg: ModelConfig, *, window=None, causal: bool = True,
+                    kv_cache: Optional[Dict[str, jnp.ndarray]] = None,
+                    return_kv: bool = False,
+                    lora: Optional[Params] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full GQA self-attention block (projections + rope + attention).
+
+    kv_cache: {"k": (B,S,Hkv,Dh), "v": ..., "len": int32 scalar} -- decode mode
+    (x has Sq=1; the new kv is written at index `len`, then attended)."""
+    if cfg.tp_axis:
+        q = tp_head_proj(x, p["wq"], cfg.tp_axis)
+        k = tp_head_proj(x, p["wk"], cfg.tp_axis)
+        v = tp_head_proj(x, p["wv"], cfg.tp_axis)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if lora is not None:
+        q = q + _lora_delta(x, lora, "wq")
+        k = k + _lora_delta(x, lora, "wk")
+        v = v + _lora_delta(x, lora, "wv")
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_mode,
+                   cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_mode,
+                   cfg.mrope_sections)
+    new_cache = None
+    if kv_cache is not None:
+        idx = kv_cache["len"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, idx, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, idx, 1)
+        out = attention_decode(q, k_cache, v_cache, idx + 1,
+                               window=window,
+                               logit_softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + 1}
+    elif cfg.attn_impl == "ref" or x.shape[1] <= 512:
+        out = attention_ref(q, k, v, causal=causal, window=window,
+                            logit_softcap=cfg.attn_logit_softcap)
+    else:
+        out = attention_chunked(q, k, v, causal=causal, window=window,
+                                logit_softcap=cfg.attn_logit_softcap,
+                                chunk=min(cfg.attn_chunk, x.shape[1]))
+    if cfg.tp_axis:
+        y = tp_out_proj(out, p["wo"], cfg.tp_axis)
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv and new_cache is None:
+        new_cache = {"k": k, "v": v}
+    return y, new_cache
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> Params:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_block(p: Params, x: jnp.ndarray, enc: jnp.ndarray,
+                          cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder->encoder cross attention (no rope on k/v, no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    out = attention_ref(q, k, v, causal=False, window=None, logit_softcap=0.0)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ------------------------------------------------------------------- mlp
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    si, so = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * si).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * so).astype(dtype),
+    }
+    if act == "silu":       # SwiGLU
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * si).astype(dtype)
+    return p
+
+
+def mlp_block(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------ embeddings
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, scale: bool) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(table.shape[1]), x.dtype)
+    return x
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray,
+            final_softcap: float = 0.0) -> jnp.ndarray:
+    """Project to vocab logits; `table` is (V, D) (tied) or (D, V)."""
+    if table.shape[0] == x.shape[-1]:       # (D, V) head
+        logits = x @ table
+    else:                                    # tied embedding (V, D)
+        logits = x @ table.T
+    logits = logits.astype(jnp.float32)
+    if final_softcap and final_softcap > 0:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    return logits

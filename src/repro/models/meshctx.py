@@ -1,0 +1,27 @@
+"""Ambient mesh context for shard_map regions inside model code.
+
+The launcher wraps tracing/lowering in `with use_mesh(mesh): ...`; model
+layers that need explicit SPMD regions (expert-parallel MoE dispatch) read
+the mesh here. Single-device paths (tests, smoke runs) never set it.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh) -> Iterator[None]:
+    _CURRENT.append(mesh)
+    try:
+        yield
+    finally:
+        _CURRENT.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1] if _CURRENT else None

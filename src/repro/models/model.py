@@ -1,0 +1,90 @@
+"""Unified model API over every architecture family.
+
+  init_params(key, cfg)                       -> params pytree
+  forward(params, cfg, batch)                 -> (logits, aux)
+  loss_fn(params, cfg, batch)                 -> (scalar loss, metrics)
+  init_cache(cfg, batch_size, max_seq)        -> decode cache
+  decode_step(params, cfg, tokens, cache)     -> (logits, new cache)
+
+`batch` is a dict with (depending on arch):
+  tokens        (B, S) int32            -- always (decoder tokens for encdec)
+  labels        (B, S) int32            -- training only
+  positions     (B, S) / (3, B, S)      -- optional (mrope needs 3D)
+  vision_embeds (B, n_patches, D)       -- vlm stub frontend output
+  audio_frames  (B, S_enc, D)           -- encdec stub frontend output
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .transformer import (decoder_decode_step, decoder_forward,
+                          decoder_prefill, encoder_forward, init_decode_cache,
+                          init_decoder_params, init_encoder_params)
+
+Params = Dict[str, Any]
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_dec, k_enc = jax.random.split(key)
+    params = init_decoder_params(k_dec, cfg)
+    if cfg.arch_type == "encdec":
+        params["encoder"] = init_encoder_params(k_enc, cfg)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Shape/dtype skeleton without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc = None
+    if cfg.arch_type == "encdec":
+        enc = encoder_forward(params["encoder"], cfg, batch["audio_frames"])
+    return decoder_forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"),
+        enc=enc)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux). labels = tokens shifted by caller
+    or provided explicitly; -100 entries are masked."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int):
+    return init_decode_cache(cfg, batch_size, max_seq)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache) -> Tuple[jnp.ndarray, Any]:
+    """One-token decode (decoder-only archs; encdec decode is out of scope
+    per DESIGN.md -- whisper decode shapes are skipped)."""
+    return decoder_decode_step(params, cfg, tokens, cache)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            max_seq: int, positions: Optional[jnp.ndarray] = None,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Prompt forward that also builds the decode cache (serving path)."""
+    return decoder_prefill(params, cfg, tokens, max_seq,
+                           positions=positions, vision_embeds=vision_embeds)

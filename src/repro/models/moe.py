@@ -1,0 +1,254 @@
+"""Mixture-of-Experts layer (OLMoE 64e/top-8, DBRX 16e/top-4).
+
+Sort-based, capacity-bounded dispatch (Megablocks/GShard-style adapted to
+TPU/XLA):
+  1. router -> top-k experts per token,
+  2. stable-sort the (token, expert) assignments by expert,
+  3. each assignment takes a slot in a fixed (E, C, D) dispatch buffer
+     (C = capacity; overflow tokens are dropped -- standard token dropping),
+  4. batched expert SwiGLU over the (E, C, D) buffer -- this einsum shards
+     over the `model` mesh axis as expert parallelism (GSPMD inserts the
+     all-to-all), and is also the target of the Pallas `moe_gemm` kernel,
+  5. weighted scatter-add combine back to token order.
+
+Returns the layer output plus the Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    si, so = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    return {
+        "router": (jax.random.normal(k1, (D, E)) * si).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, D, F)) * si).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, D, F)) * si).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, F, D)) * so).astype(dtype),
+    }
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Static per-expert slot count, rounded up to a multiple of 8."""
+    c = math.ceil(n_tokens * cfg.num_experts_per_tok
+                  * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    When `cfg.expert_axis` is set, dispatch runs expert-parallel under
+    shard_map (see `moe_block_expert_parallel`); otherwise fully local."""
+    if cfg.expert_axis is not None:
+        return moe_block_expert_parallel(p, x, cfg)
+    return _moe_block_local(p, x, cfg, e0=0, e_local=cfg.num_experts)
+
+
+def _moe_block_local(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                     e0, e_local: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch + expert compute for experts [e0, e0 + e_local) only.
+
+    Tokens routed to other experts contribute zero here -- the expert-parallel
+    wrapper psums partial outputs over the expert axis. `e0` may be a traced
+    scalar (jax.lax.axis_index)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    N = B * S
+    C = expert_capacity(N, cfg)
+    xf = x.reshape(N, D)
+
+    # -- router (fp32 for stability)
+    logits = xf.astype(jnp.float32) @ p["router"]            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # -- flatten assignments and sort by expert
+    flat_e = gate_idx.reshape(-1)                            # (N*K,)
+    flat_w = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+
+    # position within each expert's segment (capacity is per-expert, global)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))    # (E,)
+    pos_in_grp = jnp.arange(N * K) - seg_start[sorted_e]
+    valid = pos_in_grp < C
+    # keep only this shard's experts [e0, e0+e_local); the rest go to the
+    # overflow sink row and contribute zero (psum'd away by the wrapper)
+    local = (sorted_e >= e0) & (sorted_e < e0 + e_local)
+    slot = jnp.where(valid & local,
+                     (sorted_e - e0) * C + pos_in_grp, e_local * C)
+
+    # -- dispatch: (e_local*C + 1, D) buffer, last row is the overflow sink
+    buf = jnp.zeros((e_local * C + 1, D), x.dtype).at[slot].set(xf[sorted_tok])
+    xe = buf[:e_local * C].reshape(e_local, C, D)
+
+    # -- batched expert SwiGLU (expert dim shards over the `model` axis)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (e_local, C, D)
+    ye = jnp.concatenate(
+        [ye.reshape(e_local * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+
+    # -- combine: weighted scatter-add back to token order
+    contrib = ye[slot] * sorted_w[:, None].astype(ye.dtype)
+    out = jnp.zeros((N, D), x.dtype).at[sorted_tok].add(
+        contrib.astype(x.dtype))
+
+    # -- Switch load-balance aux loss: E * sum_e f_e * P_e
+    f = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (N * K)
+    pmean = probs.mean(axis=0)
+    aux = cfg.num_experts * jnp.sum(f * pmean)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_local_alltoall(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                        ax: str, msize: int,
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style expert parallelism inside a shard_map region (§Perf
+    run 2): tokens are dispatched to expert shards with all_to_all, so only
+    the ROUTED tokens (K/E of the capacity buffer per peer) cross the links
+    instead of the full (B,S,D) activation psum.
+
+    The incoming x is TP-replicated over the expert axis, so each shard
+    first takes its contiguous 1/msize slice of the flattened tokens (free:
+    replicated -> sharded is a slice). Dispatch buffer (E, C, D): row e
+    holds this shard's token slice routed to expert e. all_to_all(tiled)
+    exchanges row blocks so shard j ends up with (msize, e_local, C, D) --
+    every peer's tokens for ITS experts. After the expert GEMMs the result
+    rides the inverse all_to_all home, is combined locally, and the token
+    slices are all-gathered back to the TP-replicated layout."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    e_local = E // msize
+    N_full = B * S
+    N = N_full // msize
+    C = expert_capacity(N, cfg)
+    shard = jax.lax.axis_index(ax)
+    xf = jax.lax.dynamic_slice_in_dim(
+        x.reshape(N_full, D), shard * N, N, axis=0)
+
+    logits = xf.astype(jnp.float32) @ p["router"]            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    flat_e = gate_idx.reshape(-1)
+    flat_w = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(N), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_grp = jnp.arange(N * K) - seg_start[sorted_e]
+    valid = pos_in_grp < C
+    slot = jnp.where(valid, sorted_e * C + pos_in_grp, E * C)
+
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xf[sorted_tok])
+    disp = buf[:E * C].reshape(E, C, D)
+
+    # ---- dispatch a2a: (E, C, D) -> (msize*e_local, C, D) grouped by peer
+    recv = jax.lax.all_to_all(disp, ax, split_axis=0, concat_axis=0,
+                              tiled=True)
+    # rows: (peer-major, local-expert) -> regroup per local expert
+    recv = recv.reshape(msize, e_local, C, D).transpose(1, 0, 2, 3)
+    recv = recv.reshape(e_local, msize * C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", recv, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # (e_local, mC, D)
+
+    # ---- return a2a: inverse regroup then exchange back
+    ye = ye.reshape(e_local, msize, C, D).transpose(1, 0, 2, 3)
+    ye = ye.reshape(E, C, D)
+    back = jax.lax.all_to_all(ye, ax, split_axis=0, concat_axis=0,
+                              tiled=True)
+    ye_flat = jnp.concatenate(
+        [back.reshape(E * C, D), jnp.zeros((1, D), back.dtype)], axis=0)
+    contrib = ye_flat[slot] * sorted_w[:, None].astype(back.dtype)
+    out = jnp.zeros((N, D), x.dtype).at[sorted_tok].add(
+        contrib.astype(x.dtype))
+    # back to the TP-replicated token layout
+    out_full = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+
+    f = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (N * K)
+    aux = E * jnp.sum(f * probs.mean(axis=0))
+    return out_full.reshape(B, S, D), aux
+
+
+def moe_block_expert_parallel(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel MoE via shard_map over `cfg.expert_axis`.
+
+    Expert weights shard over the expert axis; tokens are data-parallel
+    (replicated over the expert axis), so each expert shard dispatches ALL of
+    its local tokens to its local experts and partial outputs are psum'd --
+    the TPU-native realization of the GShard combine (the psum is the
+    dispatch/combine collective the roofline's collective term sees).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .meshctx import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None or cfg.expert_axis not in mesh.axis_names:
+        return _moe_block_local(p, x, cfg, e0=0, e_local=cfg.num_experts)
+
+    ax = cfg.expert_axis
+    msize = mesh.shape[ax]
+    E = cfg.num_experts
+    if E % msize:
+        return _moe_block_local(p, x, cfg, e0=0, e_local=E)
+    e_local = E // msize
+    daxes = tuple(a for a in mesh.axis_names if a != ax)
+    import numpy as _np
+    dsize = int(_np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    shard_batch = bool(daxes) and x.shape[0] % dsize == 0 and \
+        x.shape[0] >= dsize
+    bspec = (daxes if len(daxes) > 1 else daxes[0]) if shard_batch else None
+    xspec = P(bspec, None, None)
+    wspec = P(ax, None, None)
+
+    # a2a needs the flattened local token count to divide the expert axis
+    use_a2a = (cfg.moe_dispatch == "alltoall"
+               and (x.shape[0] * x.shape[1])
+               % (msize * (dsize if shard_batch else 1)) == 0)
+
+    def local_fn(router, wg, wu, wd, xl):
+        pl = {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}
+        if use_a2a:
+            out, aux = _moe_local_alltoall(pl, xl, cfg, ax, msize)
+        else:
+            e0 = jax.lax.axis_index(ax) * e_local
+            out, aux = _moe_block_local(pl, xl, cfg, e0=e0, e_local=e_local)
+            out = jax.lax.psum(out, ax)
+        aux = jax.lax.pmean(aux, ax)       # identical across ax; mark replicated
+        if shard_batch:
+            aux = jax.lax.pmean(aux, daxes)
+        return out, aux
+
+    return shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), wspec, wspec, wspec, xspec),
+        out_specs=(xspec, P()),
+        check_rep=not use_a2a,      # all_gather replication is not inferred
+    )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -1,0 +1,247 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+The selective-state-space recurrence per head (scalar A per head, SSD):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T      h: (P, N)
+    y_t = C_t . h_t + D_skip * x_t
+
+computed with the chunked SSD algorithm: within a chunk of length L the
+quadratic "attention-like" form is used; chunks are linked by a scan that
+carries the (H, P, N) state. This is the pure-jnp reference path; the Pallas
+`ssd_scan` kernel implements the same chunk body with VMEM tiling.
+
+Decode is the O(1) recurrence update with a conv-state + ssm-state cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Params:
+    D = cfg.d_model
+    Din = cfg.d_inner
+    H = cfg.ssm_num_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = Din + 2 * N          # conv over [x, B, C] channels (1 group)
+    ks = jax.random.split(key, 5)
+    si = 1.0 / math.sqrt(D)
+    return {
+        # in_proj -> [z (Din), xBC (Din + 2N), dt (H)]
+        "w_in": (jax.random.normal(ks[0], (D, 2 * Din + 2 * N + H)) * si
+                 ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim))
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((Din,), dtype),      # gated RMSNorm weight (w-1)
+        "w_out": (jax.random.normal(ks[2], (Din, D))
+                  * (1.0 / math.sqrt(Din))).astype(dtype),
+    }
+
+
+def _keep_features_replicated(zxbcdt: jnp.ndarray) -> jnp.ndarray:
+    """§Perf run 3.3: GSPMD propagation shards the fused [z|xBC|dt] feature
+    dim from the (sharded) w_out it eventually feeds, but the split
+    boundaries (Din | Din+2N | +H) don't align with model-axis shards, so
+    every slice becomes a collective-permute chain (43 GB/chip/step on
+    mamba2 train_4k). Pinning the feature dim replicated (batch/seq left
+    unconstrained) removes them; the fused dim isn't 16-divisible anyway."""
+    from jax.sharding import PartitionSpec as P
+
+    from .meshctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return zxbcdt
+    U = P.UNCONSTRAINED
+    spec = P(*([U] * (zxbcdt.ndim - 1) + [None]))
+    from jax.sharding import NamedSharding
+    try:
+        return jax.lax.with_sharding_constraint(
+            zxbcdt, NamedSharding(mesh, spec))
+    except Exception:       # mesh/context mismatch: leave GSPMD to decide
+        return zxbcdt
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z = zxbcdt[..., :Din]
+    xBC = zxbcdt[..., Din:2 * Din + 2 * N]
+    dt = zxbcdt[..., 2 * Din + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time. xBC (B,S,Ch), w (K,Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray,
+                   eps: float) -> jnp.ndarray:
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def ssd_chunked_ref(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                    h0: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (pure jnp oracle).
+
+    xh: (B,S,H,P) inputs per head; dt: (B,S,H) (post-softplus);
+    A: (H,) negative decay; Bm/Cm: (B,S,N) shared across heads (1 group).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = chunk
+    assert S % L == 0, (S, L)
+    nc = S // L
+    xc = xh.reshape(B, nc, L, H, P)
+    dtc = dt.reshape(B, nc, L, H)
+    Bc = Bm.reshape(B, nc, L, N)
+    Cc = Cm.reshape(B, nc, L, N)
+
+    a = dtc * A                                # (B,nc,L,H) log-decay <= 0
+    a_cum = jnp.cumsum(a, axis=2)              # inclusive within chunk
+    a_tot = a_cum[:, :, -1, :]                 # (B,nc,H)
+
+    # intra-chunk quadratic form:
+    # M[t,s] = exp(a_cum[t]-a_cum[s]) * (C_t.B_s) * dt_s  for s<=t
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)             # (B,nc,L,L)
+    rel = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))[None, None, :, :, None]
+    # mask rel BEFORE exp: the upper triangle holds large positive values
+    # whose exp overflows; where() after exp still leaks NaN into gradients
+    rel = jnp.where(mask, rel, -jnp.inf)
+    decay = jnp.where(mask, jnp.exp(rel), 0.0)
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]      # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xc.astype(jnp.float32))
+
+    # per-chunk state contribution: sum_s exp(a_tot - a_cum[s]) dt_s B_s x_s^T
+    w_state = jnp.exp(a_tot[:, :, None, :] - a_cum) * dtc   # (B,nc,L,H)
+    chunk_states = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                              w_state, Bc, xc.astype(jnp.float32))
+
+    # scan over chunks carrying h (B,H,P,N)
+    def step(h, inputs):
+        a_tot_c, state_c, Cc_c, a_cum_c = inputs
+        # inter-chunk output: y[t] = C_t . (exp(a_cum[t]) h_in)
+        y_inter = jnp.einsum("bln,blh,bhpn->blhp",
+                             Cc_c, jnp.exp(a_cum_c), h)
+        h_new = jnp.exp(a_tot_c)[:, :, None, None] * h + state_c
+        return h_new, y_inter
+
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+    xs = (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(chunk_states, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(a_cum, 1, 0))
+    h_final, y_inter = jax.lax.scan(step, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1).reshape(B, nc, L, H, P)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    Bm: jnp.ndarray, Cm: jnp.ndarray, h: jnp.ndarray,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence. xh (B,H,P), dt (B,H), Bm/Cm (B,N), h (B,H,P,N)."""
+    dA = jnp.exp(dt * A)                                     # (B,H)
+    h_new = (dA[:, :, None, None] * h
+             + jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, xh.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h_new)
+    return y.astype(xh.dtype), h_new
+
+
+def mamba2_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                 cache: Optional[Dict[str, jnp.ndarray]] = None,
+                 return_state: bool = False,
+                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full Mamba2 block. Train/prefill: cache=None. Decode: x is (B,1,D) and
+    cache = {"h": (B,H,P,N), "conv": (B, K-1, conv_dim)}.
+    `return_state=True` (prefill) returns the would-be decode cache."""
+    B, S, D = x.shape
+    Din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    A = -jnp.exp(p["A_log"])                                 # (H,) negative
+
+    zxbcdt = x @ p["w_in"]
+    if cache is not None:
+        # decode only (§Perf 3.3): kills the per-layer slice permutes; in
+        # training the same constraint replicates the SSD compute over the
+        # model axis (2.3x compute) -- measured regression, so train keeps
+        # GSPMD's propagated sharding.
+        zxbcdt = _keep_features_replicated(zxbcdt)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    new_cache = None
+    if cache is None:
+        xBC_raw = xBC
+        xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        xs = xBC[..., :Din].reshape(B, S, H, P)
+        Bm = xBC[..., Din:Din + N]
+        Cm = xBC[..., Din + N:]
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:                        # pad to a chunk multiple
+            pad = chunk - S % chunk
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, h_final = ssd_chunked_ref(xs, dt, A, Bm, Cm, chunk)
+        y = y[:, :S]
+        y = y + (p["D_skip"][None, None, :, None].astype(jnp.float32)
+                 * xs[:, :S].astype(jnp.float32)).astype(y.dtype)
+        if return_state:
+            # padded tail steps have dt=0 -> exp(0)=1 decay and zero input
+            # contribution, so h_final is exact even when S % chunk != 0.
+            K = cfg.ssm_conv
+            tail = xBC_raw[:, max(0, S - (K - 1)):, :]
+            if S < K - 1:
+                tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            new_cache = {"h": h_final, "conv": tail}
+    else:
+        # decode: roll the conv window, O(1) state update
+        K = cfg.ssm_conv
+        conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B,K,ch)
+        acc = sum(conv_in[:, i, :] * p["conv_w"][i] for i in range(K))
+        xBC1 = jax.nn.silu(acc + p["conv_b"])[:, None, :]        # (B,1,ch)
+        xs = xBC1[..., :Din].reshape(B, H, P)
+        Bm = xBC1[:, 0, Din:Din + N]
+        Cm = xBC1[:, 0, Din + N:]
+        y1, h_new = ssd_decode_step(xs, dt[:, 0], A, Bm, Cm, cache["h"])
+        y = (y1 + (p["D_skip"][None, :, None]
+                   * xs.astype(jnp.float32)).astype(y1.dtype)
+             ).reshape(B, 1, H, P)
+        new_cache = {"h": h_new, "conv": conv_in[:, 1:, :]}
+
+    y = y.reshape(B, -1, Din)
+    y = _gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    return y @ p["w_out"], new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    H, P, N = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

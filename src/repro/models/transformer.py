@@ -1,0 +1,555 @@
+"""Transformer / SSM / hybrid model assembly with scan-over-layers.
+
+Layers are organized into *groups* so depth-heterogeneous patterns still scan:
+  * "global"        -> group of 1 full-attention layer,
+  * "sliding"       -> group of 1 sliding-window layer (long-context variant),
+  * "local_global"  -> group of 2 layers [local SW, global] (Gemma 2),
+  * hybrid (Zamba2) -> group of `hybrid_attn_every` Mamba2 layers followed by
+                       one weight-SHARED attention+MLP block (single copy).
+
+Group parameters are stacked on a leading axis and `jax.lax.scan`ned, keeping
+HLO size O(1) in depth (80-layer models compile quickly). Decode caches are
+stacked the same way and threaded through the scan as xs/ys.
+
+Sliding-window decode caches are *rolling* buffers of length W: position t
+writes slot t % W; slot j currently holds absolute position
+t - ((t - j) mod W), from which validity and the mask are reconstructed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (_lora_delta, apply_rope, attention_block,
+                     attention_decode, cross_attention_block, embed,
+                     init_attention, init_cross_attention, init_embedding,
+                     init_lora, init_mlp, init_rmsnorm, mlp_block, rmsnorm,
+                     unembed)
+from .moe import init_moe, moe_block
+from .ssm import init_mamba2, init_ssm_cache, mamba2_block
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ------------------------------------------------------------- group layout
+
+def layer_groups(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    """(n_groups, member kinds). Kind in {"local", "global", "sliding",
+    "mamba", "shared_attn"}."""
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        if cfg.layer_pattern == "local_global":
+            assert cfg.num_layers % 2 == 0
+            return cfg.num_layers // 2, ("local", "global")
+        if cfg.layer_pattern == "sliding":
+            return cfg.num_layers, ("sliding",)
+        return cfg.num_layers, ("global",)
+    if cfg.arch_type == "ssm":
+        return cfg.num_layers, ("mamba",)
+    if cfg.arch_type == "hybrid":
+        k = cfg.hybrid_attn_every
+        assert cfg.num_layers % k == 0
+        return cfg.num_layers // k, tuple(["mamba"] * k + ["shared_attn"])
+    if cfg.arch_type == "encdec":
+        return cfg.num_layers, ("global",)
+    raise ValueError(cfg.arch_type)
+
+
+def member_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if kind == "local" or kind == "sliding":
+        return cfg.sliding_window or 4096
+    return None       # global / shared_attn: full attention
+
+
+# ------------------------------------------------------------------- init
+
+def _init_attn_layer(key, cfg: ModelConfig, dtype, moe: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+    }
+    if cfg.use_post_norms:
+        p["ln1_post"] = init_rmsnorm(cfg.d_model, dtype)
+        p["ln2_post"] = init_rmsnorm(cfg.d_model, dtype)
+    if moe:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if cfg.cross_attention:
+        p["ln_cross"] = init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = init_cross_attention(ks[2], cfg, dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype) -> Params:
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "mamba": init_mamba2(key, cfg, dtype),
+    }
+
+
+def _stack(trees: Sequence[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_decoder_params(key, cfg: ModelConfig) -> Params:
+    """Parameters for the decoder stack (all arch types)."""
+    dtype = jnp.dtype(cfg.dtype)
+    n_groups, kinds = layer_groups(cfg)
+    keys = jax.random.split(key, n_groups + 4)
+    is_moe = cfg.arch_type == "moe"
+
+    groups: List[Params] = []
+    shared_attn: Optional[Params] = None
+    for gi in range(n_groups):
+        gkeys = jax.random.split(keys[gi], len(kinds))
+        members: List[Params] = []
+        for mi, kind in enumerate(kinds):
+            if kind == "mamba":
+                members.append(_init_mamba_layer(gkeys[mi], cfg, dtype))
+            elif kind == "shared_attn":
+                if shared_attn is None:      # single shared copy (Zamba2)
+                    shared_attn = _init_attn_layer(gkeys[mi], cfg, dtype,
+                                                   moe=False)
+                continue
+            else:
+                members.append(_init_attn_layer(gkeys[mi], cfg, dtype,
+                                                moe=is_moe))
+        group: Params = {f"m{mi}": m for mi, m in enumerate(members)}
+        if "shared_attn" in kinds and cfg.shared_lora_rank > 0:
+            group["shared_lora"] = init_lora(
+                jax.random.fold_in(keys[gi], 999), cfg,
+                cfg.shared_lora_rank, dtype)
+        groups.append(group)
+
+    p: Params = {
+        "embed": init_embedding(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "groups": _stack(groups),
+    }
+    if shared_attn is not None:
+        p["shared_attn"] = shared_attn
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab_size)) *
+            (1.0 / math.sqrt(cfg.d_model))).astype(dtype)
+    if cfg.rope_mode == "learned":
+        p["pos_embed"] = (jax.random.normal(
+            keys[-3], (cfg.max_seq_len, cfg.d_model)) * 0.02).astype(dtype)
+    return p
+
+
+# ----------------------------------------------------------------- forward
+
+@jax.custom_vjp
+def _ct_cast(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity forward; casts the cotangent to the primal dtype on the way
+    back. Placed at residual-stream layer boundaries so f32 upcasts inside a
+    layer (norm stats, attention accumulators, rope) cannot leak f32
+    cotangents into the tensor-parallel all-reduces (§Perf run 1)."""
+    return x
+
+
+def _ct_cast_fwd(x):
+    # residual must be a JAX type: carry a 0-sized array of the primal dtype
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _ct_cast_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+_ct_cast.defvjp(_ct_cast_fwd, _ct_cast_bwd)
+
+
+def _attn_member(p: Params, x: jnp.ndarray, positions, cfg: ModelConfig,
+                 kind: str, enc: Optional[jnp.ndarray] = None,
+                 lora: Optional[Params] = None,
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One attention transformer layer (train/prefill). Returns (x, aux).
+    `lora`: per-group low-rank adapter for the weight-SHARED block (Zamba2)."""
+    window = member_window(cfg, kind)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, _ = attention_block(p["attn"], h, positions, cfg, window=window,
+                           lora=lora)
+    if cfg.use_post_norms:
+        a = rmsnorm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    if cfg.cross_attention and enc is not None:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + cross_attention_block(p["cross"], h, enc, cfg)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        m, aux = moe_block(p["moe"], h, cfg)
+    elif cfg.tp_axis:
+        from .layers import tp_mlp
+        m = tp_mlp(h, p["mlp"].get("w_gate"), p["mlp"]["w_up"],
+                   p["mlp"]["w_down"], cfg.act, cfg.tp_axis)
+    else:
+        m = mlp_block(p["mlp"], h, cfg.act)
+    if cfg.use_post_norms:
+        m = rmsnorm(m, p["ln2_post"], cfg.norm_eps)
+    return x + m, aux
+
+
+def _mamba_member(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    y, _ = mamba2_block(p["mamba"], h, cfg)
+    return x + y
+
+
+def decoder_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                    positions: Optional[jnp.ndarray] = None,
+                    vision_embeds: Optional[jnp.ndarray] = None,
+                    enc: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (train / prefill). Returns (logits, aux_loss).
+
+    tokens: (B, S) int32. positions: (B, S) or (3, B, S) for mrope.
+    vision_embeds: (B, n_patches, D) stub frontend output spliced at seq head.
+    enc: (B, S_enc, D) encoder output for cross-attention decoders.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(params["embed"], tokens, cfg.scale_embeddings)
+    if vision_embeds is not None:
+        n_patch = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, n_patch:]],
+                            axis=1)
+    if cfg.rope_mode == "learned":
+        pos_tab = params["pos_embed"]
+        idx = positions if positions.ndim == 2 else positions[0]
+        x = x + jnp.take(pos_tab, idx, axis=0)
+
+    n_groups, kinds = layer_groups(cfg)
+    shared = params.get("shared_attn")
+
+    def body(x, gp):
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.bf16_cotangents:
+            x = _ct_cast(x)
+        mi = 0
+        for kind in kinds:
+            if kind == "mamba":
+                x = _mamba_member(gp[f"m{mi}"], x, cfg)
+                mi += 1
+            elif kind == "shared_attn":
+                x, a = _attn_member(shared, x, positions, cfg, "global", enc,
+                                    lora=gp.get("shared_lora"))
+                aux = aux + a
+            else:
+                x, a = _attn_member(gp[f"m{mi}"], x, positions, cfg, kind, enc)
+                aux = aux + a
+                mi += 1
+        return x, aux
+
+    x, auxs = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head, cfg.final_logit_softcap)
+    return logits, auxs.sum()
+
+
+# ----------------------------------------------------------------- prefill
+
+def _kv_to_cache_slots(k: jnp.ndarray, v: jnp.ndarray, L: int,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Arrange full-prompt (B,S,Hkv,Dh) k/v into an L-slot rolling cache such
+    that slot j holds the largest position p < S with p % L == j (matching
+    the decode-side slot convention)."""
+    S = k.shape[1]
+    if L >= S:
+        pad = L - S
+        return (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    j = jnp.arange(L)
+    p = (S - 1) - ((S - 1 - j) % L)
+    return jnp.take(k, p, axis=1), jnp.take(v, p, axis=1)
+
+
+def decoder_prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                    max_seq: int,
+                    positions: Optional[jnp.ndarray] = None,
+                    vision_embeds: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Cache]:
+    """Full-prompt forward that ALSO builds the decode cache.
+
+    Returns (logits (B,S,V), cache positioned at pos=S)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(params["embed"], tokens, cfg.scale_embeddings)
+    if vision_embeds is not None:
+        n_patch = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, n_patch:]],
+                            axis=1)
+    if cfg.rope_mode == "learned":
+        idx = positions if positions.ndim == 2 else positions[0]
+        x = x + jnp.take(params["pos_embed"], idx, axis=0)
+
+    n_groups, kinds = layer_groups(cfg)
+    shared = params.get("shared_attn")
+    has_shared = "shared_attn" in kinds
+
+    def attn_with_kv(p, x, kind, lora=None):
+        window = member_window(cfg, kind)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, kv = attention_block(p["attn"], h, positions, cfg, window=window,
+                                return_kv=True, lora=lora)
+        if cfg.use_post_norms:
+            a = rmsnorm(a, p["ln1_post"], cfg.norm_eps)
+        x = x + a
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            m, _ = moe_block(p["moe"], h, cfg)
+        else:
+            m = mlp_block(p["mlp"], h, cfg.act)
+        if cfg.use_post_norms:
+            m = rmsnorm(m, p["ln2_post"], cfg.norm_eps)
+        L = max_seq if window is None else min(window, max_seq)
+        kc, vc = _kv_to_cache_slots(kv["k"], kv["v"], L)
+        return x + m, {"k": kc, "v": vc}
+
+    def mamba_with_state(p, x):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, st = mamba2_block(p["mamba"], h, cfg, return_state=True)
+        return x + y, st
+
+    def body(x, gp):
+        new_members = {}
+        shared_kv = None
+        mi = 0
+        for kind in kinds:
+            if kind == "mamba":
+                x, st = mamba_with_state(gp[f"m{mi}"], x)
+                new_members[f"m{mi}"] = st
+                mi += 1
+            elif kind == "shared_attn":
+                x, shared_kv = attn_with_kv(shared, x, "global",
+                                            lora=gp.get("shared_lora"))
+            else:
+                x, kv = attn_with_kv(gp[f"m{mi}"], x, kind)
+                new_members[f"m{mi}"] = kv
+                mi += 1
+        return x, (new_members, shared_kv)
+
+    x, (members, shared_kv) = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head, cfg.final_logit_softcap)
+    cache: Cache = {"pos": jnp.asarray(S, jnp.int32), "members": members}
+    if has_shared:
+        cache["shared"] = shared_kv
+    return logits, cache
+
+
+# ---------------------------------------------------------------- kv cache
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
+    """Stacked per-group caches + scalar position counter."""
+    dtype = jnp.dtype(cfg.dtype)
+    n_groups, kinds = layer_groups(cfg)
+    Dh, Hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32), "members": {}}
+
+    members: Dict[str, Any] = {}
+    mi = 0
+    for kind in kinds:
+        if kind == "shared_attn":
+            continue
+        if kind == "mamba":
+            sc = init_ssm_cache(cfg, batch, dtype)
+            members[f"m{mi}"] = {
+                "h": jnp.zeros((n_groups,) + sc["h"].shape, jnp.float32),
+                "conv": jnp.zeros((n_groups,) + sc["conv"].shape, dtype),
+            }
+        else:
+            window = member_window(cfg, kind)
+            L = max_seq if window is None else min(window, max_seq)
+            members[f"m{mi}"] = {
+                "k": jnp.zeros((n_groups, batch, L, Hkv, Dh), dtype),
+                "v": jnp.zeros((n_groups, batch, L, Hkv, Dh), dtype),
+            }
+        mi += 1
+    cache["members"] = members
+    if "shared_attn" in kinds:
+        L = max_seq
+        cache["shared"] = {
+            "k": jnp.zeros((n_groups, batch, L, Hkv, Dh), dtype),
+            "v": jnp.zeros((n_groups, batch, L, Hkv, Dh), dtype),
+        }
+    return cache
+
+
+def _decode_attn_member(p: Params, x: jnp.ndarray, pos: jnp.ndarray,
+                        kv: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                        kind: str, lora: Optional[Params] = None,
+                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token attention layer with (rolling) cache. x: (B, 1, D)."""
+    B = x.shape[0]
+    window = member_window(cfg, kind)
+    L = kv["k"].shape[1]
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+    if lora is not None:
+        q = q + _lora_delta(h, lora, "wq")
+        k = k + _lora_delta(h, lora, "wk")
+        v = v + _lora_delta(h, lora, "wv")
+    pos_b = jnp.broadcast_to(pos[None, None], (B, 1))
+    if cfg.rope_mode == "mrope":
+        pos_b = jnp.broadcast_to(pos[None, None, None], (3, B, 1))
+    if cfg.rope_mode != "learned":
+        q = apply_rope(q, pos_b, cfg.rope_theta, cfg.rope_mode,
+                       cfg.mrope_sections)
+        k = apply_rope(k, pos_b, cfg.rope_theta, cfg.rope_mode,
+                       cfg.mrope_sections)
+    slot = pos % L
+    k_cache = jax.lax.dynamic_update_slice_in_dim(kv["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(kv["v"], v, slot, 1)
+    # absolute position held by each slot j after writing position `pos`:
+    #   p_j = pos - ((pos - j) mod L)
+    j = jnp.arange(L)
+    slot_pos = pos - ((pos - j) % L)
+    valid = slot_pos >= jnp.maximum(0, pos + 1 - (window or L))
+    valid &= slot_pos <= pos
+    qh = q.reshape(B, q.shape[2], q.shape[3])                 # (B,Hq,Dh)
+    Hq, Dh = qh.shape[1], qh.shape[2]
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = qh.reshape(B, Hkv, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    scores = jnp.einsum("bhgd,blhd->bhgl", qg, k_cache.astype(jnp.float32))
+    if cfg.attn_logit_softcap:
+        scores = cfg.attn_logit_softcap * jnp.tanh(
+            scores / cfg.attn_logit_softcap)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", probs, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, Hq, Dh).astype(x.dtype)
+    a = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+    if cfg.use_post_norms:
+        a = rmsnorm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        m, _ = moe_block(p["moe"], h, cfg)
+    else:
+        m = mlp_block(p["mlp"], h, cfg.act)
+    if cfg.use_post_norms:
+        m = rmsnorm(m, p["ln2_post"], cfg.norm_eps)
+    return x + m, {"k": k_cache, "v": v_cache}
+
+
+def _decode_mamba_member(p: Params, x: jnp.ndarray, mc: Dict[str, jnp.ndarray],
+                         cfg: ModelConfig,
+                         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    y, new_mc = mamba2_block(p["mamba"], h, cfg, cache=mc)
+    return x + y, new_mc
+
+
+def decoder_decode_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                        cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+    """One decode step. tokens: (B, 1). Returns (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens, cfg.scale_embeddings)
+    if cfg.rope_mode == "learned":
+        x = x + jnp.take(params["pos_embed"], pos[None, None], axis=0)
+
+    n_groups, kinds = layer_groups(cfg)
+    shared = params.get("shared_attn")
+    member_kinds = [k for k in kinds if k != "shared_attn"]
+    has_shared = "shared_attn" in kinds
+
+    def body(x, xs):
+        gp, mcache, scache = xs
+        new_members = {}
+        mi = 0
+        for kind in kinds:
+            if kind == "mamba":
+                x, nm = _decode_mamba_member(gp[f"m{mi}"], x,
+                                             mcache[f"m{mi}"], cfg)
+                new_members[f"m{mi}"] = nm
+                mi += 1
+            elif kind == "shared_attn":
+                x, ns = _decode_attn_member(shared, x, pos, scache, cfg,
+                                            "global",
+                                            lora=gp.get("shared_lora"))
+                new_members["__shared__"] = ns
+            else:
+                x, nm = _decode_attn_member(gp[f"m{mi}"], x, pos,
+                                            mcache[f"m{mi}"], cfg, kind)
+                new_members[f"m{mi}"] = nm
+                mi += 1
+        shared_out = new_members.pop("__shared__", None)
+        return x, (new_members, shared_out)
+
+    if has_shared:
+        x, (new_members, new_shared) = jax.lax.scan(
+            body, x, (params["groups"], cache["members"], cache["shared"]))
+    else:
+        def body2(x, xs):
+            gp, mcache = xs
+            x, (nm, _) = body(x, (gp, mcache, None))
+            return x, nm
+        x, new_members = jax.lax.scan(
+            body2, x, (params["groups"], cache["members"]))
+        new_shared = None
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head, cfg.final_logit_softcap)
+    new_cache: Cache = {"pos": pos + 1, "members": new_members}
+    if new_shared is not None:
+        new_cache["shared"] = new_shared
+    return logits, new_cache
+
+
+# ------------------------------------------------------------ encoder (enc-dec)
+
+def init_encoder_params(key, cfg: ModelConfig) -> Params:
+    """Bidirectional encoder over stub frame embeddings (Whisper-style)."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.encoder_layers + 1)
+    enc_cfg = dataclasses.replace(cfg, cross_attention=False)
+    layers = [_init_attn_layer(keys[i], enc_cfg, dtype, moe=False)
+              for i in range(cfg.encoder_layers)]
+    return {
+        "layers": _stack(layers),
+        "pos_embed": (jax.random.normal(keys[-1], (cfg.encoder_seq,
+                                                   cfg.d_model)) * 0.02
+                      ).astype(dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encoder_forward(params: Params, cfg: ModelConfig,
+                    frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) precomputed frontend embeddings (stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["pos_embed"][None]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    enc_cfg = dataclasses.replace(cfg, cross_attention=False,
+                                  rope_mode="none")
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = attention_block(lp["attn"], h, positions, enc_cfg,
+                               window=None, causal=False)
+        x = x + a
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp_block(lp["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill/decode steps and batched generation."""
+from .serve_loop import generate, make_prefill_step, make_serve_step

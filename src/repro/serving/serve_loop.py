@@ -1,0 +1,61 @@
+"""Batched serving loop: prefill + decode with KV / SSM-state caches.
+
+`make_serve_step(cfg)` builds the single-token `serve_step` that the decode
+input shapes (decode_32k, long_500k) lower in the dry-run: one new token per
+sequence against a seq_len-deep cache.
+
+`generate()` is the runnable driver used by examples/serve_batched.py:
+greedy or temperature sampling over a batch of prompts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, tokens, positions=None, vision_embeds=None):
+        return prefill(params, cfg, tokens, max_seq, positions=positions,
+                       vision_embeds=vision_embeds)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, tokens (B,1), cache) -> (logits (B,1,V), cache)."""
+    def serve_step(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+    return serve_step
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, *,
+             max_new_tokens: int, max_seq: Optional[int] = None,
+             temperature: float = 0.0, seed: int = 0,
+             ) -> np.ndarray:
+    """Greedy/temperature generation for a (B, S_prompt) int32 batch."""
+    B, S = prompts.shape
+    max_seq = max_seq or (S + max_new_tokens)
+    prefill_fn = jax.jit(make_prefill_step(cfg, max_seq))
+    step_fn = jax.jit(make_serve_step(cfg))
+
+    logits, cache = prefill_fn(params, prompts)
+    key = jax.random.PRNGKey(seed)
+    out = [np.asarray(prompts)]
+    last = logits[:, -1, :]
+    for t in range(max_new_tokens):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, last / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(last, axis=-1)
+        tok = tok[:, None].astype(jnp.int32)
+        out.append(np.asarray(tok))
+        logits, cache = step_fn(params, tok, cache)
+        last = logits[:, -1, :]
+    return np.concatenate(out, axis=1)

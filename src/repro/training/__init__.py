@@ -1,0 +1,6 @@
+"""Training substrate: optimizers, train-step factory, elastic trainer."""
+from .optimizer import (OptimizerSpec, apply_updates, clip_by_global_norm,
+                        constant_schedule, global_norm, init_opt_state,
+                        warmup_cosine_schedule)
+from .eval import evaluate, make_eval_step
+from .train_loop import init_train_state, make_train_step

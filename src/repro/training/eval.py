@@ -1,0 +1,51 @@
+"""Evaluation harness: held-out cross-entropy / perplexity.
+
+`make_eval_step(cfg)` builds a pure eval step (no grads, no remat);
+`evaluate()` streams N batches from a pipeline and aggregates token-weighted
+loss -- the standard trainer-side quality probe (used by the elastic-training
+example to show learning survives Dorm adjustments).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import forward
+from ..models.config import ModelConfig
+
+
+def make_eval_step(cfg: ModelConfig):
+    """eval_step(params, batch) -> (sum_nll, n_tokens) for exact pooling."""
+
+    def eval_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels_safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels_safe[..., None],
+                                   axis=-1)[..., 0]
+        return (nll * mask).sum(), mask.sum()
+
+    return eval_step
+
+
+def evaluate(params, cfg: ModelConfig, batches: Iterable[Dict[str, Any]],
+             n_batches: int = 8, jit: bool = True) -> Dict[str, float]:
+    step = make_eval_step(cfg)
+    if jit:
+        step = jax.jit(step)
+    total_nll = total_tok = 0.0
+    it = iter(batches)
+    for _ in range(n_batches):
+        batch = next(it)
+        nll, tok = step(params, batch)
+        total_nll += float(nll)
+        total_tok += float(tok)
+    loss = total_nll / max(total_tok, 1.0)
+    return {"eval_loss": loss,
+            "eval_ppl": float(np.exp(min(loss, 20.0))),
+            "eval_tokens": total_tok}

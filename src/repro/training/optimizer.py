@@ -1,0 +1,120 @@
+"""Optimizers and LR schedules in raw JAX (no optax dependency).
+
+AdamW with decoupled weight decay, SGD+momentum, global-norm gradient
+clipping, and warmup-cosine / constant schedules. Optimizer state is a plain
+pytree so it checkpoints and reshards exactly like parameters (which the
+Dorm adjustment protocol relies on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int, final_frac: float = 0.1,
+                           ) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float,
+                        ) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    kind: str = "adamw"               # adamw | sgd
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+
+    def schedule(self) -> Schedule:
+        return warmup_cosine_schedule(self.peak_lr, self.warmup_steps,
+                                      self.total_steps)
+
+
+def init_opt_state(spec: OptimizerSpec, params: Params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if spec.kind == "adamw":
+        state["mu"] = zeros()
+        state["nu"] = zeros()
+    elif spec.kind == "sgd":
+        state["mom"] = zeros()
+    else:
+        raise ValueError(spec.kind)
+    return state
+
+
+def apply_updates(spec: OptimizerSpec, params: Params, grads: Params,
+                  state: Dict[str, Any],
+                  ) -> Tuple[Params, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, spec.clip_norm)
+    step = state["step"] + 1
+    lr = spec.schedule()(step)
+
+    if spec.kind == "adamw":
+        mu = jax.tree.map(
+            lambda m, g: spec.b1 * m + (1 - spec.b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: spec.b2 * v
+            + (1 - spec.b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - spec.b1 ** t
+        bc2 = 1 - spec.b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + spec.eps)
+            delta = delta + spec.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = {"step": step, "mu": mu, "nu": nu}
+    else:  # sgd + momentum
+        mom = jax.tree.map(
+            lambda b, g: spec.momentum * b + g.astype(jnp.float32),
+            state["mom"], grads)
+        new_params = jax.tree.map(
+            lambda p, b: (p.astype(jnp.float32) - lr * b).astype(p.dtype),
+            params, mom)
+        new_state = {"step": step, "mom": mom}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,115 @@
+"""Training step factory: loss + grad + optimizer update, with optional
+gradient (micro-batch) accumulation and activation rematerialization.
+
+`make_train_step(cfg, spec)` returns a pure function
+    train_step(state, batch) -> (state, metrics)
+with state = {"params", "opt"} -- jit/pjit it with the shardings you want.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import loss_fn
+from ..models.config import ModelConfig
+from .optimizer import OptimizerSpec, apply_updates, init_opt_state
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(key, cfg: ModelConfig, spec: OptimizerSpec,
+                     ) -> TrainState:
+    from ..models import init_params
+    params = init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(spec, params)}
+
+
+def make_train_step(cfg: ModelConfig, spec: OptimizerSpec, *,
+                    microbatches: int = 1, remat: bool = True,
+                    remat_policy: str = "full"):
+    """Build the train step. `microbatches` > 1 accumulates gradients over
+    equal splits of the leading batch axis (sequential lax.scan), trading
+    step latency for peak activation memory.
+
+    remat_policy (when remat=True):
+      "full"      -- recompute everything (lowest memory; re-runs the
+                     tensor-parallel all-reduces in the backward pass),
+      "save_dots" -- save dot/matmul outputs (jax dots_saveable policy):
+                     no forward recompute of matmuls OR their psums in the
+                     backward -- the §Perf run-1 collective fix,
+      "save_nothing_but_dots_with_no_batch" -- jax's
+                     dots_with_no_batch_dims_saveable (weights-only dots).
+    """
+
+    loss = functools.partial(loss_fn, cfg=cfg)
+
+    def compute_loss(params, batch):
+        l, metrics = loss(params, batch=batch)
+        return l, metrics
+
+    if remat:
+        policies = {
+            "full": None,
+            "save_dots": jax.checkpoint_policies.dots_saveable,
+            "save_nothing_but_dots_with_no_batch":
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }
+        pol = policies[remat_policy]
+        compute_loss = (jax.checkpoint(compute_loss) if pol is None
+                        else jax.checkpoint(compute_loss, policy=pol))
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def single(params, batch):
+        (l, metrics), grads = grad_fn(params, batch)
+        return l, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray],
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        params = state["params"]
+        if microbatches <= 1:
+            l, metrics, grads = single(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            # vision/audio/positions may have a different leading layout:
+            # positions for mrope are (3, B, S) -- split on axis 1.
+            def split_batch(batch):
+                out = {}
+                for k, v in batch.items():
+                    if k == "positions" and v.ndim == 3 and v.shape[0] == 3:
+                        mb = v.reshape((3, microbatches, -1) + v.shape[2:])
+                        out[k] = jnp.moveaxis(mb, 1, 0)
+                    else:
+                        out[k] = split(v)
+                return out
+
+            mb = split_batch(batch)
+
+            def body(carry, micro):
+                acc_grads, acc_loss = carry
+                l, metrics, grads = single(params, micro)
+                acc_grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+                return (acc_grads, acc_loss + l), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, l_sum), metrics = jax.lax.scan(body, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            l = l_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            spec, params, grads, state["opt"])
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = l
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,61 @@
+"""DRF (dominant resource fairness) unit tests, incl. the NSDI'11 example."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, ClusterSpec, ResourceVector,
+                        dominant_share, drf_container_counts, drf_shares)
+
+
+def _cluster(cpus, gpus, ram, n=1):
+    return ClusterSpec.homogeneous(
+        n, ResourceVector.of(cpus / n, gpus / n, ram / n))
+
+
+def test_dominant_share_basic():
+    total = np.array([9.0, 0.0, 18.0])
+    # 1 container of <1 CPU, 0 GPU, 4 RAM> -> dominant is RAM 4/18
+    assert dominant_share(1, np.array([1, 0, 4.0]), total) == pytest.approx(4 / 18)
+
+
+def test_drf_nsdi_example():
+    """Ghodsi et al. example: 9 CPUs / 18 GB; A wants <1 CPU, 4 GB>,
+    B wants <3 CPU, 1 GB>. DRF gives A 3 tasks, B 2 tasks."""
+    cluster = ClusterSpec.homogeneous(
+        1, ResourceVector.of(9, 18), resource_types=("cpu", "ram"))
+    a = ApplicationSpec("A", "x", ResourceVector.of(1, 4), 1, 100, 1)
+    b = ApplicationSpec("B", "x", ResourceVector.of(3, 1), 1, 100, 1)
+    counts = drf_container_counts([a, b], cluster)
+    assert counts == {"A": 3, "B": 2}
+    shares = drf_shares([a, b], cluster)
+    assert shares["A"] == pytest.approx(12 / 18)
+    assert shares["B"] == pytest.approx(6 / 9)
+
+
+def test_weighted_drf_prefers_heavier_weight():
+    cluster = ClusterSpec.homogeneous(
+        1, ResourceVector.of(16, 16), resource_types=("cpu", "ram"))
+    light = ApplicationSpec("L", "x", ResourceVector.of(1, 1), 1, 100, 1)
+    heavy = ApplicationSpec("H", "x", ResourceVector.of(1, 1), 3, 100, 1)
+    counts = drf_container_counts([light, heavy], cluster)
+    assert counts["H"] > counts["L"]
+    # weighted shares should end near 1:3
+    assert counts["H"] / counts["L"] == pytest.approx(3, rel=0.35)
+
+
+def test_n_max_saturation_releases_capacity():
+    cluster = ClusterSpec.homogeneous(
+        1, ResourceVector.of(10, 10), resource_types=("cpu", "ram"))
+    small = ApplicationSpec("S", "x", ResourceVector.of(1, 1), 1, 2, 1)
+    big = ApplicationSpec("B", "x", ResourceVector.of(1, 1), 1, 100, 1)
+    counts = drf_container_counts([small, big], cluster)
+    assert counts["S"] == 2          # capped by n_max
+    assert counts["B"] == 8          # takes the rest
+
+
+def test_n_min_guaranteed_first():
+    cluster = ClusterSpec.homogeneous(
+        1, ResourceVector.of(4, 4), resource_types=("cpu", "ram"))
+    apps = [ApplicationSpec(f"a{i}", "x", ResourceVector.of(1, 1), 1, 8, 1)
+            for i in range(4)]
+    counts = drf_container_counts(apps, cluster)
+    assert all(c >= 1 for c in counts.values())

@@ -1,0 +1,144 @@
+"""Tests for the extension substrates: Zamba2 shared-block LoRA, the eval
+harness, telemetry, and 2D (data x model) elastic partitions."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import (ClusterSimulator, DormMaster, MetricsLogger,
+                        OptimizerConfig, RecordingProtocol,
+                        generate_workload, paper_testbed)
+from repro.data import DataConfig, TokenPipeline
+from repro.models import decode_step, init_cache, init_params, loss_fn, prefill
+from repro.models.config import ModelConfig
+from repro.training import evaluate, make_eval_step
+
+HYB_LORA = ModelConfig(
+    "hl", "hybrid", 4, 128, 4, 4, 256, 256, head_dim=32, dtype="float32",
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=8, hybrid_attn_every=2,
+    shared_lora_rank=8, attn_impl="ref")
+
+
+# ------------------------------------------------------------------- lora
+
+def test_zamba2_full_config_has_lora():
+    assert get_config("zamba2-2.7b").shared_lora_rank == 128
+    assert smoke_config("zamba2-2.7b").shared_lora_rank <= 8
+
+
+def test_lora_params_per_group_and_zero_init_b():
+    params = init_params(jax.random.PRNGKey(0), HYB_LORA)
+    lora = params["groups"]["shared_lora"]
+    assert lora["wq_a"].shape == (2, 128, 8)        # stacked over 2 groups
+    assert lora["wq_b"].shape == (2, 8, 4, 32)
+    np.testing.assert_array_equal(np.asarray(lora["wq_b"]), 0.0)
+
+
+def test_lora_prefill_decode_consistent():
+    params = init_params(jax.random.PRNGKey(0), HYB_LORA)
+    # push B off zero so the adapters actually participate
+    params["groups"]["shared_lora"]["wq_b"] = (
+        jnp.ones_like(params["groups"]["shared_lora"]["wq_b"]) * 0.02)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, 256)
+    _, cache = prefill(params, HYB_LORA, toks[:, :S], S + 1)
+    lgA, _ = decode_step(params, HYB_LORA, toks[:, S:S + 1], cache)
+    cache2 = init_cache(HYB_LORA, B, S + 1)
+    for t in range(S + 1):
+        lgB, cache2 = decode_step(params, HYB_LORA, toks[:, t:t + 1], cache2)
+    assert float(jnp.abs(lgA - lgB).max()) < 2e-3
+
+
+def test_lora_changes_function():
+    params = init_params(jax.random.PRNGKey(0), HYB_LORA)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = loss_fn(params, HYB_LORA, batch)
+    params["groups"]["shared_lora"]["wq_b"] = (
+        jnp.ones_like(params["groups"]["shared_lora"]["wq_b"]) * 0.02)
+    l1, _ = loss_fn(params, HYB_LORA, batch)
+    assert abs(float(l0) - float(l1)) > 1e-7
+
+
+# ------------------------------------------------------------------- eval
+
+def test_evaluate_matches_loss_fn():
+    cfg = ModelConfig("t", "dense", 2, 64, 2, 2, 128, 128, head_dim=32,
+                      dtype="float32", attn_impl="ref")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pipe = TokenPipeline(DataConfig(vocab_size=128, seq_len=32,
+                                    global_batch=4))
+    res = evaluate(params, cfg, iter(pipe), n_batches=2)
+    assert np.isfinite(res["eval_loss"])
+    assert res["eval_ppl"] == pytest.approx(np.exp(res["eval_loss"]),
+                                            rel=1e-5)
+    assert res["eval_tokens"] == 2 * 4 * 31      # last label masked -100
+
+
+# -------------------------------------------------------------- telemetry
+
+def test_simulator_telemetry_export():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "run.jsonl")
+        logger = MetricsLogger(path)
+        wl = generate_workload(seed=3)[:8]
+        master = DormMaster(paper_testbed(), "greedy",
+                            OptimizerConfig(0.2, 0.2),
+                            protocol=RecordingProtocol())
+        res = ClusterSimulator(master, wl, horizon_s=12 * 3600,
+                               logger=logger).run()
+        assert len(logger.of_kind("sample")) == len(res.samples)
+        timeline = logger.utilization_timeline()
+        assert timeline and timeline[0][0] <= timeline[-1][0]
+        summary = logger.summary()
+        assert summary["events"] == len(res.samples)
+        logger.close()
+        rows = [json.loads(l) for l in open(path)]
+        assert len(rows) == len(res.samples)
+
+
+# ------------------------------------------------------ 2D elastic (subproc)
+
+SUB_2D = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, json
+    from repro.models.config import ModelConfig
+    from repro.training.elastic import ElasticConfig, ElasticTrainer
+    from repro.training.optimizer import OptimizerSpec
+    from repro.data import DataConfig
+    cfg = ElasticConfig(
+        model=ModelConfig("t","dense",2,64,4,4,128,128,head_dim=16,
+                          dtype="float32",attn_impl="ref"),
+        optimizer=OptimizerSpec(peak_lr=1e-3, warmup_steps=2, total_steps=40),
+        data=DataConfig(vocab_size=128, seq_len=32, global_batch=8),
+        model_parallel=2)
+    tr = ElasticTrainer(cfg, "tp2")
+    tr.start(jax.devices()[:4])        # mesh (data=2, model=2)
+    a = tr.train_steps(4)
+    tr.resize(jax.devices()[:8])       # mesh (data=4, model=2), resharded
+    b = tr.train_steps(4)
+    print(json.dumps({"step": b["step"], "l0": a["loss"], "l1": b["loss"]}))
+""")
+
+
+@pytest.mark.slow
+def test_elastic_2d_partition_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SUB_2D],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["step"] == 8
+    assert np.isfinite(rec["l1"])

@@ -1,0 +1,98 @@
+"""DormMaster lifecycle + cluster-simulator behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, ClusterSimulator, ClusterSpec,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        ResourceVector, StaticScheduler, TaskLevelOverheadModel,
+                        generate_workload, paper_testbed, speedup_ratios,
+                        BASELINE_STATIC_CONTAINERS, sample_task_duration_s)
+
+
+def mk_master(kind="greedy", theta=(0.2, 0.2)):
+    return DormMaster(paper_testbed(), kind, OptimizerConfig(*theta),
+                      protocol=RecordingProtocol())
+
+
+def app(i, cpus=2, gpus=0, ram=8, w=1, nmax=8, nmin=1):
+    return ApplicationSpec(f"app{i}", "MxNet",
+                           ResourceVector.of(cpus, gpus, ram), w, nmax, nmin)
+
+
+def test_submit_places_app_and_deploys_executors():
+    m = mk_master()
+    res = m.submit(app(1))
+    assert m.containers_of("app1") >= 1
+    assert "app1" in res.started_app_ids
+    n = m.containers_of("app1")
+    # one TaskExecutor + TaskScheduler per container (§III-A.3)
+    assert len(m.executors["app1"]) == n
+    assert len(m.schedulers["app1"]) == n
+    # TaskScheduler places tasks locally only (§III-D)
+    placements = m.schedulers["app1"][0].place(4)
+    assert all(c == m.schedulers["app1"][0].container_id
+               for c, _ in placements)
+
+
+def test_complete_releases_resources():
+    m = mk_master()
+    m.submit(app(1))
+    used_before = sum(s.used().sum() for s in m.slaves.values())
+    assert used_before > 0
+    m.complete("app1")
+    assert sum(s.used().sum() for s in m.slaves.values()) == 0
+
+
+def test_adjustment_protocol_sequence():
+    m = mk_master()
+    m.submit(app(1, nmax=32))
+    proto = m.protocol
+    m.submit(app(2, nmax=32))           # forces a resize of app1
+    kinds = [e.kind for e in proto.events if e.app_id == "app1"]
+    if "resume" in kinds:               # app1 was adjusted
+        i_save = kinds.index("save")
+        i_kill = kinds.index("kill")
+        i_resume = kinds.index("resume")
+        assert i_save < i_kill < i_resume
+
+
+def test_infeasible_keeps_pending():
+    cluster = ClusterSpec.homogeneous(1, ResourceVector.of(4, 0, 16))
+    m = DormMaster(cluster, "greedy", OptimizerConfig(0.1, 0.1),
+                   protocol=RecordingProtocol())
+    m.submit(ApplicationSpec("a", "x", ResourceVector.of(4, 0, 16), 1, 1, 1))
+    res = m.submit(ApplicationSpec("b", "x", ResourceVector.of(4, 0, 16),
+                                   1, 1, 1))
+    # no room for b's n_min until a completes
+    assert "b" in res.pending_app_ids
+    res2 = m.complete("a")
+    assert m.containers_of("b") == 1
+
+
+def test_simulator_dorm_beats_static():
+    wl = generate_workload(seed=1)[:20]
+    cluster = paper_testbed()
+    dorm = ClusterSimulator(
+        DormMaster(cluster, "greedy", OptimizerConfig(0.2, 0.2),
+                   protocol=RecordingProtocol()),
+        wl, adjustment_cost_s=60.0, horizon_s=24 * 3600).run()
+    static = {w.spec.app_id: BASELINE_STATIC_CONTAINERS[w.class_index]
+              for w in wl}
+    base = ClusterSimulator(
+        StaticScheduler(cluster, static), wl,
+        horizon_s=24 * 3600).run()
+    u_d = dorm.time_averaged_utilization(5 * 3600)
+    u_b = base.time_averaged_utilization(5 * 3600)
+    assert u_d > u_b                    # Fig 6's qualitative claim
+    sp = speedup_ratios(dorm, base)
+    if sp:
+        assert np.mean(list(sp.values())) > 1.0    # Fig 9a qualitative
+
+
+def test_task_level_overhead_model_matches_paper_analysis():
+    """§II-C: 430 ms latency on ~1.5 s tasks is significant overhead."""
+    rng = np.random.default_rng(0)
+    tasks = sample_task_duration_s(rng, 20_000)
+    assert 0.4 < np.median(tasks) / 1.5 < 2.5      # Fig 1(b) calibration
+    ov = TaskLevelOverheadModel().sharing_overhead(tasks)
+    assert ov > 0.10                               # >10% overhead

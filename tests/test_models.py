@@ -1,0 +1,146 @@
+"""Model-substrate correctness: chunked attention vs reference, SSD chunked
+vs naive recurrence, prefill/decode cache consistency, MoE invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn, prefill)
+from repro.models.config import ModelConfig
+from repro.models.layers import attention_chunked, attention_ref
+from repro.models.moe import expert_capacity, init_moe, moe_block
+from repro.models.ssm import ssd_chunked_ref
+
+
+# ----------------------------------------------------- attention equivalence
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, S=256, Hq=4, Hkv=2, Dh=64, causal=True, window=None, cap=0.0),
+    dict(B=1, S=128, Hq=8, Hkv=8, Dh=32, causal=True, window=50, cap=50.0),
+    dict(B=2, S=200, Hq=4, Hkv=1, Dh=64, causal=True, window=None, cap=0.0),
+    dict(B=2, S=256, Hq=4, Hkv=4, Dh=64, causal=False, window=None, cap=0.0),
+])
+def test_chunked_attention_matches_ref(case):
+    ks = jax.random.split(jax.random.PRNGKey(case["S"]), 3)
+    q = jax.random.normal(ks[0], (case["B"], case["S"], case["Hq"], case["Dh"]))
+    k = jax.random.normal(ks[1], (case["B"], case["S"], case["Hkv"], case["Dh"]))
+    v = jax.random.normal(ks[2], (case["B"], case["S"], case["Hkv"], case["Dh"]))
+    o1 = attention_ref(q, k, v, causal=case["causal"], window=case["window"],
+                       logit_softcap=case["cap"])
+    o2 = attention_chunked(q, k, v, causal=case["causal"],
+                           window=case["window"], logit_softcap=case["cap"],
+                           chunk=64)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+# ------------------------------------------------------------ ssd chunking
+
+def test_ssd_chunked_matches_naive():
+    B, S, H, P, N = 2, 64, 3, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A)
+        h = dA[:, :, None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    y_naive = jnp.stack(ys, 1)
+
+    for chunk in (8, 16, 64):
+        y_c, h_c = ssd_chunked_ref(xh, dt, A, Bm, Cm, chunk)
+        assert float(jnp.abs(y_naive - y_c).max()) < 1e-3, chunk
+        assert float(jnp.abs(h - h_c).max()) < 1e-3, chunk
+
+
+# --------------------------------------------- prefill == stepwise decode
+
+CONFIGS = {
+    "dense": ModelConfig("d", "dense", 2, 128, 4, 2, 256, 256, head_dim=32,
+                         dtype="float32", attn_impl="ref"),
+    "sliding": ModelConfig("s", "dense", 2, 128, 4, 4, 256, 256, head_dim=32,
+                           dtype="float32", layer_pattern="sliding",
+                           sliding_window=8, attn_impl="ref"),
+    "local_global": ModelConfig(
+        "lg", "dense", 4, 128, 4, 2, 256, 256, head_dim=32, dtype="float32",
+        layer_pattern="local_global", sliding_window=8,
+        attn_logit_softcap=50.0, use_post_norms=True, scale_embeddings=True,
+        attn_impl="ref"),
+    "ssm": ModelConfig("m", "ssm", 2, 128, 0, 0, 0, 256, dtype="float32",
+                       ssm_state=16, ssm_head_dim=16, ssm_chunk=8),
+    "hybrid": ModelConfig("h", "hybrid", 4, 128, 4, 4, 256, 256, head_dim=32,
+                          dtype="float32", ssm_state=16, ssm_head_dim=16,
+                          ssm_chunk=8, hybrid_attn_every=2, attn_impl="ref"),
+    # capacity_factor=8: prefill (N=B*S) and decode (N=B) use different
+    # per-call capacities, so token DROPPING differs between the two paths;
+    # unbounded capacity isolates the cache-consistency property under test
+    # (dropping semantics are covered in test_moe_capacity_dropping_and_aux).
+    "moe": ModelConfig("e", "moe", 2, 128, 4, 4, 64, 256, head_dim=32,
+                       dtype="float32", num_experts=4, num_experts_per_tok=2,
+                       capacity_factor=8.0, attn_impl="ref"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(CONFIGS))
+def test_prefill_matches_stepwise_decode(family):
+    cfg = CONFIGS[family]
+    B, S = 2, 24
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    _, cache = prefill(params, cfg, toks[:, :S], S + 1)
+    lgA, _ = decode_step(params, cfg, toks[:, S:S + 1], cache)
+
+    cache2 = init_cache(cfg, B, S + 1)
+    for t in range(S + 1):
+        lgB, cache2 = decode_step(params, cfg, toks[:, t:t + 1], cache2)
+    assert float(jnp.abs(lgA - lgB).max()) < 2e-3
+
+
+# ------------------------------------------------------------- moe details
+
+def test_moe_capacity_dropping_and_aux():
+    cfg = CONFIGS["moe"]
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128))
+    out, aux = moe_block(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3     # aux >= 1 at/near balance by design
+    C = expert_capacity(64, cfg)
+    assert C % 8 == 0 and C >= 8
+
+
+def test_moe_aux_detects_imbalance():
+    cfg = CONFIGS["moe"]
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    # craft inputs with a constant component and a router that maps it to
+    # expert 0 -> all tokens route there and aux must exceed the balanced one
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 128)) * 0.1
+    x = x.at[..., 0].set(5.0)
+    p_bad = dict(p)
+    p_bad["router"] = jnp.zeros_like(p["router"]).at[0, 0].set(3.0)
+    _, aux_bal = moe_block(p, x, cfg)
+    _, aux_bad = moe_block(p_bad, x, cfg)
+    assert float(aux_bad) > float(aux_bal) + 0.3
+
+
+# ----------------------------------------------------------- loss masking
+
+def test_loss_ignores_masked_labels():
+    cfg = CONFIGS["dense"]
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    full, _ = loss_fn(params, cfg, {"tokens": toks, "labels": toks})
+    labels_masked = toks.at[:, 8:].set(-100)
+    half, _ = loss_fn(params, cfg,
+                      {"tokens": toks, "labels": labels_masked})
+    assert np.isfinite(float(half))
+    assert abs(float(full) - float(half)) > 1e-6   # actually different set

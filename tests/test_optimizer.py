@@ -1,0 +1,93 @@
+"""Utilization-fairness optimizer (P2) tests: MILP exact vs greedy heuristic,
+budget constraints Eq 15/16, infeasibility fallback."""
+import numpy as np
+import pytest
+
+from repro.core import (Allocation, ApplicationSpec, ClusterSpec,
+                        GreedyOptimizer, MilpOptimizer, OptimizerConfig,
+                        ResourceVector, adjust_budget, cluster_fairness_loss,
+                        fairness_budget, resource_adjustment_overhead,
+                        resource_utilization, validate_allocation)
+
+
+def small_cluster(b=4):
+    return ClusterSpec.homogeneous(b, ResourceVector.of(8, 1, 32))
+
+
+def apps3():
+    return [
+        ApplicationSpec("a1", "MxNet", ResourceVector.of(2, 0, 8), 1, 8, 1),
+        ApplicationSpec("a2", "TF", ResourceVector.of(2, 0, 6), 2, 8, 1),
+        ApplicationSpec("a3", "Caffe", ResourceVector.of(1, 1, 8), 1, 4, 1),
+    ]
+
+
+@pytest.mark.parametrize("kind", ["milp", "greedy"])
+def test_solution_feasible(kind):
+    cluster, apps = small_cluster(), apps3()
+    opt = (MilpOptimizer if kind == "milp" else GreedyOptimizer)(
+        OptimizerConfig(0.2, 0.2))
+    alloc = opt.solve(apps, cluster, None)
+    assert alloc is not None
+    validate_allocation(alloc, apps, cluster)
+
+
+def test_milp_beats_or_matches_greedy_utilization():
+    cluster, apps = small_cluster(), apps3()
+    cfg = OptimizerConfig(0.2, 0.2)
+    a_m = MilpOptimizer(cfg).solve(apps, cluster, None)
+    a_g = GreedyOptimizer(cfg).solve(apps, cluster, None)
+    u_m = resource_utilization(a_m, apps, cluster)
+    u_g = resource_utilization(a_g, apps, cluster)
+    assert u_m >= u_g - 1e-9
+
+
+@pytest.mark.parametrize("kind", ["milp", "greedy"])
+@pytest.mark.parametrize("theta1", [0.05, 0.1, 0.3])
+def test_fairness_budget_respected(kind, theta1):
+    cluster, apps = small_cluster(), apps3()
+    cfg = OptimizerConfig(theta1, 1.0)
+    opt = (MilpOptimizer if kind == "milp" else GreedyOptimizer)(cfg)
+    alloc = opt.solve(apps, cluster, None)
+    assert alloc is not None
+    loss = cluster_fairness_loss(alloc, apps, cluster)
+    assert loss <= fairness_budget(cfg, cluster.m) + 1e-6
+
+
+def test_adjustment_budget_respected():
+    cluster, apps = small_cluster(), apps3()
+    cfg = OptimizerConfig(0.3, 0.0)     # theta2=0: NO adjustments allowed
+    opt = MilpOptimizer(cfg)
+    prev = opt.solve(apps, cluster, None)
+    # submit a 4th app; existing allocations must not change (budget 0)
+    apps4 = apps + [ApplicationSpec("a4", "MxNet",
+                                    ResourceVector.of(2, 0, 8), 1, 8, 1)]
+    alloc = opt.solve(apps4, cluster, prev)
+    if alloc is not None:
+        assert resource_adjustment_overhead(prev, alloc) == 0
+
+
+def test_infeasible_returns_none():
+    cluster = ClusterSpec.homogeneous(1, ResourceVector.of(2, 0, 8))
+    # n_min=4 containers of 2 CPUs each cannot fit in 2 CPUs
+    apps = [ApplicationSpec("big", "x", ResourceVector.of(2, 0, 8), 1, 8, 4)]
+    assert MilpOptimizer(OptimizerConfig()).solve(apps, cluster, None) is None
+    assert GreedyOptimizer(OptimizerConfig()).solve(apps, cluster, None) is None
+
+
+def test_milp_maximizes_utilization_simple():
+    """One app, plenty of room -> n_max containers."""
+    cluster = small_cluster(2)
+    app = ApplicationSpec("solo", "x", ResourceVector.of(2, 0, 8), 1, 6, 1)
+    alloc = MilpOptimizer(OptimizerConfig(1.0, 1.0)).solve([app], cluster, None)
+    assert alloc.containers_of("solo") == 6
+
+
+def test_stickiness_under_greedy():
+    """Greedy keeps previous placements when nothing changed."""
+    cluster, apps = small_cluster(), apps3()
+    cfg = OptimizerConfig(0.2, 0.2)
+    opt = GreedyOptimizer(cfg)
+    a1 = opt.solve(apps, cluster, None)
+    a2 = opt.solve(apps, cluster, a1)
+    assert resource_adjustment_overhead(a1, a2) <= adjust_budget(cfg, 3)

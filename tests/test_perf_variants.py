@@ -1,0 +1,106 @@
+"""Perf-variant equivalence tests (EXPERIMENTS.md §Perf): the optimized
+paths must be numerically identical to the paper-faithful baseline.
+
+Multi-device shard_map variants run in a subprocess with 8 forced host
+devices (the in-process suite keeps 1 device so smoke tests stay honest).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import init_params, loss_fn
+from repro.models.config import ModelConfig
+from repro.training.optimizer import OptimizerSpec
+from repro.training.train_loop import init_train_state, make_train_step
+
+TINY = ModelConfig("t", "dense", 2, 64, 2, 2, 128, 128, head_dim=32,
+                   dtype="float32", attn_impl="ref")
+
+
+@pytest.mark.parametrize("policy", ["full", "save_dots",
+                                    "save_nothing_but_dots_with_no_batch"])
+def test_remat_policies_same_numerics(policy):
+    spec = OptimizerSpec(peak_lr=1e-3, warmup_steps=2, total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), TINY, spec)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 128)
+    batch = {"tokens": toks, "labels": toks}
+    base_state, base_m = make_train_step(TINY, spec, remat=True,
+                                         remat_policy="full")(state, batch)
+    new_state, new_m = make_train_step(TINY, spec, remat=True,
+                                       remat_policy=policy)(state, batch)
+    assert float(base_m["loss"]) == pytest.approx(float(new_m["loss"]),
+                                                  rel=1e-6)
+    for a, b in zip(jax.tree.leaves(base_state["params"]),
+                    jax.tree.leaves(new_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ct_cast_is_identity_forward():
+    cfg = TINY.with_overrides(bf16_cotangents=True)
+    params = init_params(jax.random.PRNGKey(0), TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 128)
+    batch = {"tokens": toks, "labels": toks}
+    l0, _ = loss_fn(params, TINY, batch)
+    l1, _ = loss_fn(params, cfg, batch)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-6)
+
+
+SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import Mesh
+    from repro.models.config import ModelConfig
+    from repro.models.moe import init_moe, moe_block
+    from repro.models import meshctx, init_params, forward
+
+    results = {}
+    base = ModelConfig("m","moe",2,128,4,4,64,256,head_dim=32,
+                       dtype="float32", num_experts=8, num_experts_per_tok=2,
+                       capacity_factor=8.0, attn_impl="ref")
+    p = init_moe(jax.random.PRNGKey(0), base, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1),(4,32,128))
+    out_l, _ = moe_block(p, x, base)
+    mesh = Mesh(np.array(jax.devices()).reshape(2,4), ("data","model"))
+    with meshctx.use_mesh(mesh):
+        for disp in ("psum","alltoall"):
+            cfg = base.with_overrides(expert_axis="model", moe_dispatch=disp)
+            out_e, _ = jax.jit(lambda p,x: moe_block(p,x,cfg))(p, x)
+            results[f"moe_{disp}"] = float(jnp.abs(out_l-out_e).max())
+
+    # shard_map TP projections == plain einsum path
+    dense = ModelConfig("d","dense",2,128,8,8,256,256,head_dim=16,
+                        dtype="float32", attn_impl="ref")
+    params = init_params(jax.random.PRNGKey(0), dense)
+    toks = jax.random.randint(jax.random.PRNGKey(1),(8,32),0,256)
+    ref_logits, _ = forward(params, dense, {"tokens": toks})
+    with meshctx.use_mesh(mesh):
+        tp = dense.with_overrides(tp_axis="model")
+        tp_logits, _ = jax.jit(lambda p,b: forward(p, tp, b))(
+            params, {"tokens": toks})
+    results["tp_shardmap"] = float(jnp.abs(ref_logits-tp_logits).max())
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_shardmap_variants_match_reference_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SUBPROCESS],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["moe_psum"] < 1e-4
+    assert res["moe_alltoall"] < 1e-4
+    assert res["tp_shardmap"] < 1e-3

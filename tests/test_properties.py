@@ -1,0 +1,91 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Allocation, ApplicationSpec, ClusterSpec,
+                        GreedyOptimizer, MilpOptimizer, OptimizerConfig,
+                        ResourceVector, cluster_fairness_loss,
+                        drf_container_counts, fairness_budget,
+                        resource_utilization, validate_allocation)
+from repro.models.moe import expert_capacity
+from repro.models.config import ModelConfig
+
+
+# ------------------------------------------------------------- strategies
+
+@st.composite
+def cluster_and_apps(draw):
+    b = draw(st.integers(1, 5))
+    cap = ResourceVector.of(draw(st.integers(4, 16)),
+                            draw(st.integers(0, 2)),
+                            draw(st.integers(16, 64)))
+    cluster = ClusterSpec.homogeneous(b, cap)
+    n_apps = draw(st.integers(1, 5))
+    apps = []
+    for i in range(n_apps):
+        d = ResourceVector.of(draw(st.integers(1, 4)),
+                              draw(st.integers(0, 1)),
+                              draw(st.integers(1, 16)))
+        n_min = draw(st.integers(1, 2))
+        n_max = draw(st.integers(n_min, n_min + 8))
+        apps.append(ApplicationSpec(
+            f"app{i}", "x", d, draw(st.integers(1, 4)), n_max, n_min))
+    return cluster, apps
+
+
+# ---------------------------------------------------------- DRF invariants
+
+@given(cluster_and_apps())
+@settings(max_examples=40, deadline=None)
+def test_drf_counts_respect_capacity_and_bounds(ca):
+    cluster, apps = ca
+    counts = drf_container_counts(apps, cluster)
+    total = np.zeros(cluster.m)
+    for i, a in enumerate(apps):
+        assert 0 <= counts[a.app_id] <= a.n_max
+        total += counts[a.app_id] * a.demand.as_array()
+    assert np.all(total <= cluster.total_capacity() + 1e-9)
+
+
+# ------------------------------------------------------ optimizer invariants
+
+@given(cluster_and_apps(), st.sampled_from([0.05, 0.1, 0.2, 0.5]))
+@settings(max_examples=25, deadline=None)
+def test_greedy_solution_feasible_and_within_budget(ca, theta1):
+    cluster, apps = ca
+    cfg = OptimizerConfig(theta1, 1.0)
+    alloc = GreedyOptimizer(cfg).solve(apps, cluster, None)
+    if alloc is None:       # infeasible is an allowed outcome
+        return
+    validate_allocation(alloc, apps, cluster)
+    assert cluster_fairness_loss(alloc, apps, cluster) \
+        <= fairness_budget(cfg, cluster.m) + 1e-6
+
+
+@given(cluster_and_apps())
+@settings(max_examples=10, deadline=None)
+def test_milp_at_least_as_good_as_greedy(ca):
+    cluster, apps = ca
+    cfg = OptimizerConfig(0.2, 1.0, time_limit_s=5.0)
+    a_g = GreedyOptimizer(cfg).solve(apps, cluster, None)
+    a_m = MilpOptimizer(cfg).solve(apps, cluster, None)
+    if a_g is not None and a_m is not None:
+        assert resource_utilization(a_m, apps, cluster) \
+            >= resource_utilization(a_g, apps, cluster) - 1e-6
+
+
+# ------------------------------------------------------------ moe capacity
+
+@given(st.integers(8, 4096), st.integers(1, 8), st.integers(2, 64),
+       st.floats(1.0, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_expert_capacity_covers_balanced_load(n, k, e, f):
+    if k > e:
+        return
+    cfg = ModelConfig("t", "moe", 1, 64, 2, 2, 32, 64, num_experts=e,
+                      num_experts_per_tok=k, capacity_factor=f)
+    C = expert_capacity(n, cfg)
+    # total slots must cover a perfectly balanced assignment
+    assert C * e >= n * k
+    assert C % 8 == 0

@@ -1,0 +1,87 @@
+"""Hypothesis property tests on the cluster simulator's physical invariants:
+work conservation, capacity safety over time, fairness budgets under random
+workloads -- the simulation-level counterpart of tests/test_properties.py."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ApplicationSpec, ClusterSimulator, ClusterSpec,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        ResourceVector, StaticScheduler, WorkloadApp,
+                        fairness_budget)
+
+
+@st.composite
+def small_workload(draw):
+    n = draw(st.integers(2, 8))
+    apps = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(60, 3600))
+        dur = draw(st.floats(600, 6 * 3600))
+        n_max = draw(st.integers(1, 6))
+        spec = ApplicationSpec(
+            f"w{i}", "x",
+            ResourceVector.of(draw(st.integers(1, 3)), 0,
+                              draw(st.integers(2, 8))),
+            weight=draw(st.integers(1, 3)), n_max=n_max, n_min=1,
+            serial_work=dur * min(2, n_max), submit_time=t)
+        apps.append(WorkloadApp(spec=spec, class_index=0,
+                                base_duration_s=dur))
+    return apps
+
+
+def _cluster():
+    return ClusterSpec.homogeneous(4, ResourceVector.of(8, 0, 32))
+
+
+@given(small_workload(), st.sampled_from([0.1, 0.3]))
+@settings(max_examples=15, deadline=None)
+def test_dorm_simulation_invariants(wl, theta):
+    cluster = _cluster()
+    master = DormMaster(cluster, "greedy",
+                        OptimizerConfig(theta, theta),
+                        protocol=RecordingProtocol())
+    sim = ClusterSimulator(master, wl, adjustment_cost_s=30.0,
+                           horizon_s=48 * 3600)
+    res = sim.run()
+
+    # capacity safety at every event: utilization never exceeds m
+    for s in res.samples:
+        assert s.utilization <= cluster.m + 1e-6
+        assert s.fairness_loss <= fairness_budget(
+            OptimizerConfig(theta, theta), cluster.m) + 1e-6
+
+    # work conservation: completed apps consumed exactly their serial work
+    for app_id, rt in res.completions.items():
+        if rt.finished_at is not None:
+            assert rt.remaining_work <= 1e-6
+            # duration >= serial_work / n_max (can't run faster than max scale)
+            spec = rt.app.spec
+            min_dur = spec.serial_work / spec.n_max
+            assert rt.finished_at - rt.submitted_at >= min_dur - 1e-6
+
+    # adjustment pauses accounted: every adjusted app was paused
+    for app_id, rt in res.completions.items():
+        if rt.n_adjustments > 0 and rt.finished_at is not None:
+            spec = rt.app.spec
+            assert rt.finished_at - rt.submitted_at >= \
+                spec.serial_work / spec.n_max - 1e-6
+
+
+@given(small_workload())
+@settings(max_examples=10, deadline=None)
+def test_static_never_adjusts_and_dorm_dominates_utilization(wl):
+    cluster = _cluster()
+    static = {w.spec.app_id: 2 for w in wl}
+    base = ClusterSimulator(StaticScheduler(cluster, static), wl,
+                            horizon_s=48 * 3600).run()
+    assert base.total_adjustments == 0
+    master = DormMaster(cluster, "greedy", OptimizerConfig(0.3, 0.3),
+                        protocol=RecordingProtocol())
+    dorm = ClusterSimulator(master, wl, adjustment_cost_s=30.0,
+                            horizon_s=48 * 3600).run()
+    # Dorm's whole-run utilization is never materially below static's
+    u_d = dorm.time_averaged_utilization()
+    u_b = base.time_averaged_utilization()
+    assert u_d >= u_b - 0.15
