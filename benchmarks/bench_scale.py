@@ -1,0 +1,78 @@
+"""Large-scale simulation benchmark: Dorm on a 1000-slave heterogeneous
+cluster under a 500-app diurnal/bursty trace (the scale path: vectorized
+simulator + auto MILP->greedy optimizer switch + event batching).
+
+Acceptance target: the default run completes end-to-end in < 60 s on CPU.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_scale \
+          [--slaves 1000 --apps 500 --seed 0 --horizon-h 24 \
+           --batch-window-s 60 --theta1 0.2 --theta2 0.2]
+or as part of the harness:  PYTHONPATH=src python -m benchmarks.run scale
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import (ClusterSimulator, DormMaster, OptimizerConfig,
+                        RecordingProtocol, TraceConfig, generate_trace,
+                        heterogeneous_cluster)
+
+from .common import emit
+
+
+def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
+        horizon_s: float = 24 * 3600.0, batch_window_s: float = 60.0,
+        theta1: float = 0.2, theta2: float = 0.2,
+        auto_switch_vars: int = 2_000):
+    cluster = heterogeneous_cluster(n_slaves, seed=seed)
+    wl = generate_trace(TraceConfig(n_apps=n_apps, seed=seed))
+    cfg = OptimizerConfig(theta1, theta2, warm_start=True,
+                          auto_switch_vars=auto_switch_vars)
+    master = DormMaster(cluster, "auto", cfg, protocol=RecordingProtocol())
+    sim = ClusterSimulator(master, wl, adjustment_cost_s=60.0,
+                           horizon_s=horizon_s,
+                           batch_window_s=batch_window_s)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+
+    n_done = sum(1 for rt in res.completions.values()
+                 if rt.finished_at is not None)
+    rows = [
+        ("scale.slaves", n_slaves, "count", ""),
+        ("scale.apps", n_apps, "count", ""),
+        ("scale.wall", wall, "s", "end-to-end simulation wall time"),
+        ("scale.events", len(res.samples), "count", "reallocation events"),
+        ("scale.events_per_s", len(res.samples) / max(wall, 1e-9), "1/s", ""),
+        ("scale.completed", n_done, "count", f"of {n_apps}"),
+        ("scale.util_mean", res.time_averaged_utilization(), "sum-util", ""),
+        ("scale.fairness_mean", res.mean_fairness_loss(), "loss", ""),
+        ("scale.fairness_max", res.max_fairness_loss(), "loss", ""),
+        ("scale.adjustments", res.total_adjustments, "count", "Eq-4 total"),
+    ]
+    emit(rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--slaves", type=int, default=1000)
+    ap.add_argument("--apps", type=int, default=500)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--horizon-h", type=float, default=24.0)
+    ap.add_argument("--batch-window-s", type=float, default=60.0)
+    ap.add_argument("--theta1", type=float, default=0.2)
+    ap.add_argument("--theta2", type=float, default=0.2)
+    ap.add_argument("--auto-switch-vars", type=int, default=2_000)
+    args = ap.parse_args()
+    print("name,value,unit,notes")
+    run(n_slaves=args.slaves, n_apps=args.apps, seed=args.seed,
+        horizon_s=args.horizon_h * 3600.0,
+        batch_window_s=args.batch_window_s,
+        theta1=args.theta1, theta2=args.theta2,
+        auto_switch_vars=args.auto_switch_vars)
+
+
+if __name__ == "__main__":
+    main()

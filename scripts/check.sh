@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# One-command verify recipe: install dev deps (best-effort -- the image may
+# be offline, in which case tests that need missing optional deps skip
+# themselves) and run the tier-1 test command from ROADMAP.md.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+pip install -q -r requirements-dev.txt || \
+    echo "warning: pip install failed (offline?); running with baked-in deps" >&2
+
+set -e
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

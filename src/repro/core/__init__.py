@@ -9,16 +9,20 @@ from .master import DormMaster, ReallocationResult
 from .metrics import (actual_shares, adjusted_apps, cluster_fairness_loss,
                       per_resource_utilization, resource_adjustment_overhead,
                       resource_utilization)
-from .optimizer import (GreedyOptimizer, MilpOptimizer, OptimizerConfig,
-                        adjust_budget, fairness_budget, make_optimizer)
+from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
+                        OptimizerConfig, adjust_budget, fairness_budget,
+                        make_optimizer)
 from .partition import Partition, TaskExecutor, TaskScheduler
-from .simulator import ClusterSimulator, MetricSample, SimResult, speedup_ratios
+from .simulator import (ClusterSimulator, MetricSample,
+                        ReferenceClusterSimulator, SimResult, speedup_ratios)
 from .slave import Container, DormSlave
 from .telemetry import MetricsLogger
 from .types import (Allocation, ApplicationSpec, ClusterSpec, ResourceVector,
                     SlaveSpec, demand_matrix, validate_allocation)
 from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
-                       TABLE_II, WorkloadApp, generate_workload, paper_testbed,
+                       SCALE_CLASSES, SLAVE_FLAVORS, TABLE_II, TraceConfig,
+                       WorkloadApp, generate_trace, generate_workload,
+                       heterogeneous_cluster, paper_testbed,
                        sample_app_duration_s, sample_task_duration_s)
 
 __all__ = [
@@ -28,13 +32,17 @@ __all__ = [
     "drf_shares", "fairness_loss", "DormMaster", "ReallocationResult",
     "actual_shares", "adjusted_apps", "cluster_fairness_loss",
     "per_resource_utilization", "resource_adjustment_overhead",
-    "resource_utilization", "GreedyOptimizer", "MilpOptimizer",
+    "resource_utilization", "AutoOptimizer", "GreedyOptimizer",
+    "MilpOptimizer",
     "OptimizerConfig", "adjust_budget", "fairness_budget", "make_optimizer",
     "Partition", "TaskExecutor", "TaskScheduler", "ClusterSimulator",
-    "MetricSample", "SimResult", "speedup_ratios", "Container", "DormSlave",
+    "MetricSample", "ReferenceClusterSimulator", "SimResult",
+    "speedup_ratios", "Container", "DormSlave",
     "MetricsLogger", "Allocation", "ApplicationSpec", "ClusterSpec", "ResourceVector",
     "SlaveSpec", "demand_matrix", "validate_allocation",
-    "BASELINE_STATIC_CONTAINERS", "MEAN_INTERARRIVAL_S", "TABLE_II",
-    "WorkloadApp", "generate_workload", "paper_testbed",
+    "BASELINE_STATIC_CONTAINERS", "MEAN_INTERARRIVAL_S", "SCALE_CLASSES",
+    "SLAVE_FLAVORS", "TABLE_II", "TraceConfig",
+    "WorkloadApp", "generate_trace", "generate_workload",
+    "heterogeneous_cluster", "paper_testbed",
     "sample_app_duration_s", "sample_task_duration_s",
 ]

@@ -19,7 +19,7 @@ import numpy as np
 from .adjustment import AdjustmentProtocol, CheckpointHandle, RecordingProtocol
 from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
                       resource_utilization)
-from .optimizer import GreedyOptimizer, MilpOptimizer, OptimizerConfig
+from .optimizer import OptimizerConfig, make_optimizer
 from .partition import Partition, TaskExecutor, TaskScheduler
 from .slave import DormSlave
 from .types import Allocation, ApplicationSpec, ClusterSpec, validate_allocation
@@ -47,8 +47,9 @@ class DormMaster:
             s.slave_id: DormSlave(s) for s in cluster.slaves}
         self.slave_ids: Tuple[str, ...] = tuple(s.slave_id for s in cluster.slaves)
         cfg = optimizer_cfg
-        self.optimizer = (MilpOptimizer(cfg) if optimizer_kind == "milp"
-                          else GreedyOptimizer(cfg))
+        # "milp" (exact), "greedy" (heuristic), or "auto" (MILP below
+        # cfg.auto_switch_vars variables, greedy above -- the scale path).
+        self.optimizer = make_optimizer(optimizer_kind, cfg)
         self.protocol: AdjustmentProtocol = protocol or RecordingProtocol()
         self.partitions: Dict[str, Partition] = {}       # running apps
         self.specs: Dict[str, ApplicationSpec] = {}      # running + pending
@@ -57,15 +58,29 @@ class DormMaster:
         self.checkpoints: Dict[str, CheckpointHandle] = {}
         self.executors: Dict[str, List[TaskExecutor]] = {}
         self.schedulers: Dict[str, List[TaskScheduler]] = {}
+        # Placement rows (x_{i,.}) cached per running app: recomputing them
+        # from container lists is O(b) dict-building per app per event, which
+        # dominates at 1000 slaves.
+        self._placements: Dict[str, np.ndarray] = {}
 
     # ------------------------------------------------------------------ API
 
     def submit(self, spec: ApplicationSpec) -> ReallocationResult:
         """§III-B: submit a 6-tuple; triggers reallocation."""
-        if spec.app_id in self.specs:
-            raise ValueError(f"duplicate app_id {spec.app_id}")
-        self.specs[spec.app_id] = spec
-        self.pending.append(spec.app_id)
+        return self.submit_batch([spec])
+
+    def submit_batch(self, specs: Sequence[ApplicationSpec],
+                     ) -> ReallocationResult:
+        """Admit several applications, then reallocate ONCE (event batching:
+        under bursty arrivals one optimizer pass absorbs the whole burst)."""
+        seen = set()
+        for spec in specs:
+            if spec.app_id in self.specs or spec.app_id in seen:
+                raise ValueError(f"duplicate app_id {spec.app_id}")
+            seen.add(spec.app_id)
+        for spec in specs:
+            self.specs[spec.app_id] = spec
+            self.pending.append(spec.app_id)
         return self.reallocate()
 
     def complete(self, app_id: str) -> ReallocationResult:
@@ -108,8 +123,7 @@ class DormMaster:
 
     def _current_allocation(self) -> Allocation:
         app_ids = tuple(self.partitions.keys())
-        x = np.stack([self.partitions[a].placement(self.slave_ids)
-                      for a in app_ids]) if app_ids else \
+        x = np.stack([self._placements[a] for a in app_ids]) if app_ids else \
             np.zeros((0, len(self.slave_ids)), np.int64)
         return Allocation(app_ids, x)
 
@@ -135,7 +149,7 @@ class DormMaster:
             spec = spec_of[app_id]
             new_row = alloc.x[i]
             if app_id in self.partitions:
-                old_row = self.partitions[app_id].placement(self.slave_ids)
+                old_row = self._placements[app_id]
                 if np.array_equal(old_row, new_row):
                     continue
                 self.checkpoints[app_id] = self.protocol.save_state(spec)
@@ -182,6 +196,7 @@ class DormMaster:
         self.partitions[spec.app_id] = part
         self.executors[spec.app_id] = execs
         self.schedulers[spec.app_id] = scheds
+        self._placements[spec.app_id] = np.asarray(row, dtype=np.int64).copy()
 
     def _teardown(self, app_id: str) -> None:
         part = self.partitions.pop(app_id, None)
@@ -191,14 +206,16 @@ class DormMaster:
             self.slaves[c.slave_id].destroy_container(c.container_id)
         self.executors.pop(app_id, None)
         self.schedulers.pop(app_id, None)
+        self._placements.pop(app_id, None)
 
     def _result(self, alloc: Allocation, adjusted: Tuple[str, ...],
                 started: Tuple[str, ...], pending: Tuple[str, ...],
                 ) -> ReallocationResult:
-        apps = [self.specs[a] for a in alloc.app_ids if a in self.specs]
-        sub = Allocation(tuple(a.app_id for a in apps),
-                         np.stack([alloc.row(a.app_id) for a in apps])
-                         if apps else np.zeros((0, self.cluster.b), np.int64))
+        keep = [i for i, a in enumerate(alloc.app_ids) if a in self.specs]
+        apps = [self.specs[alloc.app_ids[i]] for i in keep]
+        sub = Allocation(tuple(alloc.app_ids[i] for i in keep),
+                         alloc.x[keep] if keep
+                         else np.zeros((0, self.cluster.b), np.int64))
         return ReallocationResult(
             allocation=sub,
             adjusted_app_ids=adjusted,

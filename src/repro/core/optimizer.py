@@ -15,10 +15,21 @@ which does NOT depend on the container count, so the actual dominant share is
 s_i = g_i * N_i with the constant g_i = max_k d_{i,k}/C_k and N_i = sum_j x_{i,j}.
 Hence Eqs 11-12 are linear in x.
 
-Two solvers behind one interface:
+Three solvers behind one interface:
   * `MilpOptimizer`  -- exact, scipy.optimize.milp (HiGHS; stands in for CPLEX).
+    Constraints are assembled as `scipy.sparse` matrices by default (the dense
+    matrix has (b*m + 2*n*b) rows x n*b columns and collapses beyond a few
+    hundred slaves); set `OptimizerConfig.sparse=False` for the loop-built
+    dense reference assembly. With `warm_start=True` a feasible incumbent is
+    derived from the previous allocation via the greedy heuristic: its
+    objective value is added as a cutoff plane, and if HiGHS fails or times
+    out the incumbent is returned instead of None.
   * `GreedyOptimizer`-- fast DRF-guided heuristic with placement stickiness
-                        (used for very large instances and as a cross-check).
+    (used for very large instances and as a cross-check). Hot paths are
+    incremental/vectorized so a 500-app x 1000-slave solve stays in the
+    tens of milliseconds.
+  * `AutoOptimizer`  -- size-aware dispatcher: exact MILP while
+    n_apps * b <= `OptimizerConfig.auto_switch_vars`, greedy beyond.
 
 Paper fallback: if P2 is infeasible, "Dorm would keep existing resource
 allocations until more running applications finish" -- `solve()` returns None
@@ -37,6 +48,7 @@ from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
                     validate_allocation)
 
 try:  # scipy is available in this environment; keep the import soft anyway.
+    from scipy import sparse as _sp
     from scipy.optimize import LinearConstraint, milp
     from scipy.optimize import Bounds as _Bounds
     _HAVE_SCIPY = True
@@ -54,6 +66,10 @@ class OptimizerConfig:
     ceil_adjust_budget: bool = True     # Eq 16's ceil (integer count anyway)
     time_limit_s: float = 30.0
     mip_rel_gap: float = 1e-4
+    # -- scale knobs ------------------------------------------------------
+    sparse: bool = True          # sparse MILP constraint assembly
+    warm_start: bool = False     # greedy incumbent: cutoff + timeout fallback
+    auto_switch_vars: int = 2_000    # AutoOptimizer: MILP while n*b <= this
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -86,6 +102,15 @@ def _util_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     return ratios.sum(axis=1)
 
 
+def _drf_targets(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                 ) -> Tuple[Dict[str, int], np.ndarray]:
+    """One progressive-filling pass -> (counts, s_hat vector in app order)."""
+    counts = drf_container_counts(apps, cluster)
+    shares = drf_shares(apps, cluster, counts=counts)
+    s_hat = np.array([shares[a.app_id] for a in apps])
+    return counts, s_hat
+
+
 class MilpOptimizer:
     """Exact P2 via scipy.optimize.milp (HiGHS)."""
 
@@ -94,34 +119,21 @@ class MilpOptimizer:
             raise RuntimeError("scipy not available; use GreedyOptimizer")
         self.cfg = cfg
 
-    def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-              prev: Optional[Allocation] = None,
-              ) -> Optional[Allocation]:
-        if not apps:
-            return Allocation.empty((), cluster.b)
-        n, b, m = len(apps), cluster.b, cluster.m
+    # ------------------------------------------------------ dense assembly
+
+    def _assemble_dense(self, apps, d, cap, g, s_hat_vec, prev_map, common,
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Loop-built dense (A, lb, ub) -- the reference assembly. Row order
+        must match `_assemble_sparse` exactly."""
+        n, b = d.shape[0], cap.shape[0]
+        m = cap.shape[1]
         app_ids = tuple(a.app_id for a in apps)
-        d = demand_matrix(apps)                     # (n, m)
-        cap = cluster.capacity_matrix()             # (b, m)
-        g = _dominant_coeff(apps, cluster)          # (n,)
-        s_hat = drf_shares(apps, cluster)
-        s_hat_vec = np.array([s_hat[a] for a in app_ids])
-
-        prev_map = prev.as_dict() if prev is not None else {}
-        common = [i for i, a in enumerate(app_ids) if a in prev_map]
         n_r = len(common)
-
-        # Variable layout: [ x (n*b ints) | l (n cont) | r (n_r binary) ]
         nx, nl = n * b, n
         nvar = nx + nl + n_r
 
         def xi(i: int, j: int) -> int:
             return i * b + j
-
-        c_obj = np.zeros(nvar)
-        util_w = _util_coeff(apps, cluster)         # (n,)
-        for i in range(n):
-            c_obj[i * b:(i + 1) * b] = -util_w[i]   # milp minimizes
 
         A_rows: List[np.ndarray] = []
         lb_rows: List[float] = []
@@ -184,13 +196,178 @@ class MilpOptimizer:
             row[nx + nl:] = 1.0
             add(row, -np.inf, float(adjust_budget(self.cfg, n_r)))
 
-        A = np.stack(A_rows)
-        constraints = LinearConstraint(A, np.array(lb_rows), np.array(ub_rows))
+        return np.stack(A_rows), np.array(lb_rows), np.array(ub_rows)
+
+    # ----------------------------------------------------- sparse assembly
+
+    def _assemble_sparse(self, apps, d, cap, g, s_hat_vec, prev_map, common):
+        """Vectorized COO assembly of the same constraint system (same row
+        order as `_assemble_dense`), returned as a csr_array."""
+        n, b = d.shape[0], cap.shape[0]
+        m = cap.shape[1]
+        app_ids = tuple(a.app_id for a in apps)
+        n_r = len(common)
+        nx, nl = n * b, n
+        nvar = nx + nl + n_r
+
+        rows: List[np.ndarray] = []
+        cols: List[np.ndarray] = []
+        vals: List[np.ndarray] = []
+        lbs: List[np.ndarray] = []
+        ubs: List[np.ndarray] = []
+
+        # Eq 6: capacity per (slave, used resource); row id = j * nk + q.
+        ks = np.flatnonzero((d > 0).any(axis=0))
+        nk = ks.size
+        if nk:
+            jj, qq, ii = np.meshgrid(np.arange(b), np.arange(nk),
+                                     np.arange(n), indexing="ij")
+            v = d[ii.ravel(), ks[qq.ravel()]]
+            nz = v != 0
+            rows.append((jj.ravel() * nk + qq.ravel())[nz])
+            cols.append((ii.ravel() * b + jj.ravel())[nz])
+            vals.append(v[nz])
+            lbs.append(np.full(b * nk, -np.inf))
+            ubs.append(cap[:, ks].ravel())
+        o1 = b * nk
+
+        # Eqs 7-8: container-count bounds; row id = o1 + i.
+        rows.append(o1 + np.repeat(np.arange(n), b))
+        cols.append(np.arange(nx))
+        vals.append(np.ones(nx))
+        lbs.append(np.array([a.n_min for a in apps], dtype=np.float64))
+        ubs.append(np.array([a.n_max for a in apps], dtype=np.float64))
+        o2 = o1 + n
+
+        # Eqs 11-12: rows o2 + 2i (g N - l <= s_hat), o2 + 2i + 1 (>= s_hat).
+        r_hi = o2 + 2 * np.repeat(np.arange(n), b)
+        rows.extend([r_hi, r_hi + 1,
+                     o2 + 2 * np.arange(n), o2 + 2 * np.arange(n) + 1])
+        cols.extend([np.arange(nx), np.arange(nx),
+                     nx + np.arange(n), nx + np.arange(n)])
+        gg = np.repeat(g, b)
+        vals.extend([gg, gg, -np.ones(n), np.ones(n)])
+        lb_f = np.empty(2 * n)
+        ub_f = np.empty(2 * n)
+        lb_f[0::2], lb_f[1::2] = -np.inf, s_hat_vec
+        ub_f[0::2], ub_f[1::2] = s_hat_vec, np.inf
+        lbs.append(lb_f)
+        ubs.append(ub_f)
+        o3 = o2 + 2 * n
+
+        # Eqs 13-14: per (ridx, j) a <=/>= pair; row id = o3 + 2*(ridx*b + j).
+        if n_r:
+            bigM = float(max(a.n_max for a in apps) + 1)
+            ci = np.array(common)
+            xprev = np.stack([prev_map[app_ids[i]] for i in common]
+                             ).astype(np.float64)                   # (n_r, b)
+            rr, jj = np.meshgrid(np.arange(n_r), np.arange(b), indexing="ij")
+            base = o3 + 2 * (rr.ravel() * b + jj.ravel())
+            xcols = (ci[rr.ravel()] * b + jj.ravel())
+            rows.extend([base, base + 1, base, base + 1])
+            cols.extend([xcols, xcols,
+                         nx + nl + rr.ravel(), nx + nl + rr.ravel()])
+            vals.extend([np.ones(n_r * b), np.ones(n_r * b),
+                         np.full(n_r * b, -bigM), np.full(n_r * b, bigM)])
+            lb_a = np.empty(2 * n_r * b)
+            ub_a = np.empty(2 * n_r * b)
+            lb_a[0::2], lb_a[1::2] = -np.inf, xprev.ravel()
+            ub_a[0::2], ub_a[1::2] = xprev.ravel(), np.inf
+            lbs.append(lb_a)
+            ubs.append(ub_a)
+        o4 = o3 + 2 * n_r * b
+
+        # Eq 15: total fairness loss budget.
+        rows.append(np.full(nl, o4))
+        cols.append(nx + np.arange(nl))
+        vals.append(np.ones(nl))
+        lbs.append(np.array([-np.inf]))
+        ubs.append(np.array([fairness_budget(self.cfg, m)]))
+        n_rows = o4 + 1
+
+        # Eq 16: adjustment budget.
+        if n_r:
+            rows.append(np.full(n_r, n_rows))
+            cols.append(nx + nl + np.arange(n_r))
+            vals.append(np.ones(n_r))
+            lbs.append(np.array([-np.inf]))
+            ubs.append(np.array([float(adjust_budget(self.cfg, n_r))]))
+            n_rows += 1
+
+        A = _sp.coo_array(
+            (np.concatenate(vals),
+             (np.concatenate(rows), np.concatenate(cols))),
+            shape=(n_rows, nvar)).tocsc()
+        # HiGHS's cython wrapper requires 32-bit sparse indices.
+        A.indices = A.indices.astype(np.int32)
+        A.indptr = A.indptr.astype(np.int32)
+        return A, np.concatenate(lbs), np.concatenate(ubs)
+
+    # --------------------------------------------------------------- solve
+
+    def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+              prev: Optional[Allocation] = None,
+              ) -> Optional[Allocation]:
+        if not apps:
+            return Allocation.empty((), cluster.b)
+        n, b, m = len(apps), cluster.b, cluster.m
+        app_ids = tuple(a.app_id for a in apps)
+        d = demand_matrix(apps)                     # (n, m)
+        cap = cluster.capacity_matrix()             # (b, m)
+        g = _dominant_coeff(apps, cluster)          # (n,)
+        drf_counts, s_hat_vec = _drf_targets(apps, cluster)
+
+        prev_map = prev.as_dict() if prev is not None else {}
+        common = [i for i, a in enumerate(app_ids) if a in prev_map]
+        n_r = len(common)
+
+        # Variable layout: [ x (n*b ints) | l (n cont) | r (n_r binary) ]
+        nx, nl = n * b, n
+        nvar = nx + nl + n_r
+
+        c_obj = np.zeros(nvar)
+        util_w = _util_coeff(apps, cluster)         # (n,)
+        c_obj[:nx] = -np.repeat(util_w, b)          # milp minimizes
+
+        if self.cfg.sparse:
+            A, lb_rows, ub_rows = self._assemble_sparse(
+                apps, d, cap, g, s_hat_vec, prev_map, common)
+        else:
+            A, lb_rows, ub_rows = self._assemble_dense(
+                apps, d, cap, g, s_hat_vec, prev_map, common)
+
+        # Warm start: greedy incumbent -> objective cutoff plane + fallback.
+        # The incumbent is only usable if it honors the Eq-15 budget itself:
+        # greedy packing can undershoot its DRF targets, and returning (or
+        # cutting off against) a budget-violating incumbent would silently
+        # replace the exact solver's correct "infeasible" answer.
+        incumbent: Optional[Allocation] = None
+        if self.cfg.warm_start:
+            incumbent = GreedyOptimizer(self.cfg).solve(
+                apps, cluster, prev, _targets=(drf_counts, s_hat_vec))
+            if incumbent is not None:
+                inc_loss = float(np.abs(
+                    g * incumbent.x.sum(axis=1) - s_hat_vec).sum())
+                if inc_loss > fairness_budget(self.cfg, m) + 1e-9:
+                    incumbent = None
+            if incumbent is not None:
+                inc_obj = float(-util_w @ incumbent.x.sum(axis=1))
+                cut = np.zeros((1, nvar))
+                cut[0, :nx] = c_obj[:nx]
+                if self.cfg.sparse:
+                    A = _sp.vstack([A, _sp.csc_array(cut)]).tocsc()
+                    A.indices = A.indices.astype(np.int32)
+                    A.indptr = A.indptr.astype(np.int32)
+                else:
+                    A = np.vstack([A, cut])
+                lb_rows = np.concatenate([lb_rows, [-np.inf]])
+                ub_rows = np.concatenate([ub_rows, [inc_obj + 1e-9]])
+
+        constraints = LinearConstraint(A, lb_rows, ub_rows)
 
         lb = np.zeros(nvar)
         ub = np.full(nvar, np.inf)
-        for i in range(n):
-            ub[i * b:(i + 1) * b] = apps[i].n_max
+        ub[:nx] = np.repeat(np.array([a.n_max for a in apps], np.float64), b)
         ub[nx + nl:] = 1.0
         integrality = np.concatenate([
             np.ones(nx), np.zeros(nl), np.ones(n_r)])
@@ -200,7 +377,7 @@ class MilpOptimizer:
                    options={"time_limit": self.cfg.time_limit_s,
                             "mip_rel_gap": self.cfg.mip_rel_gap})
         if not res.success or res.x is None:
-            return None
+            return incumbent            # None unless warm_start found one
         x = np.rint(res.x[:nx]).astype(np.int64).reshape(n, b)
         alloc = Allocation(app_ids, x)
         validate_allocation(alloc, apps, cluster)
@@ -213,12 +390,14 @@ class GreedyOptimizer:
     1. Target container counts from weighted-DRF progressive filling (the
        fairness-optimal point, loss ~= 0), then greedily add containers to the
        apps with the best utilization-per-fairness-cost while the Eq-15 budget
-       holds (utilization maximization is P2's objective).
+       holds (utilization maximization is P2's objective). The Eq-15 check is
+       maintained incrementally (O(1) per candidate container).
     2. Place counts onto slaves, preferring each app's previous placement
-       (stickiness) and best-fit for the rest.
+       (stickiness, closed-form per app) and vectorized best-fit for the rest.
     3. Enforce the Eq-16 adjustment budget by reverting whole apps (restore
        their previous rows) in order of least utilization gain until within
-       budget; reverted capacity is reused where possible.
+       budget; reverted capacity is reused where possible. Feasibility of a
+       revert is checked against an incrementally maintained usage matrix.
     """
 
     def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
@@ -226,7 +405,10 @@ class GreedyOptimizer:
 
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
               prev: Optional[Allocation] = None,
-              ) -> Optional[Allocation]:
+              _targets=None) -> Optional[Allocation]:
+        """`_targets`: optional precomputed `_drf_targets` result, so a
+        caller that already ran the progressive filling (MilpOptimizer's
+        warm start) does not pay for a second pass."""
         if not apps:
             return Allocation.empty((), cluster.b)
         n, b, m = len(apps), cluster.b, cluster.m
@@ -235,12 +417,11 @@ class GreedyOptimizer:
         cap = cluster.capacity_matrix().astype(np.float64)
         g = _dominant_coeff(apps, cluster)
         util_w = _util_coeff(apps, cluster)
-        s_hat = drf_shares(apps, cluster)
-        s_hat_vec = np.array([s_hat[a] for a in app_ids])
+        drf_counts, s_hat_vec = (_targets if _targets is not None
+                                 else _drf_targets(apps, cluster))
         budget_l = fairness_budget(self.cfg, m)
 
         # -- step 1: choose target counts.
-        drf_counts = drf_container_counts(apps, cluster)
         target = np.array([drf_counts[a] for a in app_ids], dtype=np.int64)
         if np.any(target < np.array([a.n_min for a in apps])):
             # Aggregate capacity cannot host every app's minimum -> infeasible;
@@ -251,50 +432,87 @@ class GreedyOptimizer:
             return float(np.abs(g * counts - s_hat_vec).sum())
 
         # Greedy utilization push above the DRF point within the Eq-15 budget.
-        remaining = cluster.total_capacity() - target @ d
+        # Pure-python incremental loop: the loss delta of one extra container
+        # is local to the app, so the Eq-15 re-check is O(1), not O(n).
+        remaining = (cluster.total_capacity() - target @ d).tolist()
+        d_list = d.tolist()
+        g_list = g.tolist()
+        s_hat_list = s_hat_vec.tolist()
+        tgt = target.tolist()
+        nmax_list = [a.n_max for a in apps]
+        cur_loss = sum(abs(g_list[i] * tgt[i] - s_hat_list[i])
+                       for i in range(n))
+        order = np.argsort(-util_w).tolist()  # best utilization gain first
+        rng_m = range(m)
         improved = True
         while improved:
             improved = False
-            order = np.argsort(-util_w)       # best utilization gain first
             for i in order:
-                if target[i] >= apps[i].n_max:
+                if tgt[i] >= nmax_list[i]:
                     continue
-                if not np.all(d[i] <= remaining + 1e-9):
+                di = d_list[i]
+                if any(di[k] > remaining[k] + 1e-9 for k in rng_m):
                     continue
-                target[i] += 1
-                if total_loss(target) <= budget_l + 1e-9:
-                    remaining = remaining - d[i]
+                old_li = abs(g_list[i] * tgt[i] - s_hat_list[i])
+                new_li = abs(g_list[i] * (tgt[i] + 1) - s_hat_list[i])
+                if cur_loss - old_li + new_li <= budget_l + 1e-9:
+                    tgt[i] += 1
+                    cur_loss += new_li - old_li
+                    for k in rng_m:
+                        remaining[k] -= di[k]
                     improved = True
-                else:
-                    target[i] -= 1
+        target = np.array(tgt, dtype=np.int64)
 
         # -- step 2: placement with stickiness.
         prev_map = prev.as_dict() if prev is not None else {}
         x = np.zeros((n, b), dtype=np.int64)
         free = cap.copy()
-        # Keep previous placements first (up to the new target).
+        # Keep previous placements first (up to the new target): per app the
+        # per-slave keepable count has the closed form
+        # min(prev_j, max q: q*d <= free_j + eps), capped cumulatively.
         for i, a in enumerate(app_ids):
-            if a in prev_map:
-                keep = np.minimum(prev_map[a], 10**9)
-                total_keep = 0
-                for j in range(b):
-                    cnt = int(keep[j])
-                    while cnt > 0 and total_keep + x[i].sum() < target[i] and \
-                            np.all(d[i] <= free[j] + 1e-9):
-                        x[i, j] += 1
-                        free[j] -= d[i]
-                        cnt -= 1
-        # Best-fit the remainder.
-        for i in range(n):
-            while x[i].sum() < target[i]:
-                fits = [j for j in range(b) if np.all(d[i] <= free[j] + 1e-9)]
-                if not fits:
-                    break
-                # best-fit: slave with least residual dominant capacity after.
-                j = min(fits, key=lambda jj: float(
-                    ((free[jj] - d[i]) / np.maximum(cap[jj], 1e-9)).sum()))
+            pr = prev_map.get(a)
+            if pr is None or target[i] <= 0:
+                continue
+            di = d[i]
+            pos = di > 0
+            if pos.any():
+                fit = np.floor((free[:, pos] + 1e-9) / di[pos]).min(axis=1)
+                fit = np.maximum(fit, 0.0).astype(np.int64)
+            else:
+                fit = np.full(b, int(target[i]), dtype=np.int64)
+            keep = np.minimum(np.asarray(pr, dtype=np.int64), fit)
+            csum = np.minimum(np.cumsum(keep), int(target[i]))
+            keep = np.diff(np.concatenate(([0], csum)))
+            if keep.any():
+                x[i] = keep
+                free -= keep[:, None] * di[None, :]
+        # Best-fit the remainder (one container at a time, vectorized over
+        # slaves: least residual normalized capacity after placing). Two
+        # passes: every app is raised to its n_min before anyone is topped
+        # up to the full target -- packing early apps to their whole target
+        # first would starve the tail below n_min on a saturated cluster
+        # and spuriously report P2 infeasible.
+        inv_cap = 1.0 / np.maximum(cap, 1e-9)
+
+        def place_up_to(i: int, limit: int) -> None:
+            di = d[i]
+            need = limit - int(x[i].sum())
+            while need > 0:
+                fits = (di <= free + 1e-9).all(axis=1)
+                if not fits.any():
+                    return
+                score = ((free - di) * inv_cap).sum(axis=1)
+                score[~fits] = np.inf
+                j = int(np.argmin(score))
                 x[i, j] += 1
-                free[j] -= d[i]
+                free[j] -= di
+                need -= 1
+
+        for i in range(n):
+            place_up_to(i, apps[i].n_min)
+        for i in range(n):
+            place_up_to(i, int(target[i]))
             if x[i].sum() < apps[i].n_min:
                 # Packing failed below n_min: give up -> infeasible signal.
                 return None
@@ -309,20 +527,23 @@ class GreedyOptimizer:
             # stay capacity-feasible; reverts free or consume capacity).
             changed.sort(key=lambda i: util_w[i] * (x[i].sum()
                                                     - prev_map[app_ids[i]].sum()))
-            while len(changed) > budget_r:
-                reverted = False
-                for pos in range(len(changed) - 1, -1, -1):
-                    i = changed[pos]
-                    trial = x.copy()
-                    trial[i] = prev_map[app_ids[i]]
-                    used = trial.T @ d
-                    if np.all(used <= cap + 1e-6):
-                        x = trial
-                        changed.pop(pos)
-                        reverted = True
-                        break
-                if not reverted:
-                    return None     # cannot satisfy Eq 16 -> infeasible
+            if len(changed) > budget_r:
+                used = x.T.astype(np.float64) @ d       # (b, m)
+                while len(changed) > budget_r:
+                    reverted = False
+                    for pos_i in range(len(changed) - 1, -1, -1):
+                        i = changed[pos_i]
+                        pr = prev_map[app_ids[i]]
+                        delta = (pr - x[i]).astype(np.float64)[:, None] \
+                            * d[i][None, :]
+                        if np.all(used + delta <= cap + 1e-6):
+                            used += delta
+                            x[i] = pr
+                            changed.pop(pos_i)
+                            reverted = True
+                            break
+                    if not reverted:
+                        return None     # cannot satisfy Eq 16 -> infeasible
             # Re-check fairness budget after reverts; if blown, also infeasible
             # (paper keeps previous allocation in that case).
             if total_loss(x.sum(axis=1)) > budget_l + 1e-6:
@@ -337,9 +558,35 @@ class GreedyOptimizer:
         return alloc
 
 
+class AutoOptimizer:
+    """Size-aware dispatcher: exact MILP while the instance is small enough
+    (n_apps * b <= cfg.auto_switch_vars), greedy heuristic beyond -- the
+    scale path for 1000-slave clusters where the MILP's n*b integer grid
+    is intractable."""
+
+    def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
+        self.cfg = cfg
+        self._milp = MilpOptimizer(cfg) if _HAVE_SCIPY else None
+        self._greedy = GreedyOptimizer(cfg)
+
+    def select(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec):
+        """The solver that `solve` would dispatch to for this instance."""
+        if self._milp is not None and \
+                len(apps) * cluster.b <= self.cfg.auto_switch_vars:
+            return self._milp
+        return self._greedy
+
+    def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+              prev: Optional[Allocation] = None,
+              ) -> Optional[Allocation]:
+        return self.select(apps, cluster).solve(apps, cluster, prev)
+
+
 def make_optimizer(kind: str, cfg: OptimizerConfig = OptimizerConfig()):
     if kind == "milp":
         return MilpOptimizer(cfg)
     if kind == "greedy":
         return GreedyOptimizer(cfg)
+    if kind == "auto":
+        return AutoOptimizer(cfg)
     raise ValueError(f"unknown optimizer kind: {kind!r}")

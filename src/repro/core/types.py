@@ -37,7 +37,14 @@ class ResourceVector:
         return len(self.values)
 
     def as_array(self) -> np.ndarray:
-        return np.asarray(self.values, dtype=np.float64)
+        """Cached read-only view -- this is called per container on hot
+        scheduling paths; callers must not mutate the result."""
+        arr = self.__dict__.get("_arr")
+        if arr is None:
+            arr = np.asarray(self.values, dtype=np.float64)
+            arr.flags.writeable = False
+            object.__setattr__(self, "_arr", arr)
+        return arr
 
     def __add__(self, other: "ResourceVector") -> "ResourceVector":
         return ResourceVector(tuple(a + b for a, b in zip(self.values, other.values)))
@@ -105,12 +112,23 @@ class ClusterSpec:
         return len(self.slaves)
 
     def capacity_matrix(self) -> np.ndarray:
-        """(b, m) per-slave capacities."""
-        return np.stack([s.capacity.as_array() for s in self.slaves])
+        """(b, m) per-slave capacities (cached, read-only: stacking 1000
+        slave vectors per call would dominate large-cluster scheduling)."""
+        cm = self.__dict__.get("_cap_matrix")
+        if cm is None:
+            cm = np.stack([s.capacity.as_array() for s in self.slaves])
+            cm.flags.writeable = False
+            object.__setattr__(self, "_cap_matrix", cm)
+        return cm
 
     def total_capacity(self) -> np.ndarray:
-        """(m,) cluster-wide capacity  sum_h c_{h,k}."""
-        return self.capacity_matrix().sum(axis=0)
+        """(m,) cluster-wide capacity  sum_h c_{h,k} (cached, read-only)."""
+        tc = self.__dict__.get("_total_cap")
+        if tc is None:
+            tc = self.capacity_matrix().sum(axis=0)
+            tc.flags.writeable = False
+            object.__setattr__(self, "_total_cap", tc)
+        return tc
 
     @staticmethod
     def homogeneous(n_slaves: int, capacity: ResourceVector,

@@ -10,6 +10,13 @@ Reproduces the Sensetime production-cluster workload model:
 Also defines the paper's testbed (§V-A.1): 20 DormSlaves, 240 CPU cores,
 5 GPUs, 2.5 TB RAM total (5 GPU slaves + 15 CPU-only slaves), and the baseline
 ("Swarm") static container counts 8, 8, 4, 2, 2, 2, 3 per class (§V-A.4).
+
+Beyond the paper: a large-scale scenario generator (`TraceConfig`,
+`generate_trace`, `heterogeneous_cluster`) producing diurnal non-homogeneous
+Poisson arrivals, heterogeneous slave flavors, and bursty short-lived serving
+jobs -- the regimes Shockwave/OASiS-style evaluations use to stress dynamic
+schedulers far past the 40-node Table-II trace. Used by
+benchmarks/bench_scale.py and examples/large_cluster.py.
 """
 from __future__ import annotations
 
@@ -117,4 +124,149 @@ def generate_workload(seed: int = 0,
         )
         apps.append(WorkloadApp(spec=spec, class_index=ci,
                                 base_duration_s=dur))
+    return apps
+
+
+# ---------------------------------------------------------------------------
+# Large-scale scenario generation (beyond the paper's Table-II trace)
+# ---------------------------------------------------------------------------
+
+# Slave flavors for heterogeneous clusters: (name, (cpu, gpu, ram_gb)).
+SLAVE_FLAVORS: Tuple[Tuple[str, Tuple[int, int, int]], ...] = (
+    ("gpu-box", (16, 4, 192)),
+    ("big-cpu", (32, 0, 256)),
+    ("small-cpu", (8, 0, 64)),
+)
+
+# Scale application classes: (executor, model, (cpu, gpu, ram_gb), weight,
+# n_max, n_min, kind). Training rows extend Table II with wider elasticity;
+# serving rows are short-lived, low-n_min, high-n_max jobs that arrive in
+# bursts (traffic spikes).
+SCALE_CLASSES: Tuple[Tuple[str, str, Tuple[int, int, int], int, int, int, str],
+                     ...] = (
+    ("MxNet",      "LR",         (2, 0, 8),  1, 64, 1, "train"),
+    ("TensorFlow", "MF",         (2, 0, 6),  2, 64, 1, "train"),
+    ("MPI-Caffe",  "CaffeNet",   (4, 0, 6),  4, 32, 1, "train"),
+    ("MxNet",      "VGG-16",     (4, 1, 32), 1, 16, 1, "train"),
+    ("TensorFlow", "GoogLeNet",  (6, 1, 16), 1, 16, 1, "train"),
+    ("Petuum",     "AlexNet",    (6, 1, 16), 2, 16, 1, "train"),
+    ("MPI-Caffe",  "ResNet-50",  (4, 1, 32), 4, 16, 2, "train"),
+    ("Serving",    "Ranker",     (2, 0, 4),  1, 48, 1, "serve"),
+    ("Serving",    "Embedder",   (4, 0, 8),  2, 32, 1, "serve"),
+    ("Serving",    "LLM-Shard",  (8, 1, 48), 1, 12, 1, "serve"),
+)
+_SERVE_CLASS_IDS = tuple(i for i, c in enumerate(SCALE_CLASSES)
+                         if c[6] == "serve")
+_TRAIN_CLASS_IDS = tuple(i for i, c in enumerate(SCALE_CLASSES)
+                         if c[6] == "train")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    """Knobs for the large-scale scenario generator.
+
+    Arrivals follow a non-homogeneous Poisson process with rate
+    lambda(t) = lambda0 * (1 + diurnal_amplitude * sin(2 pi t / period))
+    (lambda0 = 1 / mean_interarrival_s), sampled by thinning. A
+    `burst_prob` fraction of serving arrivals spawns a whole burst of
+    jobs at the same instant (traffic spike -> tests event batching)."""
+    n_apps: int = 500
+    seed: int = 0
+    mean_interarrival_s: float = 120.0
+    diurnal_amplitude: float = 0.6            # in [0, 1)
+    diurnal_period_s: float = 24 * 3600.0
+    serving_fraction: float = 0.35            # share of serve-class arrivals
+    burst_prob: float = 0.15                  # serving arrivals that burst
+    burst_size: Tuple[int, int] = (3, 10)     # inclusive burst-size range
+    train_duration_s: Tuple[float, float] = (1800.0, 6 * 3600.0)
+    serve_duration_s: Tuple[float, float] = (600.0, 2 * 3600.0)
+
+
+def heterogeneous_cluster(n_slaves: int = 1000, seed: int = 0,
+                          flavor_weights: Tuple[float, ...] = (0.2, 0.3, 0.5),
+                          ) -> ClusterSpec:
+    """A `n_slaves` cluster mixing SLAVE_FLAVORS in `flavor_weights`
+    proportions (GPU boxes, big CPU, small CPU), shuffled deterministically."""
+    w = np.asarray(flavor_weights, dtype=np.float64)
+    w = w / w.sum()
+    counts = np.floor(w * n_slaves).astype(np.int64)
+    counts[0] += n_slaves - int(counts.sum())      # remainder to GPU boxes
+    flavors: List[int] = []
+    for fi, c in enumerate(counts):
+        flavors.extend([fi] * int(c))
+    rng = np.random.default_rng(seed)
+    rng.shuffle(flavors)
+    slaves = tuple(
+        SlaveSpec(slave_id=f"slave-{j:04d}",
+                  capacity=ResourceVector.of(*SLAVE_FLAVORS[fi][1]))
+        for j, fi in enumerate(flavors))
+    return ClusterSpec(resource_types=("cpu", "gpu", "ram"), slaves=slaves)
+
+
+def _diurnal_arrival_times(rng: np.random.Generator, n: int,
+                           mean_interarrival_s: float, amplitude: float,
+                           period_s: float) -> List[float]:
+    """First `n` arrival times of the NHPP, by Lewis-Shedler thinning."""
+    lam0 = 1.0 / mean_interarrival_s
+    lam_max = lam0 * (1.0 + amplitude)
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        t += float(rng.exponential(1.0 / lam_max))
+        lam_t = lam0 * (1.0 + amplitude * np.sin(2 * np.pi * t / period_s))
+        if rng.uniform() * lam_max <= lam_t:
+            out.append(t)
+    return out
+
+
+def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
+    """`cfg.n_apps` applications with diurnal Poisson arrivals; serving
+    arrivals may burst (several jobs at the same timestamp). `class_index`
+    indexes SCALE_CLASSES. `serial_work` anchors each job's sampled duration
+    at the midpoint of its [n_min, n_max] elasticity range, so schedulers
+    that scale a job out finish it early (speedup) and starved jobs drag."""
+    rng = np.random.default_rng(cfg.seed)
+    times = _diurnal_arrival_times(rng, cfg.n_apps, cfg.mean_interarrival_s,
+                                   cfg.diurnal_amplitude, cfg.diurnal_period_s)
+    apps: List[WorkloadApp] = []
+    slot = 0
+    ti = 0
+    while len(apps) < cfg.n_apps:
+        t = times[min(ti, len(times) - 1)]
+        ti += 1
+        serving = rng.uniform() < cfg.serving_fraction
+        if serving and rng.uniform() < cfg.burst_prob:
+            burst = int(rng.integers(cfg.burst_size[0],
+                                     cfg.burst_size[1] + 1))
+        else:
+            burst = 1
+        burst = min(burst, cfg.n_apps - len(apps))
+        cls_pool = _SERVE_CLASS_IDS if serving else _TRAIN_CLASS_IDS
+        for _ in range(burst):
+            ci = int(cls_pool[int(rng.integers(len(cls_pool)))])
+            executor, model, demand, weight, n_max, n_min, kind = \
+                SCALE_CLASSES[ci]
+            lo, hi = (cfg.serve_duration_s if kind == "serve"
+                      else cfg.train_duration_s)
+            # Lognormal-ish spread inside [lo, hi]: median at the geometric
+            # midpoint, clipped to the range.
+            mu = 0.5 * (np.log(lo) + np.log(hi))
+            sigma = (np.log(hi) - np.log(lo)) / 4.0
+            dur = float(np.clip(rng.lognormal(mu, sigma), lo, hi))
+            anchor = max(1, (n_min + n_max) // 2)
+            spec = ApplicationSpec(
+                app_id=f"job-{slot:04d}-{model}",
+                executor=executor,
+                demand=ResourceVector.of(*demand),
+                weight=weight,
+                n_max=n_max,
+                n_min=n_min,
+                cmd=("start.sh", "resume.sh"),
+                model=model,
+                serial_work=dur * anchor,
+                submit_time=t,
+            )
+            apps.append(WorkloadApp(spec=spec, class_index=ci,
+                                    base_duration_s=dur))
+            slot += 1
     return apps

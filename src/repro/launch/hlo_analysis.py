@@ -130,15 +130,21 @@ def _analyze(c: Computation, comps: Dict[str, Computation]) -> None:
             if "f32[" in type_str:
                 c.coll_bytes_f32[cm.group(1)] += by * _WEIGHT[cm.group(1)]
             continue
-        dm = re.search(r"\bdot\(\s*%?([\w.\-]+)", rest)
+        dm = re.search(r"\bdot\(", rest)
         if dm and " dot(" in rest:
             con = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
             if not con:
                 continue
-            lhs_rest = shapes.get(dm.group(1))
-            if lhs_rest is None:
-                continue
-            sm = _SHAPE.search(lhs_rest)
+            # Compiled HLO prints operands with inline types --
+            # `dot(f32[8,16]{1,0} %Arg_0.1, ...)` -- so the lhs shape is
+            # right there in the call; fall back to the instruction-shape
+            # map for the bare `dot(%name, ...)` form.
+            operand = rest[dm.end():]
+            sm = re.match(r"\s*" + _SHAPE.pattern, operand)
+            if sm is None:
+                nm = re.match(r"\s*%?([\w.\-]+)", operand)
+                lhs_rest = shapes.get(nm.group(1)) if nm else None
+                sm = _SHAPE.search(lhs_rest) if lhs_rest is not None else None
             if sm is None:
                 continue
             dims = [int(d) for d in sm.group(2).split(",") if d]

@@ -1,0 +1,171 @@
+"""Scale-path tests: the vectorized simulator is a bit-exact drop-in for the
+seed event loop, sparse MILP assembly matches the dense reference, the auto
+optimizer switches at the size threshold, and the trace generator / event
+batching behave."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, AutoOptimizer, ClusterSimulator,
+                        ClusterSpec, DormMaster, GreedyOptimizer,
+                        MilpOptimizer, OptimizerConfig, RecordingProtocol,
+                        ReferenceClusterSimulator, ResourceVector,
+                        SCALE_CLASSES, StaticScheduler, TraceConfig,
+                        generate_trace, generate_workload,
+                        heterogeneous_cluster, paper_testbed,
+                        resource_utilization, validate_allocation,
+                        BASELINE_STATIC_CONTAINERS)
+
+
+def _dorm(cluster, theta=(0.2, 0.2)):
+    return DormMaster(cluster, "greedy", OptimizerConfig(*theta),
+                      protocol=RecordingProtocol())
+
+
+def _assert_same_result(a, b):
+    assert len(a.samples) == len(b.samples)
+    for sa, sb in zip(a.samples, b.samples):
+        assert sa.t == pytest.approx(sb.t, abs=1e-9)
+        assert sa.utilization == pytest.approx(sb.utilization, abs=1e-9)
+        assert sa.fairness_loss == pytest.approx(sb.fairness_loss, abs=1e-9)
+        assert sa.adjustment_overhead == sb.adjustment_overhead
+        assert sa.running == sb.running
+        assert sa.pending == sb.pending
+    assert a.total_adjustments == b.total_adjustments
+    assert a.completions.keys() == b.completions.keys()
+    for app_id, ra in a.completions.items():
+        rb = b.completions[app_id]
+        assert ra.n_adjustments == rb.n_adjustments
+        assert ra.remaining_work == pytest.approx(rb.remaining_work, abs=1e-9)
+        assert ra.paused_until == pytest.approx(rb.paused_until, abs=1e-9)
+        if ra.finished_at is None:
+            assert rb.finished_at is None
+        else:
+            assert ra.finished_at == pytest.approx(rb.finished_at, abs=1e-9)
+
+
+def test_vectorized_matches_reference_on_table_ii_dorm():
+    """Golden: the Table-II workload under Dorm produces an identical
+    MetricSample timeline in the vectorized and reference simulators."""
+    wl = generate_workload(seed=0)
+    cluster = paper_testbed()
+    ref = ReferenceClusterSimulator(_dorm(cluster), wl,
+                                    adjustment_cost_s=60.0,
+                                    horizon_s=48 * 3600).run()
+    vec = ClusterSimulator(_dorm(cluster), wl, adjustment_cost_s=60.0,
+                           horizon_s=48 * 3600).run()
+    _assert_same_result(ref, vec)
+
+
+def test_vectorized_matches_reference_on_table_ii_static():
+    """Golden, baseline scheduler path (exercises rate_multiplier too)."""
+    wl = generate_workload(seed=1)[:25]
+    cluster = paper_testbed()
+    static = {w.spec.app_id: BASELINE_STATIC_CONTAINERS[w.class_index]
+              for w in wl}
+    ref = ReferenceClusterSimulator(StaticScheduler(cluster, static), wl,
+                                    rate_multiplier=0.8,
+                                    horizon_s=24 * 3600).run()
+    vec = ClusterSimulator(StaticScheduler(cluster, static), wl,
+                           rate_multiplier=0.8,
+                           horizon_s=24 * 3600).run()
+    _assert_same_result(ref, vec)
+
+
+def _small_instance():
+    cluster = ClusterSpec.homogeneous(4, ResourceVector.of(8, 1, 32))
+    apps = [
+        ApplicationSpec("a1", "MxNet", ResourceVector.of(2, 0, 8), 1, 8, 1),
+        ApplicationSpec("a2", "TF", ResourceVector.of(2, 0, 6), 2, 8, 1),
+        ApplicationSpec("a3", "Caffe", ResourceVector.of(1, 1, 8), 1, 4, 1),
+    ]
+    return cluster, apps
+
+
+def test_sparse_dense_milp_same_objective():
+    """The vectorized scipy.sparse assembly and the loop-built dense
+    reference assembly describe the same MILP: equal objective values,
+    with and without a previous allocation (adjustment constraints)."""
+    cluster, apps = _small_instance()
+    sparse_opt = MilpOptimizer(OptimizerConfig(0.2, 0.2, sparse=True))
+    dense_opt = MilpOptimizer(OptimizerConfig(0.2, 0.2, sparse=False))
+
+    a_s = sparse_opt.solve(apps, cluster, None)
+    a_d = dense_opt.solve(apps, cluster, None)
+    u_s = resource_utilization(a_s, apps, cluster)
+    u_d = resource_utilization(a_d, apps, cluster)
+    assert u_s == pytest.approx(u_d, abs=1e-6)
+
+    # With a previous allocation + one new app: exercises Eqs 13-14/16 rows.
+    apps4 = apps + [ApplicationSpec("a4", "MxNet",
+                                    ResourceVector.of(2, 0, 8), 1, 8, 1)]
+    b_s = sparse_opt.solve(apps4, cluster, a_s)
+    b_d = dense_opt.solve(apps4, cluster, a_s)
+    assert (b_s is None) == (b_d is None)
+    if b_s is not None:
+        validate_allocation(b_s, apps4, cluster)
+        assert resource_utilization(b_s, apps4, cluster) == pytest.approx(
+            resource_utilization(b_d, apps4, cluster), abs=1e-6)
+
+
+def test_auto_optimizer_switches_at_threshold():
+    cluster, apps = _small_instance()
+    auto = AutoOptimizer(OptimizerConfig(0.2, 0.2, auto_switch_vars=100))
+    assert isinstance(auto.select(apps, cluster), MilpOptimizer)
+    big = ClusterSpec.homogeneous(64, ResourceVector.of(8, 1, 32))
+    assert isinstance(auto.select(apps, big), GreedyOptimizer)  # 3*64 > 100
+    alloc = auto.solve(apps, big, None)
+    assert alloc is not None
+    validate_allocation(alloc, apps, big)
+
+
+def test_warm_start_keeps_small_instances_exact():
+    """warm_start adds a cutoff plane from the greedy incumbent; on a small
+    feasible instance the MILP optimum must be unchanged."""
+    cluster, apps = _small_instance()
+    cold = MilpOptimizer(OptimizerConfig(0.2, 0.2)).solve(apps, cluster, None)
+    warm_opt = MilpOptimizer(OptimizerConfig(0.2, 0.2, warm_start=True))
+    warm = warm_opt.solve(apps, cluster, cold)
+    assert warm is not None
+    validate_allocation(warm, apps, cluster)
+    assert resource_utilization(warm, apps, cluster) >= \
+        resource_utilization(cold, apps, cluster) - 1e-6
+
+
+def test_trace_generator_shape_and_arrivals():
+    cfg = TraceConfig(n_apps=200, seed=7)
+    wl = generate_trace(cfg)
+    assert len(wl) == 200
+    times = [w.spec.submit_time for w in wl]
+    assert times == sorted(times)
+    assert len({w.spec.app_id for w in wl}) == 200
+    kinds = {SCALE_CLASSES[w.class_index][6] for w in wl}
+    assert kinds == {"train", "serve"}      # both job populations present
+    # Bursts exist: some serving arrivals share a timestamp.
+    assert len(set(times)) < len(times)
+    for w in wl:
+        _, _, demand, weight, n_max, n_min, _ = SCALE_CLASSES[w.class_index]
+        assert w.spec.n_min == n_min and w.spec.n_max == n_max
+        assert w.spec.serial_work > 0
+
+
+def test_heterogeneous_cluster_mixes_flavors():
+    cluster = heterogeneous_cluster(100, seed=3)
+    assert cluster.b == 100
+    caps = {tuple(s.capacity.values) for s in cluster.slaves}
+    assert len(caps) == 3                   # all three flavors present
+    assert cluster.total_capacity()[1] > 0  # some GPUs in the mix
+
+
+def test_event_batching_coalesces_bursts():
+    """With a batch window, a burst of coincident arrivals is admitted in
+    one scheduler pass: fewer reallocation events, same completions."""
+    cfg = TraceConfig(n_apps=60, seed=5, mean_interarrival_s=300.0,
+                      serving_fraction=0.8, burst_prob=0.5)
+    wl = generate_trace(cfg)
+    cluster = heterogeneous_cluster(40, seed=0)
+    one_by_one = ClusterSimulator(_dorm(cluster), wl,
+                                  horizon_s=24 * 3600).run()
+    batched = ClusterSimulator(_dorm(cluster), wl, horizon_s=24 * 3600,
+                               batch_window_s=120.0).run()
+    assert len(batched.samples) < len(one_by_one.samples)
+    assert len(batched.durations()) == len(one_by_one.durations())

@@ -3,6 +3,8 @@ work conservation, capacity safety over time, fairness budgets under random
 workloads -- the simulation-level counterpart of tests/test_properties.py."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ApplicationSpec, ClusterSimulator, ClusterSpec,
