@@ -1,57 +1,147 @@
 """Large-scale simulation benchmark: Dorm on a 1000-slave heterogeneous
-cluster under a 500-app diurnal/bursty trace (the scale path: vectorized
-simulator + auto MILP->greedy optimizer switch + event batching).
+cluster under a 500-app diurnal/bursty trace, driven through the shared
+`repro.core.runtime` event loop.
 
-Acceptance target: the default run completes end-to-end in < 60 s on CPU.
+Two measured runs of the SAME trace:
+  * incremental ON  (per-event incremental DRF refill + delta reallocation)
+  * incremental OFF (the seed's full re-solve per event)
+The timelines must be bit-exact (the incremental path is a pure fast path);
+the per-event policy-time ratio is the incremental speedup. Results go to
+stdout as CSV rows and to `BENCH_scale.json` so the perf trajectory is
+machine-readable across PRs.
+
+Acceptance targets: the default run completes end-to-end in < 60 s on CPU
+and shows >= 2x per-event scheduling speedup from the incremental path.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_scale \
           [--slaves 1000 --apps 500 --seed 0 --horizon-h 24 \
-           --batch-window-s 60 --theta1 0.2 --theta2 0.2]
+           --batch-window-s 60 --mean-interarrival-s 60 \
+           --theta1 0.2 --theta2 0.2 --json BENCH_scale.json]
 or as part of the harness:  PYTHONPATH=src python -m benchmarks.run scale
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.core import (ClusterSimulator, DormMaster, OptimizerConfig,
-                        RecordingProtocol, TraceConfig, generate_trace,
+                        PolicyTimer, Reallocated, RecordingProtocol,
+                        TraceConfig, container_churn, generate_trace,
                         heterogeneous_cluster)
 
 from .common import emit
 
 
-def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
-        horizon_s: float = 24 * 3600.0, batch_window_s: float = 60.0,
-        theta1: float = 0.2, theta2: float = 0.2,
-        auto_switch_vars: int = 2_000):
-    cluster = heterogeneous_cluster(n_slaves, seed=seed)
-    wl = generate_trace(TraceConfig(n_apps=n_apps, seed=seed))
+def _run_once(cluster, wl, incremental: bool, horizon_s: float,
+              batch_window_s: float, theta1: float, theta2: float,
+              auto_switch_vars: int):
     cfg = OptimizerConfig(theta1, theta2, warm_start=True,
-                          auto_switch_vars=auto_switch_vars)
+                          auto_switch_vars=auto_switch_vars,
+                          incremental=incremental)
     master = DormMaster(cluster, "auto", cfg, protocol=RecordingProtocol())
-    sim = ClusterSimulator(master, wl, adjustment_cost_s=60.0,
+    timer = PolicyTimer(master)
+    sim = ClusterSimulator(timer, wl, adjustment_cost_s=60.0,
                            horizon_s=horizon_s,
                            batch_window_s=batch_window_s)
+    churn = {"total": 0, "last": None}
+
+    def on_realloc(ev):
+        churn["total"] += container_churn(churn["last"],
+                                          ev.result.allocation)
+        churn["last"] = ev.result.allocation
+
+    sim.runtime.bus.subscribe(Reallocated, on_realloc)
     t0 = time.perf_counter()
     res = sim.run()
     wall = time.perf_counter() - t0
+    greedy = master.optimizer._greedy
+    return {
+        "wall_s": wall,
+        "events": len(res.samples),
+        "events_per_s": len(res.samples) / max(wall, 1e-9),
+        "policy_time_s": timer.total_s(),
+        "per_event_policy_ms": timer.mean_ms(),
+        "completed": sum(1 for rt in res.completions.values()
+                         if rt.finished_at is not None),
+        "util_mean": res.time_averaged_utilization(),
+        "fairness_mean": res.mean_fairness_loss(),
+        "fairness_max": res.max_fairness_loss(),
+        "adjustments": res.total_adjustments,
+        "container_churn": churn["total"],
+        "delta_solves": greedy.delta_solves,
+        "full_solves": greedy.full_solves,
+        "drf_fast_hits": greedy.drf.fast_hits,
+        "drf_full_refills": greedy.drf.full_refills,
+    }, res
 
-    n_done = sum(1 for rt in res.completions.values()
-                 if rt.finished_at is not None)
+
+def _same_timeline(a, b) -> bool:
+    return (len(a.samples) == len(b.samples)
+            and all(sa == sb for sa, sb in zip(a.samples, b.samples))
+            and a.durations() == b.durations())
+
+
+def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
+        horizon_s: float = 24 * 3600.0, batch_window_s: float = 60.0,
+        mean_interarrival_s: float = 60.0,
+        theta1: float = 0.2, theta2: float = 0.2,
+        auto_switch_vars: int = 2_000,
+        json_path: str = "BENCH_scale.json"):
+    cluster = heterogeneous_cluster(n_slaves, seed=seed)
+    wl = generate_trace(TraceConfig(n_apps=n_apps, seed=seed,
+                                    mean_interarrival_s=mean_interarrival_s))
+    args = (horizon_s, batch_window_s, theta1, theta2, auto_switch_vars)
+    inc, res_inc = _run_once(cluster, wl, True, *args)
+    full, res_full = _run_once(cluster, wl, False, *args)
+    bit_exact = _same_timeline(res_inc, res_full)
+    speedup = full["per_event_policy_ms"] / max(
+        inc["per_event_policy_ms"], 1e-9)
+
+    # NOTE: notes must stay comma-free -- common.emit writes unquoted CSV.
     rows = [
         ("scale.slaves", n_slaves, "count", ""),
         ("scale.apps", n_apps, "count", ""),
-        ("scale.wall", wall, "s", "end-to-end simulation wall time"),
-        ("scale.events", len(res.samples), "count", "reallocation events"),
-        ("scale.events_per_s", len(res.samples) / max(wall, 1e-9), "1/s", ""),
-        ("scale.completed", n_done, "count", f"of {n_apps}"),
-        ("scale.util_mean", res.time_averaged_utilization(), "sum-util", ""),
-        ("scale.fairness_mean", res.mean_fairness_loss(), "loss", ""),
-        ("scale.fairness_max", res.max_fairness_loss(), "loss", ""),
-        ("scale.adjustments", res.total_adjustments, "count", "Eq-4 total"),
+        ("scale.wall", inc["wall_s"], "s", "end-to-end; incremental path"),
+        ("scale.events", inc["events"], "count", "reallocation events"),
+        ("scale.events_per_s", inc["events_per_s"], "1/s", ""),
+        ("scale.policy_ms", inc["per_event_policy_ms"], "ms",
+         "per-event scheduling time; incremental"),
+        ("scale.policy_ms_full", full["per_event_policy_ms"], "ms",
+         "per-event scheduling time; full re-solve"),
+        ("scale.incremental_speedup", speedup, "x",
+         f"bit_exact={bit_exact}"),
+        ("scale.delta_solves", inc["delta_solves"], "count",
+         f"of {inc['delta_solves'] + inc['full_solves']} greedy solves"),
+        ("scale.drf_fast_hits", inc["drf_fast_hits"], "count",
+         f"vs {inc['drf_full_refills']} full refills"),
+        ("scale.completed", inc["completed"], "count", f"of {n_apps}"),
+        ("scale.util_mean", inc["util_mean"], "sum-util", ""),
+        ("scale.fairness_mean", inc["fairness_mean"], "loss", ""),
+        ("scale.fairness_max", inc["fairness_max"], "loss", ""),
+        ("scale.adjustments", inc["adjustments"], "count", "Eq-4 total"),
+        ("scale.container_churn", inc["container_churn"], "count",
+         "containers created+destroyed"),
     ]
     emit(rows)
+
+    if json_path:
+        payload = {
+            "config": {
+                "slaves": n_slaves, "apps": n_apps, "seed": seed,
+                "horizon_s": horizon_s, "batch_window_s": batch_window_s,
+                "mean_interarrival_s": mean_interarrival_s,
+                "theta1": theta1, "theta2": theta2,
+                "auto_switch_vars": auto_switch_vars,
+            },
+            "incremental": inc,
+            "full_resolve": full,
+            "incremental_speedup": speedup,
+            "timeline_bit_exact": bit_exact,
+        }
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
     return rows
 
 
@@ -62,16 +152,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--horizon-h", type=float, default=24.0)
     ap.add_argument("--batch-window-s", type=float, default=60.0)
+    ap.add_argument("--mean-interarrival-s", type=float, default=60.0)
     ap.add_argument("--theta1", type=float, default=0.2)
     ap.add_argument("--theta2", type=float, default=0.2)
     ap.add_argument("--auto-switch-vars", type=int, default=2_000)
+    ap.add_argument("--json", default="BENCH_scale.json",
+                    help="output path for the JSON report ('' disables)")
     args = ap.parse_args()
     print("name,value,unit,notes")
     run(n_slaves=args.slaves, n_apps=args.apps, seed=args.seed,
         horizon_s=args.horizon_h * 3600.0,
         batch_window_s=args.batch_window_s,
+        mean_interarrival_s=args.mean_interarrival_s,
         theta1=args.theta1, theta2=args.theta2,
-        auto_switch_vars=args.auto_switch_vars)
+        auto_switch_vars=args.auto_switch_vars,
+        json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -2,11 +2,31 @@
 # One-command verify recipe: install dev deps (best-effort -- the image may
 # be offline, in which case tests that need missing optional deps skip
 # themselves) and run the tier-1 test command from ROADMAP.md.
+#
+#   scripts/check.sh                 # tier-1 tests
+#   scripts/check.sh --bench        # tests + scale benchmark -> BENCH_scale.json
+#   scripts/check.sh -k runtime     # extra args forwarded to pytest
 set -uo pipefail
 cd "$(dirname "$0")/.."
+
+RUN_BENCH=0
+ARGS=()
+for a in "$@"; do
+    if [ "$a" = "--bench" ]; then
+        RUN_BENCH=1
+    else
+        ARGS+=("$a")
+    fi
+done
 
 pip install -q -r requirements-dev.txt || \
     echo "warning: pip install failed (offline?); running with baked-in deps" >&2
 
 set -e
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"
+
+if [ "$RUN_BENCH" = "1" ]; then
+    echo "== scale benchmark (writes BENCH_scale.json) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_scale --json BENCH_scale.json
+fi

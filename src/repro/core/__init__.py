@@ -2,19 +2,25 @@
 optimizer (Sun et al., SMARTCOMP 2017) -- the paper's core contribution."""
 from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
                          RecordingProtocol)
-from .baselines import (MESOS_SCHED_LATENCY_S, StaticScheduler,
+from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
-from .drf import dominant_share, drf_container_counts, drf_shares, fairness_loss
-from .master import DormMaster, ReallocationResult
+from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
+                  drf_shares, fairness_loss, saturating_counts)
+from .master import DormMaster
 from .metrics import (actual_shares, adjusted_apps, cluster_fairness_loss,
-                      per_resource_utilization, resource_adjustment_overhead,
-                      resource_utilization)
+                      container_churn, per_resource_utilization,
+                      resource_adjustment_overhead, resource_utilization)
 from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
                         OptimizerConfig, adjust_budget, fairness_budget,
                         make_optimizer)
 from .partition import Partition, TaskExecutor, TaskScheduler
-from .simulator import (ClusterSimulator, MetricSample,
-                        ReferenceClusterSimulator, SimResult, speedup_ratios)
+from .replay import REPLAY_CLASS_INDEX, ReplayConfig, replay_trace
+from .runtime import (AppRuntime, Arrival, ClusterRuntime, Completion, Event,
+                      EventBus, MetricSample, PolicyTimer, Reallocated,
+                      ReallocationResult, Resize, SchedulerPolicy, SimResult,
+                      Tick, as_policy)
+from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
+                        speedup_ratios)
 from .slave import Container, DormSlave
 from .telemetry import MetricsLogger
 from .types import (Allocation, ApplicationSpec, ClusterSpec, ResourceVector,
@@ -27,19 +33,24 @@ from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
 
 __all__ = [
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
-    "RecordingProtocol", "MESOS_SCHED_LATENCY_S", "StaticScheduler",
-    "TaskLevelOverheadModel", "dominant_share", "drf_container_counts",
-    "drf_shares", "fairness_loss", "DormMaster", "ReallocationResult",
+    "RecordingProtocol", "MESOS_SCHED_LATENCY_S", "DRFScheduler",
+    "StaticScheduler", "TaskLevelOverheadModel", "IncrementalDRF",
+    "dominant_share", "drf_container_counts", "drf_shares", "fairness_loss",
+    "saturating_counts", "DormMaster", "ReallocationResult",
     "actual_shares", "adjusted_apps", "cluster_fairness_loss",
-    "per_resource_utilization", "resource_adjustment_overhead",
-    "resource_utilization", "AutoOptimizer", "GreedyOptimizer",
-    "MilpOptimizer",
+    "container_churn", "per_resource_utilization",
+    "resource_adjustment_overhead", "resource_utilization", "AutoOptimizer",
+    "GreedyOptimizer", "MilpOptimizer",
     "OptimizerConfig", "adjust_budget", "fairness_budget", "make_optimizer",
-    "Partition", "TaskExecutor", "TaskScheduler", "ClusterSimulator",
-    "MetricSample", "ReferenceClusterSimulator", "SimResult",
-    "speedup_ratios", "Container", "DormSlave",
-    "MetricsLogger", "Allocation", "ApplicationSpec", "ClusterSpec", "ResourceVector",
-    "SlaveSpec", "demand_matrix", "validate_allocation",
+    "Partition", "TaskExecutor", "TaskScheduler",
+    "REPLAY_CLASS_INDEX", "ReplayConfig", "replay_trace",
+    "AppRuntime", "Arrival", "ClusterRuntime", "Completion", "Event",
+    "EventBus", "MetricSample", "PolicyTimer", "Reallocated", "Resize",
+    "SchedulerPolicy", "SimResult", "Tick", "as_policy",
+    "ClusterSimulator", "ReferenceClusterSimulator", "speedup_ratios",
+    "Container", "DormSlave",
+    "MetricsLogger", "Allocation", "ApplicationSpec", "ClusterSpec",
+    "ResourceVector", "SlaveSpec", "demand_matrix", "validate_allocation",
     "BASELINE_STATIC_CONTAINERS", "MEAN_INTERARRIVAL_S", "SCALE_CLASSES",
     "SLAVE_FLAVORS", "TABLE_II", "TraceConfig",
     "WorkloadApp", "generate_trace", "generate_workload",

@@ -1,10 +1,21 @@
 """Baseline cluster managers the paper compares against (§II, §V-A.4).
 
+All baselines implement `runtime.SchedulerPolicy`, so the SAME
+`runtime.ClusterRuntime` event loop that drives Dorm drives them -- no
+baseline owns a private event loop.
+
 * `StaticScheduler` -- the paper's baseline ("Swarm"): each application class
   gets a FIXED container count (8, 8, 4, 2, 2, 2, 3), placed first-fit at
   submission, never resized; apps queue FCFS when capacity is unavailable.
   This also models app-level monolithic/two-level CMSs (Yarn/Mesos app mode),
   which "can only statically allocate resources".
+
+* `DRFScheduler` -- Mesos/YARN-style weighted-DRF allocation: every event
+  recomputes the weighted-DRF progressive-filling counts and repacks
+  containers first-fit from scratch. Fairness loss stays ~0 (it IS the DRF
+  point) but there is no Eq-16 adjustment budget, so nearly every event
+  churns nearly every running application -- exactly the unbounded
+  adjustment overhead Dorm's Eq-16 constraint is designed to avoid.
 
 * `TaskLevelOverheadModel` -- models task-level sharing (Mesos task mode):
   every task first waits for a resource offer. With the paper's measured
@@ -19,8 +30,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .master import ReallocationResult
-from .metrics import cluster_fairness_loss, resource_utilization
+from .drf import drf_container_counts, drf_shares
+from .metrics import (adjusted_apps, cluster_fairness_loss,
+                      resource_adjustment_overhead, resource_utilization)
+from .runtime import ReallocationResult
 from .types import Allocation, ApplicationSpec, ClusterSpec
 
 MESOS_SCHED_LATENCY_S: float = 0.430      # paper §II-C, 100-node Mesos
@@ -33,22 +46,24 @@ class StaticScheduler:
                  static_containers: Dict[str, int]):
         """`static_containers`: app_id -> fixed container count."""
         self.cluster = cluster
-        self.static = static_containers
+        self.static = dict(static_containers)   # on_resize writes; own copy
         self.slave_free = cluster.capacity_matrix().astype(np.float64)
         self.placements: Dict[str, np.ndarray] = {}    # app_id -> (b,) counts
         self.specs: Dict[str, ApplicationSpec] = {}
         self.queue: List[str] = []
 
-    # -- same interface as DormMaster: submit / complete -> ReallocationResult
+    # ------------------------------------------- SchedulerPolicy interface
 
-    def submit(self, spec: ApplicationSpec) -> ReallocationResult:
-        self.specs[spec.app_id] = spec
-        self.queue.append(spec.app_id)
-        self._admit()
-        return self._result(started=(spec.app_id,)
-                            if spec.app_id in self.placements else ())
+    def on_arrival(self, specs: Sequence[ApplicationSpec],
+                   ) -> ReallocationResult:
+        for spec in specs:
+            if spec.app_id in self.specs:
+                raise ValueError(f"duplicate app_id {spec.app_id}")
+            self.specs[spec.app_id] = spec
+            self.queue.append(spec.app_id)
+        return self._result(started=tuple(self._admit()))
 
-    def complete(self, app_id: str) -> ReallocationResult:
+    def on_completion(self, app_id: str) -> ReallocationResult:
         row = self.placements.pop(app_id, None)
         if row is not None:
             d = self.specs[app_id].demand.as_array()
@@ -56,8 +71,37 @@ class StaticScheduler:
         self.specs.pop(app_id, None)
         if app_id in self.queue:
             self.queue.remove(app_id)
+        return self._result(started=tuple(self._admit()))
+
+    def on_resize(self, app_id: str, n_min: Optional[int] = None,
+                  n_max: Optional[int] = None,
+                  ) -> Optional[ReallocationResult]:
+        """Static partitioning never resizes a PLACED app (that deficiency
+        is the point of the baseline); for a still-queued app the new upper
+        bound becomes its static target."""
+        spec = self.specs.get(app_id)
+        if spec is None or app_id in self.placements:
+            return None
+        if n_min is not None or n_max is not None:
+            spec = spec.with_bounds(n_min=n_min, n_max=n_max)
+            self.specs[app_id] = spec
+            if n_max is not None:
+                # Only an explicit ceiling change retargets the static
+                # count; an n_min-only resize must not clobber it.
+                self.static[app_id] = spec.n_max
+        return self._result(started=tuple(self._admit()))
+
+    def on_tick(self, t: float) -> Optional[ReallocationResult]:
         started = self._admit()
-        return self._result(started=tuple(started))
+        return self._result(started=tuple(started)) if started else None
+
+    # ------------------------------------------------------ legacy aliases
+
+    def submit(self, spec: ApplicationSpec) -> ReallocationResult:
+        return self.on_arrival((spec,))
+
+    def complete(self, app_id: str) -> ReallocationResult:
+        return self.on_completion(app_id)
 
     def containers_of(self, app_id: str) -> int:
         row = self.placements.get(app_id)
@@ -134,6 +178,119 @@ class StaticScheduler:
             ) if self.specs else 0.0,
             adjustment_overhead=0,
         )
+
+
+class DRFScheduler:
+    """Mesos/YARN-style weighted-DRF allocator with unbounded churn."""
+
+    def __init__(self, cluster: ClusterSpec):
+        self.cluster = cluster
+        self.specs: Dict[str, ApplicationSpec] = {}
+        self.placements: Dict[str, np.ndarray] = {}    # app_id -> (b,) counts
+        self.prev_alloc: Optional[Allocation] = None
+
+    # ------------------------------------------- SchedulerPolicy interface
+
+    def on_arrival(self, specs: Sequence[ApplicationSpec],
+                   ) -> ReallocationResult:
+        for spec in specs:
+            if spec.app_id in self.specs:
+                raise ValueError(f"duplicate app_id {spec.app_id}")
+            self.specs[spec.app_id] = spec
+        return self._reallocate()
+
+    def on_completion(self, app_id: str) -> ReallocationResult:
+        self.specs.pop(app_id, None)
+        self.placements.pop(app_id, None)
+        if self.prev_alloc is not None and app_id in self.prev_alloc.app_ids:
+            keep = [i for i, a in enumerate(self.prev_alloc.app_ids)
+                    if a != app_id]
+            self.prev_alloc = Allocation(
+                tuple(self.prev_alloc.app_ids[i] for i in keep),
+                self.prev_alloc.x[keep])
+        return self._reallocate()
+
+    def on_resize(self, app_id: str, n_min: Optional[int] = None,
+                  n_max: Optional[int] = None,
+                  ) -> Optional[ReallocationResult]:
+        spec = self.specs.get(app_id)
+        if spec is None:
+            return None
+        self.specs[app_id] = spec.with_bounds(n_min=n_min, n_max=n_max)
+        return self._reallocate()
+
+    def on_tick(self, t: float) -> Optional[ReallocationResult]:
+        return None          # DRF refills on arrivals/completions only
+
+    def submit(self, spec: ApplicationSpec) -> ReallocationResult:
+        return self.on_arrival((spec,))
+
+    def complete(self, app_id: str) -> ReallocationResult:
+        return self.on_completion(app_id)
+
+    def containers_of(self, app_id: str) -> int:
+        row = self.placements.get(app_id)
+        return int(row.sum()) if row is not None else 0
+
+    # ------------------------------------------------------------ internals
+
+    def _reallocate(self) -> ReallocationResult:
+        """Weighted-DRF progressive filling over aggregate capacity, then a
+        fresh first-fit repack (no placement stickiness -- the churn IS the
+        baseline's deficiency).
+
+        Only apps holding containers enter the reported `allocation` (same
+        convention as DormMaster/StaticScheduler): a pending app's first
+        placement is a START, not an adjustment, so it is never charged a
+        save/kill/resume pause it did not incur. Fairness loss is still
+        evaluated over ALL admitted apps (zero-holding pending apps show
+        the deficiency, as in Fig 7)."""
+        apps = list(self.specs.values())
+        counts = drf_container_counts(apps, self.cluster)
+        shares = drf_shares(apps, self.cluster, counts=counts)
+        b = self.cluster.b
+        free = self.cluster.capacity_matrix().astype(np.float64).copy()
+        x = np.zeros((len(apps), b), dtype=np.int64)
+        self.placements = {}
+        for i, app in enumerate(apps):
+            d = app.demand.as_array()
+            want = counts[app.app_id]
+            placed = 0
+            for j in range(b):
+                while placed < want and np.all(d <= free[j] + 1e-9):
+                    x[i, j] += 1
+                    free[j] -= d
+                    placed += 1
+                if placed >= want:
+                    break
+            self.placements[app.app_id] = x[i]
+        totals = x.sum(axis=1)
+        keep = [i for i in range(len(apps)) if totals[i] > 0]
+        alloc = Allocation(tuple(apps[i].app_id for i in keep), x[keep])
+        placed_apps = [apps[i] for i in keep]
+        prev = self.prev_alloc
+        prev_ids = set(prev.app_ids) if prev is not None else set()
+        started = tuple(a.app_id for a in placed_apps
+                        if a.app_id not in prev_ids)
+        adjusted = tuple(a for a, r in adjusted_apps(prev, alloc).items()
+                         if r)
+        pending = tuple(a.app_id for i, a in enumerate(apps)
+                        if totals[i] == 0)
+        full_alloc = Allocation(tuple(a.app_id for a in apps), x)
+        res = ReallocationResult(
+            allocation=alloc,
+            adjusted_app_ids=adjusted,
+            started_app_ids=started,
+            pending_app_ids=pending,
+            utilization=resource_utilization(alloc, placed_apps,
+                                             self.cluster),
+            fairness_loss=cluster_fairness_loss(full_alloc, apps,
+                                                self.cluster,
+                                                theoretical=shares),
+            adjustment_overhead=resource_adjustment_overhead(prev, alloc),
+        )
+        self.prev_alloc = alloc
+        return res
 
 
 @dataclasses.dataclass(frozen=True)

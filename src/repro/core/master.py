@@ -11,7 +11,6 @@ Responsibilities:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -21,20 +20,11 @@ from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
                       resource_utilization)
 from .optimizer import OptimizerConfig, make_optimizer
 from .partition import Partition, TaskExecutor, TaskScheduler
+from .runtime import ReallocationResult
 from .slave import DormSlave
 from .types import Allocation, ApplicationSpec, ClusterSpec, validate_allocation
 
-
-@dataclasses.dataclass
-class ReallocationResult:
-    """Outcome of one optimizer invocation + enforcement pass."""
-    allocation: Allocation
-    adjusted_app_ids: Tuple[str, ...]       # killed+resumed (Eq 3's r_i = 1)
-    started_app_ids: Tuple[str, ...]
-    pending_app_ids: Tuple[str, ...]        # admitted but waiting (infeasible)
-    utilization: float
-    fairness_loss: float
-    adjustment_overhead: int
+__all__ = ["DormMaster", "ReallocationResult"]
 
 
 class DormMaster:
@@ -62,6 +52,33 @@ class DormMaster:
         # from container lists is O(b) dict-building per app per event, which
         # dominates at 1000 slaves.
         self._placements: Dict[str, np.ndarray] = {}
+
+    # ------------------------------------------- SchedulerPolicy interface
+    # (runtime.ClusterRuntime drives the master through these four hooks;
+    #  submit/submit_batch/complete remain as the user-facing API.)
+
+    def on_arrival(self, specs: Sequence[ApplicationSpec],
+                   ) -> ReallocationResult:
+        return self.submit_batch(specs)
+
+    def on_completion(self, app_id: str) -> ReallocationResult:
+        return self.complete(app_id)
+
+    def on_resize(self, app_id: str, n_min: Optional[int] = None,
+                  n_max: Optional[int] = None,
+                  ) -> Optional[ReallocationResult]:
+        """External elasticity-bound change (runtime `Resize` event): update
+        the app's [n_min, n_max] and let the optimizer re-size its partition
+        through the usual checkpoint-based adjustment protocol."""
+        spec = self.specs.get(app_id)
+        if spec is None:
+            return None
+        self.specs[app_id] = spec.with_bounds(n_min=n_min, n_max=n_max)
+        return self.reallocate()
+
+    def on_tick(self, t: float) -> Optional[ReallocationResult]:
+        """Periodic rebalance (runtime `Tick` event)."""
+        return self.reallocate()
 
     # ------------------------------------------------------------------ API
 
@@ -143,21 +160,30 @@ class DormMaster:
 
         # Phase 1 (Fig 5, step 3): save + kill + destroy containers of every
         # running app whose placement changed -- frees capacity first, so
-        # phase-2 creations never race the teardowns.
+        # phase-2 creations never race the teardowns. Changed-row detection
+        # is one bulk compare (a per-app array_equal loop dominates events
+        # at 1000 slaves).
+        row_sums = alloc.x.sum(axis=1)
+        running_i = [i for i, a in enumerate(alloc.app_ids)
+                     if a in self.partitions]
+        changed_i: set = set()
+        if running_i:
+            old = np.stack([self._placements[alloc.app_ids[i]]
+                            for i in running_i])
+            diff = (alloc.x[running_i] != old).any(axis=1)
+            changed_i = {running_i[k] for k in np.flatnonzero(diff)}
         to_place: List[Tuple[str, np.ndarray, bool]] = []
         for i, app_id in enumerate(alloc.app_ids):
-            spec = spec_of[app_id]
-            new_row = alloc.x[i]
             if app_id in self.partitions:
-                old_row = self._placements[app_id]
-                if np.array_equal(old_row, new_row):
+                if i not in changed_i:
                     continue
+                spec = spec_of[app_id]
                 self.checkpoints[app_id] = self.protocol.save_state(spec)
                 self.protocol.kill(spec)
                 self._teardown(app_id)
-                to_place.append((app_id, new_row, True))
-            elif new_row.sum() > 0:
-                to_place.append((app_id, new_row, False))
+                to_place.append((app_id, alloc.x[i], True))
+            elif row_sums[i] > 0:
+                to_place.append((app_id, alloc.x[i], False))
 
         # Phase 2 (Fig 5, step 4): create containers, configure executors and
         # schedulers, resume adjusted apps / start new ones.
@@ -216,12 +242,22 @@ class DormMaster:
         sub = Allocation(tuple(alloc.app_ids[i] for i in keep),
                          alloc.x[keep] if keep
                          else np.zeros((0, self.cluster.b), np.int64))
+        # Reuse the optimizer's DRF targets for Eq 2 when they cover exactly
+        # this app set (true for every feasible solve): the fairness metric
+        # then costs O(n*m) instead of a second progressive-filling pass.
+        shares = getattr(self.optimizer, "last_shares", None)
+        if shares is not None and set(shares) != {a.app_id for a in apps}:
+            shares = None
         return ReallocationResult(
             allocation=sub,
             adjusted_app_ids=adjusted,
             started_app_ids=started,
             pending_app_ids=pending,
             utilization=resource_utilization(sub, apps, self.cluster),
-            fairness_loss=cluster_fairness_loss(sub, apps, self.cluster),
-            adjustment_overhead=len(adjusted),
+            fairness_loss=cluster_fairness_loss(sub, apps, self.cluster,
+                                                theoretical=shares),
+            # Eq 4 evaluated literally: r_i = 1 iff any x_{i,j} changed vs
+            # the previous allocation, summed over A^t ∩ A^{t-1}.
+            adjustment_overhead=resource_adjustment_overhead(
+                self.prev_alloc, sub),
         )

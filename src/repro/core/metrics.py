@@ -31,12 +31,18 @@ def resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
 def actual_shares(alloc: Allocation, apps: Sequence[ApplicationSpec],
                   cluster: ClusterSpec) -> Dict[str, float]:
     """s_i = max_k ( d_{i,k} * sum_j x_{i,j} / sum_h c_{h,k} )."""
+    if not apps:
+        return {}
     total = cluster.total_capacity()
     d = demand_matrix(apps)
-    return {
-        app.app_id: dominant_share(int(alloc.x[i].sum()), d[i], total)
-        for i, app in enumerate(apps)
-    }
+    # Vectorized over apps (same arithmetic as per-app `dominant_share`):
+    # runs on every reallocation event.
+    totals = alloc.x.sum(axis=1).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratios = np.where(total[None, :] > 0,
+                          totals[:, None] * d / total[None, :], 0.0)
+    shares = ratios.max(axis=1) if ratios.size else np.zeros(len(apps))
+    return {app.app_id: float(shares[i]) for i, app in enumerate(apps)}
 
 
 def cluster_fairness_loss(alloc: Allocation, apps: Sequence[ApplicationSpec],
@@ -60,14 +66,44 @@ def adjusted_apps(prev: Optional[Allocation], new: Allocation) -> Dict[str, int]
     """
     if prev is None:
         return {}
-    prev_map = prev.as_dict()
-    out: Dict[str, int] = {}
-    for i, app_id in enumerate(new.app_ids):
-        if app_id in prev_map:
-            out[app_id] = int(not np.array_equal(prev_map[app_id], new.x[i]))
-    return out
+    # Bulk row compares (this runs per reallocation event; a per-app
+    # array_equal loop dominates at 1000 slaves). Fast case first: the
+    # master appends new apps after the surviving ones, so the previous
+    # app list is almost always a prefix of the new one -- the comparison
+    # is then one view-based matrix op with no row gathering.
+    k = len(prev.app_ids)
+    if prev.app_ids == new.app_ids[:k]:
+        diff = (new.x[:k] != prev.x).any(axis=1)
+        return {new.app_ids[i]: int(diff[i]) for i in range(k)}
+    prev_idx = {a: i for i, a in enumerate(prev.app_ids)}
+    pairs = [(i, prev_idx[a]) for i, a in enumerate(new.app_ids)
+             if a in prev_idx]
+    if not pairs:
+        return {}
+    ni = [p[0] for p in pairs]
+    diff = (new.x[ni] != prev.x[[p[1] for p in pairs]]).any(axis=1)
+    return {new.app_ids[ni[k]]: int(diff[k]) for k in range(len(pairs))}
 
 
 def resource_adjustment_overhead(prev: Optional[Allocation], new: Allocation) -> int:
     """ResourceAdjustmentOverhead(t) = sum_{i in A^t ∩ A^{t-1}} r_i   (Eq 4)."""
     return int(sum(adjusted_apps(prev, new).values()))
+
+
+def container_churn(prev: Optional[Allocation], new: Allocation) -> int:
+    """Total containers created + destroyed between two allocations:
+    sum_{i in A^t ∩ A^{t-1}} sum_j |x_{i,j} - x^{t-1}_{i,j}|.
+
+    Eq 4 counts a whole-app adjustment as 1 regardless of how many
+    containers moved; this is the finer-grained magnitude (what the
+    adjustment protocol actually pays in container create/destroy calls),
+    reported by benchmarks/bench_scale.py."""
+    if prev is None:
+        return 0
+    prev_map = prev.as_dict()
+    churn = 0
+    for i, app_id in enumerate(new.app_ids):
+        old = prev_map.get(app_id)
+        if old is not None:
+            churn += int(np.abs(new.x[i] - old).sum())
+    return churn

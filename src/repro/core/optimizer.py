@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .drf import drf_container_counts, drf_shares
+from .drf import IncrementalDRF, drf_container_counts, drf_shares
 from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
                     validate_allocation)
 
@@ -70,6 +70,12 @@ class OptimizerConfig:
     sparse: bool = True          # sparse MILP constraint assembly
     warm_start: bool = False     # greedy incumbent: cutoff + timeout fallback
     auto_switch_vars: int = 2_000    # AutoOptimizer: MILP while n*b <= this
+    # Per-event incremental path (GreedyOptimizer only): warm-start the
+    # solve from prev_alloc and skip the DRF refill + stickiness repacking
+    # whenever the saturating-DRF fast path proves the result unchanged.
+    # Bit-exact with incremental=False by construction (tests/
+    # test_incremental.py), so it is safe to leave on by default.
+    incremental: bool = True
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -118,6 +124,7 @@ class MilpOptimizer:
         if not _HAVE_SCIPY:  # pragma: no cover
             raise RuntimeError("scipy not available; use GreedyOptimizer")
         self.cfg = cfg
+        self.last_shares: Optional[Dict[str, float]] = None
 
     # ------------------------------------------------------ dense assembly
 
@@ -309,6 +316,7 @@ class MilpOptimizer:
               prev: Optional[Allocation] = None,
               ) -> Optional[Allocation]:
         if not apps:
+            self.last_shares = {}
             return Allocation.empty((), cluster.b)
         n, b, m = len(apps), cluster.b, cluster.m
         app_ids = tuple(a.app_id for a in apps)
@@ -316,6 +324,7 @@ class MilpOptimizer:
         cap = cluster.capacity_matrix()             # (b, m)
         g = _dominant_coeff(apps, cluster)          # (n,)
         drf_counts, s_hat_vec = _drf_targets(apps, cluster)
+        self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
 
         prev_map = prev.as_dict() if prev is not None else {}
         common = [i for i, a in enumerate(app_ids) if a in prev_map]
@@ -384,6 +393,38 @@ class MilpOptimizer:
         return alloc
 
 
+def _best_fit_place(x: np.ndarray, free: np.ndarray, d: np.ndarray,
+                    inv_cap: np.ndarray, i: int, limit: int) -> None:
+    """Raise app i to `limit` containers, one at a time, onto the slave with
+    the least residual normalized capacity after placing. Shared by the full
+    and delta greedy paths -- identical arithmetic is what keeps the
+    incremental solve bit-exact with the full one.
+
+    Only the chosen slave's free vector changes between grants, so the
+    fits mask and the score vector are maintained incrementally (O(m) per
+    grant after the O(b*m) setup) -- recomputing them per grant is the
+    same arithmetic on unchanged rows, so the placements are identical."""
+    di = d[i]
+    need = limit - int(x[i].sum())
+    if need <= 0:
+        return
+    fits = (di <= free + 1e-9).all(axis=1)
+    if not fits.any():
+        return
+    score = ((free - di) * inv_cap).sum(axis=1)
+    masked = np.where(fits, score, np.inf)
+    while need > 0:
+        j = int(np.argmin(masked))
+        if not np.isfinite(masked[j]):
+            return
+        x[i, j] += 1
+        free[j] -= di
+        score_j = float(((free[j] - di) * inv_cap[j]).sum())
+        fit_j = bool((di <= free[j] + 1e-9).all())
+        masked[j] = score_j if fit_j else np.inf
+        need -= 1
+
+
 class GreedyOptimizer:
     """DRF-guided heuristic for P2 with placement stickiness.
 
@@ -398,10 +439,27 @@ class GreedyOptimizer:
        their previous rows) in order of least utilization gain until within
        budget; reverted capacity is reused where possible. Feasibility of a
        revert is checked against an incrementally maintained usage matrix.
+
+    Per-event incremental path (cfg.incremental, on by default): when the
+    saturating-DRF fast path proves every app's target is its n_max
+    (`drf.saturating_counts`) and a previous allocation covers a subset of
+    the current apps, steps 1-2 collapse: the utilization push is a no-op
+    (nothing can grow past n_max) and the stickiness loop provably keeps
+    every previous row unchanged, so the solve warm-starts from
+    `prev_alloc`'s rows directly and only places the delta (new apps, plus
+    top-ups of apps below target). Output is bit-exact with the full solve
+    -- both run the same `_best_fit_place` passes and step-3 budget
+    enforcement -- but the per-event cost drops from
+    O(total-grants + n_running * b) to O(delta * b).
+    `delta_solves` / `full_solves` count which path answered.
     """
 
     def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
         self.cfg = cfg
+        self.drf = IncrementalDRF()
+        self.last_shares: Optional[Dict[str, float]] = None
+        self.delta_solves = 0
+        self.full_solves = 0
 
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
               prev: Optional[Allocation] = None,
@@ -410,6 +468,7 @@ class GreedyOptimizer:
         caller that already ran the progressive filling (MilpOptimizer's
         warm start) does not pay for a second pass."""
         if not apps:
+            self.last_shares = {}
             return Allocation.empty((), cluster.b)
         n, b, m = len(apps), cluster.b, cluster.m
         app_ids = tuple(a.app_id for a in apps)
@@ -417,8 +476,21 @@ class GreedyOptimizer:
         cap = cluster.capacity_matrix().astype(np.float64)
         g = _dominant_coeff(apps, cluster)
         util_w = _util_coeff(apps, cluster)
-        drf_counts, s_hat_vec = (_targets if _targets is not None
-                                 else _drf_targets(apps, cluster))
+        fast = False
+        if _targets is not None:
+            drf_counts, s_hat_vec = _targets
+            self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
+        elif self.cfg.incremental:
+            # Incremental DRF refill: O(n*m) saturating fast path when it
+            # provably matches the full filling, full filling otherwise.
+            drf_counts, shares, fast = self.drf.targets(apps, cluster)
+            self.last_shares = shares
+            s_hat_vec = np.array([shares[a] for a in app_ids])
+        else:
+            # Full re-solve semantics (the seed's per-event behaviour):
+            # progressive filling from scratch on every event.
+            drf_counts, s_hat_vec = _drf_targets(apps, cluster)
+            self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
         budget_l = fairness_budget(self.cfg, m)
 
         # -- step 1: choose target counts.
@@ -431,88 +503,114 @@ class GreedyOptimizer:
         def total_loss(counts: np.ndarray) -> float:
             return float(np.abs(g * counts - s_hat_vec).sum())
 
-        # Greedy utilization push above the DRF point within the Eq-15 budget.
-        # Pure-python incremental loop: the loss delta of one extra container
-        # is local to the app, so the Eq-15 re-check is O(1), not O(n).
-        remaining = (cluster.total_capacity() - target @ d).tolist()
-        d_list = d.tolist()
-        g_list = g.tolist()
-        s_hat_list = s_hat_vec.tolist()
-        tgt = target.tolist()
-        nmax_list = [a.n_max for a in apps]
-        cur_loss = sum(abs(g_list[i] * tgt[i] - s_hat_list[i])
-                       for i in range(n))
-        order = np.argsort(-util_w).tolist()  # best utilization gain first
-        rng_m = range(m)
-        improved = True
-        while improved:
-            improved = False
-            for i in order:
-                if tgt[i] >= nmax_list[i]:
-                    continue
-                di = d_list[i]
-                if any(di[k] > remaining[k] + 1e-9 for k in rng_m):
-                    continue
-                old_li = abs(g_list[i] * tgt[i] - s_hat_list[i])
-                new_li = abs(g_list[i] * (tgt[i] + 1) - s_hat_list[i])
-                if cur_loss - old_li + new_li <= budget_l + 1e-9:
-                    tgt[i] += 1
-                    cur_loss += new_li - old_li
-                    for k in rng_m:
-                        remaining[k] -= di[k]
-                    improved = True
-        target = np.array(tgt, dtype=np.int64)
+        # Row views, not copies (as_dict copies every row; this runs per
+        # event and the solver only reads previous rows).
+        prev_map = (dict(zip(prev.app_ids, prev.x)) if prev is not None
+                    else {})
+        delta = bool(self.cfg.incremental and fast and prev_map
+                     and set(prev_map).issubset(app_ids))
+        if delta:
+            # Guard: a shrunk bound (Resize event) can push a target below
+            # the previous count; the stickiness loop must then TRIM rows,
+            # so the prev-rows warm start would not match -- full path.
+            tgt_of = dict(zip(app_ids, target.tolist()))
+            if any(int(row.sum()) > tgt_of[a]
+                   for a, row in prev_map.items()):
+                delta = False
+        if delta and not bool((d == np.floor(d)).all()):
+            # Guard: with fractional demands (e.g. Alibaba plan_cpu/100
+            # replays) the delta path's one-matmul free computation and the
+            # full path's sequential row subtraction can differ in the last
+            # ulp and flip a near-tied best-fit argmin. Integer-valued
+            # demands make both exact; otherwise keep the full path so the
+            # bit-exact guarantee holds unconditionally.
+            delta = False
+
+        if not fast:
+            # Greedy utilization push above the DRF point within the Eq-15
+            # budget (skipped on the fast path: every target already sits at
+            # n_max, so the push is provably a no-op). Pure-python
+            # incremental loop: the loss delta of one extra container is
+            # local to the app, so the Eq-15 re-check is O(1), not O(n).
+            remaining = (cluster.total_capacity() - target @ d).tolist()
+            d_list = d.tolist()
+            g_list = g.tolist()
+            s_hat_list = s_hat_vec.tolist()
+            tgt = target.tolist()
+            nmax_list = [a.n_max for a in apps]
+            cur_loss = sum(abs(g_list[i] * tgt[i] - s_hat_list[i])
+                           for i in range(n))
+            order = np.argsort(-util_w).tolist()  # best utilization first
+            rng_m = range(m)
+            improved = True
+            while improved:
+                improved = False
+                for i in order:
+                    if tgt[i] >= nmax_list[i]:
+                        continue
+                    di = d_list[i]
+                    if any(di[k] > remaining[k] + 1e-9 for k in rng_m):
+                        continue
+                    old_li = abs(g_list[i] * tgt[i] - s_hat_list[i])
+                    new_li = abs(g_list[i] * (tgt[i] + 1) - s_hat_list[i])
+                    if cur_loss - old_li + new_li <= budget_l + 1e-9:
+                        tgt[i] += 1
+                        cur_loss += new_li - old_li
+                        for k in rng_m:
+                            remaining[k] -= di[k]
+                        improved = True
+            target = np.array(tgt, dtype=np.int64)
 
         # -- step 2: placement with stickiness.
-        prev_map = prev.as_dict() if prev is not None else {}
-        x = np.zeros((n, b), dtype=np.int64)
-        free = cap.copy()
-        # Keep previous placements first (up to the new target): per app the
-        # per-slave keepable count has the closed form
-        # min(prev_j, max q: q*d <= free_j + eps), capped cumulatively.
-        for i, a in enumerate(app_ids):
-            pr = prev_map.get(a)
-            if pr is None or target[i] <= 0:
-                continue
-            di = d[i]
-            pos = di > 0
-            if pos.any():
-                fit = np.floor((free[:, pos] + 1e-9) / di[pos]).min(axis=1)
-                fit = np.maximum(fit, 0.0).astype(np.int64)
-            else:
-                fit = np.full(b, int(target[i]), dtype=np.int64)
-            keep = np.minimum(np.asarray(pr, dtype=np.int64), fit)
-            csum = np.minimum(np.cumsum(keep), int(target[i]))
-            keep = np.diff(np.concatenate(([0], csum)))
-            if keep.any():
-                x[i] = keep
-                free -= keep[:, None] * di[None, :]
+        if delta:
+            # Delta warm start: every surviving app keeps its previous row
+            # verbatim (the stickiness loop below would reproduce exactly
+            # that: targets are at n_max >= previous counts, and previous
+            # rows are jointly capacity-feasible, so nothing is trimmed).
+            self.delta_solves += 1
+            x = np.zeros((n, b), dtype=np.int64)
+            for i, a in enumerate(app_ids):
+                pr = prev_map.get(a)
+                if pr is not None:
+                    x[i] = pr
+            free = cap - x.T.astype(np.float64) @ d
+        else:
+            self.full_solves += 1
+            x = np.zeros((n, b), dtype=np.int64)
+            free = cap.copy()
+            # Keep previous placements first (up to the new target): per app
+            # the per-slave keepable count has the closed form
+            # min(prev_j, max q: q*d <= free_j + eps), capped cumulatively.
+            for i, a in enumerate(app_ids):
+                pr = prev_map.get(a)
+                if pr is None or target[i] <= 0:
+                    continue
+                di = d[i]
+                pos = di > 0
+                if pos.any():
+                    fit = np.floor((free[:, pos] + 1e-9) / di[pos]).min(axis=1)
+                    fit = np.maximum(fit, 0.0).astype(np.int64)
+                else:
+                    fit = np.full(b, int(target[i]), dtype=np.int64)
+                keep = np.minimum(np.asarray(pr, dtype=np.int64), fit)
+                csum = np.minimum(np.cumsum(keep), int(target[i]))
+                keep = np.diff(np.concatenate(([0], csum)))
+                if keep.any():
+                    x[i] = keep
+                    free -= keep[:, None] * di[None, :]
         # Best-fit the remainder (one container at a time, vectorized over
-        # slaves: least residual normalized capacity after placing). Two
-        # passes: every app is raised to its n_min before anyone is topped
-        # up to the full target -- packing early apps to their whole target
-        # first would starve the tail below n_min on a saturated cluster
-        # and spuriously report P2 infeasible.
+        # slaves). Two passes: every app is raised to its n_min before anyone
+        # is topped up to the full target -- packing early apps to their
+        # whole target first would starve the tail below n_min on a
+        # saturated cluster and spuriously report P2 infeasible.
         inv_cap = 1.0 / np.maximum(cap, 1e-9)
-
-        def place_up_to(i: int, limit: int) -> None:
-            di = d[i]
-            need = limit - int(x[i].sum())
-            while need > 0:
-                fits = (di <= free + 1e-9).all(axis=1)
-                if not fits.any():
-                    return
-                score = ((free - di) * inv_cap).sum(axis=1)
-                score[~fits] = np.inf
-                j = int(np.argmin(score))
-                x[i, j] += 1
-                free[j] -= di
-                need -= 1
-
+        sums = x.sum(axis=1)
         for i in range(n):
-            place_up_to(i, apps[i].n_min)
+            if sums[i] < apps[i].n_min:
+                _best_fit_place(x, free, d, inv_cap, i, apps[i].n_min)
         for i in range(n):
-            place_up_to(i, int(target[i]))
+            if x[i].sum() < target[i]:
+                _best_fit_place(x, free, d, inv_cap, i, int(target[i]))
             if x[i].sum() < apps[i].n_min:
                 # Packing failed below n_min: give up -> infeasible signal.
                 return None
@@ -534,10 +632,16 @@ class GreedyOptimizer:
                     for pos_i in range(len(changed) - 1, -1, -1):
                         i = changed[pos_i]
                         pr = prev_map[app_ids[i]]
-                        delta = (pr - x[i]).astype(np.float64)[:, None] \
+                        pr_n = int(pr.sum())
+                        if pr_n > apps[i].n_max or pr_n < apps[i].n_min:
+                            # Bounds moved since the previous allocation
+                            # (Resize event): the old row is no longer a
+                            # legal state to revert to.
+                            continue
+                        delta_u = (pr - x[i]).astype(np.float64)[:, None] \
                             * d[i][None, :]
-                        if np.all(used + delta <= cap + 1e-6):
-                            used += delta
+                        if np.all(used + delta_u <= cap + 1e-6):
+                            used += delta_u
                             x[i] = pr
                             changed.pop(pos_i)
                             reverted = True
@@ -568,6 +672,7 @@ class AutoOptimizer:
         self.cfg = cfg
         self._milp = MilpOptimizer(cfg) if _HAVE_SCIPY else None
         self._greedy = GreedyOptimizer(cfg)
+        self.last_shares: Optional[Dict[str, float]] = None
 
     def select(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec):
         """The solver that `solve` would dispatch to for this instance."""
@@ -579,7 +684,10 @@ class AutoOptimizer:
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
               prev: Optional[Allocation] = None,
               ) -> Optional[Allocation]:
-        return self.select(apps, cluster).solve(apps, cluster, prev)
+        solver = self.select(apps, cluster)
+        alloc = solver.solve(apps, cluster, prev)
+        self.last_shares = solver.last_shares
+        return alloc
 
 
 def make_optimizer(kind: str, cfg: OptimizerConfig = OptimizerConfig()):

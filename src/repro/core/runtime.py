@@ -1,0 +1,552 @@
+"""Event-driven cluster runtime: ONE event loop for master, simulator and
+baselines.
+
+Before this module existed the repo had three divergent event loops --
+`DormMaster.reallocate` (live enforcement), `ClusterSimulator` (vectorized
+simulation) and the baseline schedulers in `baselines.py` (each owning a
+private submit/complete loop). They are now collapsed into:
+
+  * a typed event vocabulary -- `Arrival`, `Completion`, `Resize`, `Tick`
+    (inputs) and `Reallocated` (output notification),
+  * an `EventBus` observers subscribe to by event type (telemetry export,
+    live-training bridges, dashboards),
+  * a `SchedulerPolicy` interface that every cluster manager implements:
+    Dorm (`DormMaster` with MILP/greedy/auto optimizers), static
+    partitioning (`baselines.StaticScheduler`) and the Mesos/YARN-style DRF
+    allocator (`baselines.DRFScheduler`),
+  * `ClusterRuntime` -- the single event loop. It owns time: it orders
+    arrivals, predicts completions from vectorized progress integration,
+    merges externally injected `Resize` requests and periodic `Tick`s, calls
+    the policy exactly once per event, applies the resulting allocation to
+    the per-app progress state, and samples the paper's Eq-1/2/4 metrics.
+
+The progress arithmetic is lifted unchanged from the PR-1 vectorized
+simulator, so a `ClusterRuntime` drive of any policy reproduces the seed
+`ReferenceClusterSimulator` timeline bit-for-bit (pinned by
+tests/test_scale.py via `ClusterSimulator`, which is now a thin facade over
+this runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, Union, runtime_checkable)
+
+import numpy as np
+
+from .types import Allocation, ApplicationSpec
+from .workload import WorkloadApp
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Typed events
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One or more applications submitted at time `t` (a burst admitted in
+    one scheduler pass when event batching is on)."""
+    t: float
+    specs: Tuple[ApplicationSpec, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """Application `app_id` finished at time `t`."""
+    t: float
+    app_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Resize:
+    """External request to re-bound `app_id`'s elasticity at time `t` (e.g.
+    a user widening n_max, or a serving job pinned down during an incident).
+    The policy decides the actual container count; `None` keeps a bound."""
+    t: float
+    app_id: str
+    n_min: Optional[int] = None
+    n_max: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Tick:
+    """Periodic heartbeat: lets a policy rebalance without an arrival or
+    completion trigger (rolling-horizon re-planning hooks in here)."""
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Reallocated:
+    """Published on the bus after every applied policy decision."""
+    t: float
+    event: "Event"
+    result: "ReallocationResult"
+
+
+Event = Union[Arrival, Completion, Resize, Tick]
+
+
+class EventBus:
+    """Minimal typed pub/sub: subscribers register per event class and
+    receive every published instance of exactly that class."""
+
+    def __init__(self) -> None:
+        self._subs: Dict[type, List[Callable[[Any], None]]] = {}
+
+    def subscribe(self, event_type: type, fn: Callable[[Any], None]) -> None:
+        self._subs.setdefault(event_type, []).append(fn)
+
+    def publish(self, event: Any) -> None:
+        for fn in self._subs.get(type(event), ()):
+            fn(event)
+
+
+# ---------------------------------------------------------------------------
+# Policy interface + results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReallocationResult:
+    """Outcome of one policy invocation (optimizer pass + enforcement)."""
+    allocation: Allocation
+    adjusted_app_ids: Tuple[str, ...]       # killed+resumed (Eq 3's r_i = 1)
+    started_app_ids: Tuple[str, ...]
+    pending_app_ids: Tuple[str, ...]        # admitted but waiting (infeasible)
+    utilization: float
+    fairness_loss: float
+    adjustment_overhead: int
+
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """What every cluster manager implements to be driven by the runtime.
+
+    `on_resize` / `on_tick` may return None ("nothing changed, no sample").
+    """
+
+    def on_arrival(self, specs: Sequence[ApplicationSpec],
+                   ) -> ReallocationResult: ...
+
+    def on_completion(self, app_id: str) -> ReallocationResult: ...
+
+    def on_resize(self, app_id: str, n_min: Optional[int] = None,
+                  n_max: Optional[int] = None,
+                  ) -> Optional[ReallocationResult]: ...
+
+    def on_tick(self, t: float) -> Optional[ReallocationResult]: ...
+
+    def containers_of(self, app_id: str) -> int: ...
+
+
+class _LegacyPolicyAdapter:
+    """Adapts a pre-runtime scheduler (submit/submit_batch/complete) to the
+    SchedulerPolicy interface, for third-party schedulers."""
+
+    def __init__(self, scheduler: Any):
+        self.scheduler = scheduler
+
+    def on_arrival(self, specs: Sequence[ApplicationSpec]):
+        if len(specs) > 1:
+            if not hasattr(self.scheduler, "submit_batch"):
+                # Looping submit() would apply/sample only the LAST result,
+                # silently dropping the burst's earlier adjustments.
+                raise ValueError(
+                    f"batched arrival of {len(specs)} specs requires "
+                    f"{type(self.scheduler).__name__}.submit_batch")
+            return self.scheduler.submit_batch(specs)
+        return self.scheduler.submit(specs[0])
+
+    def on_completion(self, app_id: str):
+        return self.scheduler.complete(app_id)
+
+    def on_resize(self, app_id: str, n_min=None, n_max=None):
+        return None                          # legacy schedulers cannot resize
+
+    def on_tick(self, t: float):
+        return None
+
+    def containers_of(self, app_id: str) -> int:
+        return self.scheduler.containers_of(app_id)
+
+
+def as_policy(scheduler: Any) -> Any:
+    """Return `scheduler` if it already speaks SchedulerPolicy, else wrap it."""
+    if hasattr(scheduler, "on_arrival") and hasattr(scheduler, "on_completion"):
+        return scheduler
+    if hasattr(scheduler, "submit") and hasattr(scheduler, "complete"):
+        return _LegacyPolicyAdapter(scheduler)
+    raise TypeError(
+        f"{type(scheduler).__name__} implements neither SchedulerPolicy "
+        f"(on_arrival/on_completion) nor the legacy submit/complete API")
+
+
+class PolicyTimer:
+    """Transparent SchedulerPolicy wrapper that measures per-event scheduling
+    wall time -- the quantity the paper calls per-event sharing overhead and
+    benchmarks/bench_scale.py reports as `per_event_policy_ms`."""
+
+    def __init__(self, policy: Any):
+        self.policy = as_policy(policy)
+        self.calls: List[Tuple[str, float]] = []     # (kind, seconds)
+
+    def _timed(self, kind: str, fn, *args):
+        t0 = _time.perf_counter()
+        try:
+            return fn(*args)
+        finally:
+            self.calls.append((kind, _time.perf_counter() - t0))
+
+    def on_arrival(self, specs):
+        return self._timed("arrival", self.policy.on_arrival, specs)
+
+    def on_completion(self, app_id):
+        return self._timed("completion", self.policy.on_completion, app_id)
+
+    def on_resize(self, app_id, n_min=None, n_max=None):
+        return self._timed("resize", self.policy.on_resize,
+                           app_id, n_min, n_max)
+
+    def on_tick(self, t):
+        return self._timed("tick", self.policy.on_tick, t)
+
+    def containers_of(self, app_id):
+        return self.policy.containers_of(app_id)
+
+    def __getattr__(self, name):
+        return getattr(self.policy, name)
+
+    # ------------------------------------------------------------- readouts
+
+    @property
+    def n_calls(self) -> int:
+        return len(self.calls)
+
+    def total_s(self) -> float:
+        return float(sum(s for _, s in self.calls))
+
+    def mean_ms(self) -> float:
+        return 1e3 * self.total_s() / max(self.n_calls, 1)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for kind, s in self.calls:
+            out[kind] = out.get(kind, 0.0) + s
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Per-app progress state + metric records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AppRuntime:
+    app: WorkloadApp
+    remaining_work: float            # container-seconds
+    containers: int = 0
+    paused_until: float = 0.0        # adjustment downtime
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    n_adjustments: int = 0
+
+    def rate(self, t: float) -> float:
+        if t < self.paused_until - _EPS:
+            return 0.0
+        return float(self.containers)
+
+
+@dataclasses.dataclass
+class MetricSample:
+    t: float
+    utilization: float               # Eq 1 (sum over m resources, in [0, m])
+    fairness_loss: float             # Eq 2
+    adjustment_overhead: int         # Eq 4 for this reallocation event
+    running: int
+    pending: int
+
+
+@dataclasses.dataclass
+class SimResult:
+    samples: List[MetricSample]
+    completions: Dict[str, AppRuntime]
+    total_adjustments: int
+    horizon_s: float
+
+    def time_averaged_utilization(self, t_max: Optional[float] = None) -> float:
+        """Time-weighted mean of Eq-1 utilization over [0, t_max].
+
+        Vectorized step-function integral: interval k carries the
+        utilization of sample k-1 (0 before the first sample), clipped
+        to [0, t_end]."""
+        if not self.samples:
+            return 0.0
+        t_end = t_max if t_max is not None else self.horizon_s
+        ns = len(self.samples)
+        st = np.fromiter((s.t for s in self.samples), np.float64, ns)
+        su = np.fromiter((s.utilization for s in self.samples), np.float64, ns)
+        edges = np.concatenate(([0.0], np.minimum(st, t_end), [t_end]))
+        u = np.concatenate(([0.0], su))
+        total = float((u * np.maximum(0.0, np.diff(edges))).sum())
+        return total / max(t_end, _EPS)
+
+    def max_fairness_loss(self) -> float:
+        return max((s.fairness_loss for s in self.samples), default=0.0)
+
+    def mean_fairness_loss(self) -> float:
+        if not self.samples:
+            return 0.0
+        return float(np.fromiter((s.fairness_loss for s in self.samples),
+                                 np.float64, len(self.samples)).mean())
+
+    def durations(self) -> Dict[str, float]:
+        return {a: (rt.finished_at - rt.submitted_at)
+                for a, rt in self.completions.items()
+                if rt.finished_at is not None}
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+class ClusterRuntime:
+    """The shared event loop.
+
+    Drives a `SchedulerPolicy` over a workload: arrivals come from the
+    workload stream, completions from vectorized progress integration
+    (linear data-parallel scaling, work in container-seconds; adjustment
+    downtime charged per §III-C.2), and `Resize`/`Tick` events from
+    `inject()` / `tick_interval_s`. Every processed event and every applied
+    `ReallocationResult` is published on `bus`.
+
+    With no injected events and `tick_interval_s=0` the event sequence,
+    samples and completions are bit-identical to the seed scalar loop
+    (`simulator.ReferenceClusterSimulator`).
+    """
+
+    def __init__(self, policy: Any,
+                 adjustment_cost_s: float = 60.0,
+                 rate_multiplier: float = 1.0,
+                 horizon_s: float = 48 * 3600.0,
+                 logger=None,
+                 batch_window_s: float = 0.0,
+                 tick_interval_s: float = 0.0,
+                 bus: Optional[EventBus] = None):
+        """`rate_multiplier` < 1 models task-level scheduling overhead
+        (baselines.TaskLevelOverheadModel); Dorm runs at 1.0 because its
+        TaskSchedulers place tasks locally (§III-D). `batch_window_s` > 0
+        coalesces arrivals landing within that window (and before the next
+        completion or injected event) into ONE policy pass."""
+        self.policy = as_policy(policy)
+        if (batch_window_s > 0
+                and isinstance(self.policy, _LegacyPolicyAdapter)
+                and not hasattr(self.policy.scheduler, "submit_batch")):
+            # A legacy scheduler without submit_batch would process a burst
+            # as N separate submits and only the last result would be
+            # applied/sampled -- reject instead of silently dropping events.
+            raise ValueError(
+                f"batch_window_s > 0 requires a SchedulerPolicy or a "
+                f"scheduler with submit_batch; "
+                f"{type(self.policy.scheduler).__name__} has neither")
+        self.adjustment_cost_s = adjustment_cost_s
+        self.rate_multiplier = rate_multiplier
+        self.horizon_s = horizon_s
+        self.logger = logger
+        self.batch_window_s = batch_window_s
+        self.tick_interval_s = tick_interval_s
+        self.bus = bus if bus is not None else EventBus()
+        self._injected: List[Event] = []
+        self.runtimes: Dict[str, AppRuntime] = {}
+        self.samples: List[MetricSample] = []
+        self.total_adjustments = 0
+
+    def inject(self, *events: Event) -> None:
+        """Queue external events (typically `Resize`) for the next run."""
+        self._injected.extend(events)
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, workload: Sequence[WorkloadApp]) -> SimResult:
+        arrivals = sorted(workload, key=lambda w: w.spec.submit_time)
+        injected = sorted(self._injected, key=lambda e: e.t)
+        n_total = len(arrivals)
+        ai = 0
+        ei = 0
+        t = 0.0
+        tick_dt = self.tick_interval_s
+        next_tick = tick_dt if tick_dt > 0 else np.inf
+
+        # Slot arrays (slot assigned at submission, in arrival order).
+        rem = np.zeros(n_total)
+        cont = np.zeros(n_total, dtype=np.int64)
+        paused = np.zeros(n_total)
+        active = np.zeros(n_total, dtype=bool)
+        slot_ids: List[Optional[str]] = [None] * n_total
+        slot_of: Dict[str, int] = {}
+        next_slot = 0
+        rate_mult = self.rate_multiplier
+        use_batch = self.batch_window_s > 0
+
+        def advance(t0: float, t1: float) -> None:
+            """Integrate progress over [t0, t1] (rates are piecewise-
+            constant, changing only at pause expiries in the interval)."""
+            if t1 <= t0:
+                return
+            lo = np.maximum(t0, np.minimum(paused, t1))
+            dt = t1 - lo
+            np.copyto(rem, np.maximum(0.0, rem - dt * cont * rate_mult),
+                      where=active)
+
+        def next_completion() -> Tuple[float, Optional[int]]:
+            if n_total == 0:
+                return np.inf, None
+            rate = cont * rate_mult
+            with np.errstate(divide="ignore", invalid="ignore"):
+                tf = np.where(active & (rate > 0),
+                              np.maximum(t, paused) + rem / rate, np.inf)
+            s = int(np.argmin(tf))
+            if not np.isfinite(tf[s]):
+                return np.inf, None
+            return float(tf[s]), s
+
+        def apply(res: ReallocationResult) -> None:
+            cont[active] = 0
+            counts = res.allocation.x.sum(axis=1)
+            for i, app_id in enumerate(res.allocation.app_ids):
+                s = slot_of.get(app_id)
+                if s is None or not active[s]:
+                    continue
+                c = int(counts[i])
+                cont[s] = c
+                rt = self.runtimes[app_id]
+                if c > 0 and rt.started_at is None:
+                    rt.started_at = t
+            for app_id in res.adjusted_app_ids:
+                s = slot_of.get(app_id)
+                if s is not None and active[s]:
+                    paused[s] = t + self.adjustment_cost_s
+                    self.runtimes[app_id].n_adjustments += 1
+            self.total_adjustments += len(res.adjusted_app_ids)
+
+        def admit(w: WorkloadApp, at: float) -> int:
+            nonlocal next_slot
+            s = next_slot
+            next_slot += 1
+            rt = AppRuntime(app=w, remaining_work=w.spec.serial_work,
+                            submitted_at=at)
+            self.runtimes[w.spec.app_id] = rt
+            slot_ids[s] = w.spec.app_id
+            slot_of[w.spec.app_id] = s
+            rem[s] = w.spec.serial_work
+            cont[s] = 0
+            paused[s] = 0.0
+            active[s] = True
+            return s
+
+        def finish(event: Event, res: Optional[ReallocationResult]) -> None:
+            self.bus.publish(event)
+            if res is not None:
+                apply(res)
+                self._sample(res, t)
+                self.bus.publish(Reallocated(t, event, res))
+
+        while True:
+            t_arr = (arrivals[ai].spec.submit_time
+                     if ai < n_total else np.inf)
+            t_inj = injected[ei].t if ei < len(injected) else np.inf
+            t_ext = min(t_inj, next_tick)
+            t_fin, fin_slot = next_completion()
+            t_next = min(t_arr, t_fin, t_ext)
+            if not np.isfinite(t_next) or t_next > self.horizon_s:
+                advance(t, min(self.horizon_s, t_next))
+                break
+            advance(t, t_next)
+            t = t_next
+
+            if t_fin <= t_arr and t_fin <= t_ext and fin_slot is not None:
+                app_id = slot_ids[fin_slot]
+                rt = self.runtimes[app_id]
+                rt.finished_at = t
+                rt.remaining_work = float(rem[fin_slot])
+                rt.containers = 0
+                rt.paused_until = float(paused[fin_slot])
+                active[fin_slot] = False
+                cont[fin_slot] = 0
+                del slot_of[app_id]
+                finish(Completion(t, app_id),
+                       self.policy.on_completion(app_id))
+            elif t_ext <= t_arr:
+                if t_inj <= next_tick:
+                    ev = injected[ei]
+                    ei += 1
+                    res = None
+                    if isinstance(ev, Resize):
+                        s = slot_of.get(ev.app_id)
+                        if s is not None and active[s]:
+                            res = self.policy.on_resize(
+                                ev.app_id, ev.n_min, ev.n_max)
+                    elif isinstance(ev, Tick):
+                        res = self.policy.on_tick(t)
+                    finish(ev, res)
+                else:
+                    next_tick += tick_dt
+                    finish(Tick(t), self.policy.on_tick(t))
+            elif use_batch:
+                # Event batching: pull in every arrival landing within the
+                # window (and strictly before the next completion or external
+                # event); admit the whole burst with ONE policy pass at the
+                # last arrival.
+                batch = [arrivals[ai]]
+                ai += 1
+                t_end = min(t + self.batch_window_s, self.horizon_s)
+                t_stop = min(t_fin, t_ext)
+                while (ai < n_total
+                       and arrivals[ai].spec.submit_time <= t_end
+                       and arrivals[ai].spec.submit_time < t_stop):
+                    batch.append(arrivals[ai])
+                    ai += 1
+                t_last = batch[-1].spec.submit_time
+                advance(t, t_last)
+                t = t_last
+                for w in batch:
+                    admit(w, w.spec.submit_time)
+                specs = tuple(w.spec for w in batch)
+                finish(Arrival(t, specs), self.policy.on_arrival(specs))
+            else:
+                w = arrivals[ai]
+                ai += 1
+                admit(w, t)
+                finish(Arrival(t, (w.spec,)),
+                       self.policy.on_arrival((w.spec,)))
+
+        # Sync runtime objects from the slot arrays for result consumers.
+        for app_id, s in slot_of.items():
+            rt = self.runtimes[app_id]
+            rt.remaining_work = float(rem[s])
+            rt.containers = int(cont[s])
+            rt.paused_until = float(paused[s])
+
+        return SimResult(samples=self.samples, completions=self.runtimes,
+                         total_adjustments=self.total_adjustments,
+                         horizon_s=min(self.horizon_s, t))
+
+    # ------------------------------------------------------------- sampling
+
+    def _sample(self, res: ReallocationResult, t: float) -> None:
+        self.samples.append(MetricSample(
+            t=t,
+            utilization=res.utilization,
+            fairness_loss=res.fairness_loss,
+            adjustment_overhead=res.adjustment_overhead,
+            running=len(res.allocation.app_ids),
+            pending=len(res.pending_app_ids)))
+        if self.logger is not None:
+            self.logger.log("sample", t=t, utilization=res.utilization,
+                            fairness_loss=res.fairness_loss,
+                            adjustment_overhead=res.adjustment_overhead,
+                            running=len(res.allocation.app_ids),
+                            pending=len(res.pending_app_ids),
+                            adjusted=list(res.adjusted_app_ids),
+                            started=list(res.started_app_ids))

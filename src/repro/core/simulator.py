@@ -1,4 +1,4 @@
-"""Event-driven cluster simulator driving Dorm or a baseline scheduler.
+"""Cluster simulation facades over the shared `core.runtime` event loop.
 
 Reproduces the paper's evaluation (§V): the Table-II workload is submitted
 online; on every arrival/completion the scheduler reallocates; application
@@ -12,94 +12,31 @@ overhead Eq 4) plus per-application completion records for speedup (Fig 9a).
 
 Two implementations of the same semantics:
 
-* `ClusterSimulator` -- the production path. Progress integration and
-  completion prediction are vectorized over numpy slot arrays (one slot per
-  app), so per-event cost is O(n_apps) numpy instead of O(n_apps) python
-  object traffic; with `batch_window_s > 0` coincident/bursty arrivals are
-  admitted in one scheduler pass (event batching). At `batch_window_s = 0`
-  (default) the event sequence, samples and completions are bit-identical
-  to the reference implementation (pinned by tests/test_scale.py).
-* `ReferenceClusterSimulator` -- the seed's scalar event loop, kept as the
-  golden reference for the vectorized path.
+* `ClusterSimulator` -- the production path: a thin facade that builds a
+  `runtime.ClusterRuntime` around the scheduler (any `SchedulerPolicy` or a
+  legacy submit/complete scheduler) and runs the shared vectorized event
+  loop. At `batch_window_s = 0` (default) the event sequence, samples and
+  completions are bit-identical to the reference implementation (pinned by
+  tests/test_scale.py).
+* `ReferenceClusterSimulator` -- the seed's scalar event loop, kept verbatim
+  as the golden reference for the runtime's vectorized path.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .master import DormMaster, ReallocationResult
+from .runtime import (AppRuntime, ClusterRuntime, EventBus, MetricSample,
+                      ReallocationResult, SimResult, as_policy)
 from .workload import WorkloadApp
 
 _EPS = 1e-9
 
-
-@dataclasses.dataclass
-class AppRuntime:
-    app: WorkloadApp
-    remaining_work: float            # container-seconds
-    containers: int = 0
-    paused_until: float = 0.0        # adjustment downtime
-    submitted_at: float = 0.0
-    started_at: Optional[float] = None
-    finished_at: Optional[float] = None
-    n_adjustments: int = 0
-
-    def rate(self, t: float) -> float:
-        if t < self.paused_until - _EPS:
-            return 0.0
-        return float(self.containers)
-
-
-@dataclasses.dataclass
-class MetricSample:
-    t: float
-    utilization: float               # Eq 1 (sum over m resources, in [0, m])
-    fairness_loss: float             # Eq 2
-    adjustment_overhead: int         # Eq 4 for this reallocation event
-    running: int
-    pending: int
-
-
-@dataclasses.dataclass
-class SimResult:
-    samples: List[MetricSample]
-    completions: Dict[str, AppRuntime]
-    total_adjustments: int
-    horizon_s: float
-
-    def time_averaged_utilization(self, t_max: Optional[float] = None) -> float:
-        """Time-weighted mean of Eq-1 utilization over [0, t_max].
-
-        Vectorized step-function integral: interval k carries the
-        utilization of sample k-1 (0 before the first sample), clipped
-        to [0, t_end]."""
-        if not self.samples:
-            return 0.0
-        t_end = t_max if t_max is not None else self.horizon_s
-        ns = len(self.samples)
-        st = np.fromiter((s.t for s in self.samples), np.float64, ns)
-        su = np.fromiter((s.utilization for s in self.samples), np.float64, ns)
-        edges = np.concatenate(([0.0], np.minimum(st, t_end), [t_end]))
-        u = np.concatenate(([0.0], su))
-        total = float((u * np.maximum(0.0, np.diff(edges))).sum())
-        return total / max(t_end, _EPS)
-
-    def max_fairness_loss(self) -> float:
-        return max((s.fairness_loss for s in self.samples), default=0.0)
-
-    def mean_fairness_loss(self) -> float:
-        if not self.samples:
-            return 0.0
-        return float(np.fromiter((s.fairness_loss for s in self.samples),
-                                 np.float64, len(self.samples)).mean())
-
-    def durations(self) -> Dict[str, float]:
-        return {a: (rt.finished_at - rt.submitted_at)
-                for a, rt in self.completions.items()
-                if rt.finished_at is not None}
+__all__ = [
+    "AppRuntime", "MetricSample", "SimResult", "ClusterSimulator",
+    "ReferenceClusterSimulator", "speedup_ratios",
+]
 
 
 class _SimulatorBase:
@@ -132,10 +69,12 @@ class _SimulatorBase:
             if not self._supports_batching:
                 raise ValueError(
                     f"{type(self).__name__} does not support batch_window_s")
-            if not hasattr(scheduler, "submit_batch"):
+            if not (hasattr(scheduler, "on_arrival")
+                    or hasattr(scheduler, "submit_batch")):
                 raise ValueError(
                     f"batch_window_s > 0 requires a scheduler with "
-                    f"submit_batch; {type(scheduler).__name__} has none")
+                    f"on_arrival or submit_batch; "
+                    f"{type(scheduler).__name__} has neither")
         self.runtimes: Dict[str, AppRuntime] = {}
         self.samples: List[MetricSample] = []
         self.total_adjustments = 0
@@ -159,157 +98,50 @@ class _SimulatorBase:
 
 
 class ClusterSimulator(_SimulatorBase):
-    """Vectorized event-driven simulator (the production path).
+    """Facade: one `ClusterRuntime` drive of the scheduler (production path).
 
-    Per-app state lives in numpy slot arrays; progress integration and
-    next-completion prediction are single vectorized expressions using the
-    exact arithmetic of the reference implementation, so the default
-    configuration reproduces its timeline bit-for-bit."""
+    Kept for API stability (every benchmark/example constructs simulators);
+    new code that needs Resize/Tick injection or bus subscribers should use
+    `runtime.ClusterRuntime` directly -- `self.runtime` is that instance."""
 
     _supports_batching = True
+
+    def __init__(self, scheduler, workload: Sequence[WorkloadApp],
+                 adjustment_cost_s: float = 60.0,
+                 rate_multiplier: float = 1.0,
+                 horizon_s: float = 48 * 3600.0,
+                 logger=None,
+                 batch_window_s: float = 0.0,
+                 tick_interval_s: float = 0.0,
+                 bus: Optional[EventBus] = None):
+        super().__init__(scheduler, workload,
+                         adjustment_cost_s=adjustment_cost_s,
+                         rate_multiplier=rate_multiplier,
+                         horizon_s=horizon_s, logger=logger,
+                         batch_window_s=batch_window_s)
+        self.runtime = ClusterRuntime(
+            as_policy(scheduler),
+            adjustment_cost_s=adjustment_cost_s,
+            rate_multiplier=rate_multiplier,
+            horizon_s=horizon_s, logger=logger,
+            batch_window_s=batch_window_s,
+            tick_interval_s=tick_interval_s, bus=bus)
 
     # ------------------------------------------------------------------ run
 
     def run(self) -> SimResult:
-        arrivals = sorted(self.workload, key=lambda w: w.spec.submit_time)
-        n_total = len(arrivals)
-        ai = 0
-        t = 0.0
-
-        # Slot arrays (slot assigned at submission, in arrival order).
-        rem = np.zeros(n_total)
-        cont = np.zeros(n_total, dtype=np.int64)
-        paused = np.zeros(n_total)
-        active = np.zeros(n_total, dtype=bool)
-        slot_ids: List[Optional[str]] = [None] * n_total
-        slot_of: Dict[str, int] = {}
-        next_slot = 0
-        rate_mult = self.rate_multiplier
-        use_batch = self.batch_window_s > 0
-
-        def advance(t0: float, t1: float) -> None:
-            """Integrate progress over [t0, t1] (rates are piecewise-
-            constant, changing only at pause expiries in the interval)."""
-            if t1 <= t0:
-                return
-            lo = np.maximum(t0, np.minimum(paused, t1))
-            dt = t1 - lo
-            np.copyto(rem, np.maximum(0.0, rem - dt * cont * rate_mult),
-                      where=active)
-
-        def next_completion() -> Tuple[float, Optional[int]]:
-            if n_total == 0:
-                return np.inf, None
-            rate = cont * rate_mult
-            with np.errstate(divide="ignore", invalid="ignore"):
-                tf = np.where(active & (rate > 0),
-                              np.maximum(t, paused) + rem / rate, np.inf)
-            s = int(np.argmin(tf))
-            if not np.isfinite(tf[s]):
-                return np.inf, None
-            return float(tf[s]), s
-
-        def apply(res: ReallocationResult) -> None:
-            cont[active] = 0
-            counts = res.allocation.x.sum(axis=1)
-            for i, app_id in enumerate(res.allocation.app_ids):
-                s = slot_of.get(app_id)
-                if s is None or not active[s]:
-                    continue
-                c = int(counts[i])
-                cont[s] = c
-                rt = self.runtimes[app_id]
-                if c > 0 and rt.started_at is None:
-                    rt.started_at = t
-            for app_id in res.adjusted_app_ids:
-                s = slot_of.get(app_id)
-                if s is not None and active[s]:
-                    paused[s] = t + self.adjustment_cost_s
-                    self.runtimes[app_id].n_adjustments += 1
-            self.total_adjustments += len(res.adjusted_app_ids)
-
-        def admit(w: WorkloadApp, at: float) -> int:
-            nonlocal next_slot
-            s = next_slot
-            next_slot += 1
-            rt = AppRuntime(app=w, remaining_work=w.spec.serial_work,
-                            submitted_at=at)
-            self.runtimes[w.spec.app_id] = rt
-            slot_ids[s] = w.spec.app_id
-            slot_of[w.spec.app_id] = s
-            rem[s] = w.spec.serial_work
-            cont[s] = 0
-            paused[s] = 0.0
-            active[s] = True
-            return s
-
-        while True:
-            t_arr = (arrivals[ai].spec.submit_time
-                     if ai < n_total else np.inf)
-            t_fin, fin_slot = next_completion()
-            t_next = min(t_arr, t_fin)
-            if not np.isfinite(t_next) or t_next > self.horizon_s:
-                advance(t, min(self.horizon_s, t_next))
-                break
-            advance(t, t_next)
-            t = t_next
-
-            if t_fin <= t_arr and fin_slot is not None:
-                app_id = slot_ids[fin_slot]
-                rt = self.runtimes[app_id]
-                rt.finished_at = t
-                rt.remaining_work = float(rem[fin_slot])
-                rt.containers = 0
-                rt.paused_until = float(paused[fin_slot])
-                active[fin_slot] = False
-                cont[fin_slot] = 0
-                del slot_of[app_id]
-                res = self.scheduler.complete(app_id)
-                apply(res)
-                self._sample(res, t)
-            elif use_batch:
-                # Event batching: pull in every arrival landing within the
-                # window (and strictly before the next completion); admit
-                # the whole burst with ONE reallocation at the last arrival.
-                batch = [arrivals[ai]]
-                ai += 1
-                t_end = min(t + self.batch_window_s, self.horizon_s)
-                while (ai < n_total
-                       and arrivals[ai].spec.submit_time <= t_end
-                       and arrivals[ai].spec.submit_time < t_fin):
-                    batch.append(arrivals[ai])
-                    ai += 1
-                t_last = batch[-1].spec.submit_time
-                advance(t, t_last)
-                t = t_last
-                for w in batch:
-                    admit(w, w.spec.submit_time)
-                res = self.scheduler.submit_batch([w.spec for w in batch])
-                apply(res)
-                self._sample(res, t)
-            else:
-                w = arrivals[ai]
-                ai += 1
-                admit(w, t)
-                res = self.scheduler.submit(w.spec)
-                apply(res)
-                self._sample(res, t)
-
-        # Sync runtime objects from the slot arrays for result consumers.
-        for app_id, s in slot_of.items():
-            rt = self.runtimes[app_id]
-            rt.remaining_work = float(rem[s])
-            rt.containers = int(cont[s])
-            rt.paused_until = float(paused[s])
-
-        return SimResult(samples=self.samples, completions=self.runtimes,
-                         total_adjustments=self.total_adjustments,
-                         horizon_s=min(self.horizon_s, t))
+        result = self.runtime.run(self.workload)
+        # Mirror runtime state so pre-runtime consumers of the simulator
+        # object itself keep working.
+        self.runtimes = self.runtime.runtimes
+        self.samples = self.runtime.samples
+        self.total_adjustments = self.runtime.total_adjustments
+        return result
 
 
 class ReferenceClusterSimulator(_SimulatorBase):
-    """The seed's scalar event loop -- golden reference for `ClusterSimulator`
-    (no event batching; one scheduler pass per arrival)."""
+    """The seed's scalar event loop -- golden reference for the runtime's
+    vectorized path (no event batching; one scheduler pass per arrival)."""
 
     # ------------------------------------------------------------------ run
 

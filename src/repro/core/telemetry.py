@@ -30,6 +30,28 @@ class MetricsLogger:
             self._fh.write(json.dumps(row) + "\n")
             self._fh.flush()
 
+    def attach(self, bus) -> None:
+        """Subscribe to a `runtime.EventBus`: every cluster event becomes a
+        kind="event" row (the samples already flow in via the runtime's
+        `logger=` hook; this adds the event stream itself -- arrivals with
+        app ids, completions, resizes, ticks)."""
+        from .runtime import Arrival, Completion, Reallocated, Resize, Tick
+
+        bus.subscribe(Arrival, lambda e: self.log(
+            "event", event="arrival", t=e.t,
+            apps=[s.app_id for s in e.specs]))
+        bus.subscribe(Completion, lambda e: self.log(
+            "event", event="completion", t=e.t, app=e.app_id))
+        bus.subscribe(Resize, lambda e: self.log(
+            "event", event="resize", t=e.t, app=e.app_id,
+            n_min=e.n_min, n_max=e.n_max))
+        bus.subscribe(Tick, lambda e: self.log(
+            "event", event="tick", t=e.t))
+        bus.subscribe(Reallocated, lambda e: self.log(
+            "event", event="reallocated", t=e.t,
+            adjusted=list(e.result.adjusted_app_ids),
+            started=list(e.result.started_app_ids)))
+
     def of_kind(self, kind: str) -> List[Dict[str, Any]]:
         return [r for r in self.rows if r["kind"] == kind]
 

@@ -87,6 +87,23 @@ class ApplicationSpec:
         if self.weight < 1:
             raise ValueError("weight must be >= 1")
 
+    def with_bounds(self, n_min: Optional[int] = None,
+                    n_max: Optional[int] = None) -> "ApplicationSpec":
+        """Copy with new elasticity bounds (runtime `Resize` events re-bound
+        an app mid-flight; None keeps the existing bound).
+
+        Moving one bound past the other clamps the unspecified bound so
+        1 <= n_min <= n_max always holds (capping n_max below the current
+        n_min also lowers n_min, and vice versa); explicitly passing an
+        inconsistent pair raises."""
+        new_min = self.n_min if n_min is None else max(1, int(n_min))
+        new_max = self.n_max if n_max is None else max(1, int(n_max))
+        if n_min is None:
+            new_min = min(new_min, new_max)
+        if n_max is None:
+            new_max = max(new_max, new_min)
+        return dataclasses.replace(self, n_min=new_min, n_max=new_max)
+
 
 @dataclasses.dataclass(frozen=True)
 class SlaveSpec:
@@ -187,14 +204,25 @@ def validate_allocation(alloc: Allocation, apps: Sequence[ApplicationSpec],
         return
     d = demand_matrix(apps)                    # (n, m)
     cap = cluster.capacity_matrix()            # (b, m)
-    used = alloc.x.T @ d                       # (b, m)
+    # float64 matmul: BLAS path (int64 matmul is a slow loop), exact for
+    # container counts/demands far below 2**53.
+    used = alloc.x.astype(np.float64).T @ d    # (b, m)
     if (used > cap + 1e-6).any():
         j, k = np.argwhere(used > cap + 1e-6)[0]
         raise ValueError(
             f"capacity violated on slave {j} resource {k}: {used[j, k]} > {cap[j, k]}")
     totals = alloc.x.sum(axis=1)
-    for i, app in enumerate(apps):
-        if totals[i] > app.n_max:
-            raise ValueError(f"{app.app_id}: {totals[i]} > n_max={app.n_max}")
-        if enforce_n_min and totals[i] < app.n_min:
-            raise ValueError(f"{app.app_id}: {totals[i]} < n_min={app.n_min}")
+    n = len(apps)
+    nmax = np.fromiter((a.n_max for a in apps), np.int64, n)
+    over = totals > nmax
+    if over.any():
+        i = int(np.flatnonzero(over)[0])
+        raise ValueError(
+            f"{apps[i].app_id}: {totals[i]} > n_max={apps[i].n_max}")
+    if enforce_n_min:
+        nmin = np.fromiter((a.n_min for a in apps), np.int64, n)
+        under = totals < nmin
+        if under.any():
+            i = int(np.flatnonzero(under)[0])
+            raise ValueError(
+                f"{apps[i].app_id}: {totals[i]} < n_min={apps[i].n_min}")

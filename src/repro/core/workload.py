@@ -270,3 +270,14 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
                                     base_duration_s=dur))
             slot += 1
     return apps
+
+
+# ---------------------------------------------------------------------------
+# Trace replay layer: `repro.core.workload.replay`
+# ---------------------------------------------------------------------------
+# Real-cluster logs (Philly/Alibaba-style CSVs) parse into the same
+# WorkloadApp stream this generator emits, so simulator, live runs and every
+# baseline consume identical scenarios. Imported at the bottom to avoid a
+# cycle (replay builds the WorkloadApp objects defined above).
+from . import replay as replay                               # noqa: E402
+from .replay import ReplayConfig, replay_trace               # noqa: E402,F401

@@ -247,3 +247,31 @@ class ElasticJaxProtocol:
     def start(self, app: ApplicationSpec, n_containers: int) -> None:
         devs = self._allocate(app.app_id, n_containers)
         self.trainers[app.app_id].start(devs)
+
+
+class RuntimeTrainingBridge:
+    """Drives REAL ElasticTrainers from the shared `core.runtime` event loop.
+
+    Attach to a `ClusterRuntime`'s bus: after every applied reallocation
+    (`Reallocated` event) the bridge runs `steps_per_event` optimizer steps
+    on every live trainer. A DormMaster whose protocol is an
+    `ElasticJaxProtocol`, driven by that runtime, then exercises the full
+    loop end-to-end: arrivals/completions/injected `Resize` events ->
+    optimizer -> save/kill/resume with resharding -> continued training --
+    i.e. runtime-driven resizes of real JAX jobs."""
+
+    def __init__(self, protocol: ElasticJaxProtocol,
+                 steps_per_event: int = 1):
+        self.protocol = protocol
+        self.steps_per_event = steps_per_event
+        self.n_events = 0
+
+    def attach(self, bus) -> None:
+        from ..core.runtime import Reallocated
+        bus.subscribe(Reallocated, self._on_reallocated)
+
+    def _on_reallocated(self, ev) -> None:
+        self.n_events += 1
+        for tr in self.protocol.trainers.values():
+            if tr.state is not None:
+                tr.train_steps(self.steps_per_event)
