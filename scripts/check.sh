@@ -5,6 +5,7 @@
 #
 #   scripts/check.sh                 # tier-1 tests
 #   scripts/check.sh --bench        # tests + scale benchmark -> BENCH_scale.json
+#                                   #   (includes the perf regression gate)
 #   scripts/check.sh -k runtime     # extra args forwarded to pytest
 set -uo pipefail
 cd "$(dirname "$0")/.."
@@ -28,5 +29,32 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "${ARGS[@]+"${A
 if [ "$RUN_BENCH" = "1" ]; then
     echo "== scale benchmark (writes BENCH_scale.json) =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m benchmarks.bench_scale --json BENCH_scale.json
+        python -m benchmarks.bench_scale --json BENCH_scale.json --xl
+    echo "== perf regression gate =="
+    # Ratios only, computed between runs of ONE process on one machine --
+    # absolute milliseconds are never compared across runs. Floors sit well
+    # below the measured targets (incremental ~6x, soa ~3.5x medians on a
+    # quiet box) so background load cannot flake the gate, while a real
+    # regression (losing the delta path or the SoA engine) still trips it.
+    python - <<'PY'
+import json, sys
+rep = json.load(open("BENCH_scale.json"))
+checks = [
+    ("incremental_speedup", rep["incremental_speedup"], 2.0),
+    ("soa_speedup", rep["soa_speedup"], 2.0),
+    ("timeline_bit_exact", rep["timeline_bit_exact"], True),
+    ("timeline_bit_exact_vs_legacy_engine",
+     rep["timeline_bit_exact_vs_legacy_engine"], True),
+]
+failed = False
+for name, value, floor in checks:
+    if isinstance(floor, bool):
+        ok = value is True
+        print(f"  {name}: {value} (required: {floor})" + ("" if ok else "  FAIL"))
+    else:
+        ok = value >= floor
+        print(f"  {name}: {value:.2f}x (floor: {floor}x)" + ("" if ok else "  FAIL"))
+    failed |= not ok
+sys.exit(1 if failed else 0)
+PY
 fi

@@ -5,7 +5,8 @@ from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
-                  drf_shares, fairness_loss, saturating_counts)
+                  drf_container_counts_reference, drf_shares, fairness_loss,
+                  saturating_counts)
 from .master import DormMaster
 from .metrics import (actual_shares, adjusted_apps, cluster_fairness_loss,
                       container_churn, per_resource_utilization,
@@ -22,6 +23,7 @@ from .runtime import (AppRuntime, Arrival, ClusterRuntime, Completion, Event,
 from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
                         speedup_ratios)
 from .slave import Container, DormSlave
+from .state import ClusterState, LazyAppViews, LazySlaveViews, StateSlaveView
 from .telemetry import MetricsLogger
 from .types import (Allocation, ApplicationSpec, ClusterSpec, ResourceVector,
                     SlaveSpec, demand_matrix, validate_allocation)
@@ -35,7 +37,8 @@ __all__ = [
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
     "RecordingProtocol", "MESOS_SCHED_LATENCY_S", "DRFScheduler",
     "StaticScheduler", "TaskLevelOverheadModel", "IncrementalDRF",
-    "dominant_share", "drf_container_counts", "drf_shares", "fairness_loss",
+    "dominant_share", "drf_container_counts",
+    "drf_container_counts_reference", "drf_shares", "fairness_loss",
     "saturating_counts", "DormMaster", "ReallocationResult",
     "actual_shares", "adjusted_apps", "cluster_fairness_loss",
     "container_churn", "per_resource_utilization",
@@ -49,6 +52,7 @@ __all__ = [
     "SchedulerPolicy", "SimResult", "Tick", "as_policy",
     "ClusterSimulator", "ReferenceClusterSimulator", "speedup_ratios",
     "Container", "DormSlave",
+    "ClusterState", "LazyAppViews", "LazySlaveViews", "StateSlaveView",
     "MetricsLogger", "Allocation", "ApplicationSpec", "ClusterSpec",
     "ResourceVector", "SlaveSpec", "demand_matrix", "validate_allocation",
     "BASELINE_STATIC_CONTAINERS", "MEAN_INTERARRIVAL_S", "SCALE_CLASSES",

@@ -30,18 +30,22 @@ def dominant_share(n_containers: int, demand: np.ndarray,
 
 
 def drf_shares(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-               counts: Optional[Dict[str, int]] = None) -> Dict[str, float]:
+               counts: Optional[Dict[str, int]] = None,
+               d: Optional[np.ndarray] = None) -> Dict[str, float]:
     """Weighted-DRF progressive filling -> theoretical dominant share per app.
 
     Returns {app_id: s_hat_i}. Also respects each app's n_max (an app stops
     receiving containers once saturated) and the aggregate capacity.
     `counts`: optionally reuse an existing `drf_container_counts` result
-    (the filling is the expensive part on large clusters).
+    (the filling is the expensive part on large clusters). `d`: optionally
+    reuse a precomputed demand matrix (the SoA engine keeps one
+    incrementally, saving the per-event (n, m) stack).
     """
     if counts is None:
         counts = drf_container_counts(apps, cluster)
     total = cluster.total_capacity()
-    d = demand_matrix(apps)
+    if d is None:
+        d = demand_matrix(apps)
     if not apps:
         return {}
     # One vectorized pass (same arithmetic as per-app `dominant_share`):
@@ -56,20 +60,17 @@ def drf_shares(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     return {app.app_id: float(shares[i]) for i, app in enumerate(apps)}
 
 
-def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-                         ) -> Dict[str, int]:
-    """The container counts weighted-DRF progressive filling would grant.
+def drf_container_counts_reference(apps: Sequence[ApplicationSpec],
+                                   cluster: ClusterSpec) -> Dict[str, int]:
+    """The seed's one-grant-at-a-time progressive filling -- kept verbatim as
+    the golden reference for the vectorized `drf_container_counts` (and as
+    the PR-2 cost model for the benchmark's legacy engine).
 
     Deterministic: ties broken by submission order. Every app first receives
     n_min containers (the paper guarantees the minimum); filling proceeds above
     that. If even the n_min total exceeds aggregate capacity, apps are granted
     their n_min in DRF order while capacity lasts (the optimizer separately
     decides which apps actually run -- here we only need the fairness target).
-
-    Hot path: the filling grants one container at a time (up to sum n_max
-    grants per call) and runs on every reallocation, so the inner loop uses
-    plain python floats over the (small) m resource axis instead of numpy
-    per-container ops -- same arithmetic, ~10x less overhead at 1000 slaves.
     """
     if not apps:
         return {}
@@ -129,6 +130,98 @@ def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     return counts
 
 
+def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                         ) -> Dict[str, int]:
+    """Vectorized weighted-DRF progressive filling.
+
+    Produces the same counts as `drf_container_counts_reference` without the
+    per-grant heap loop: the heap pops grants in globally sorted
+    (weighted share, app index) order, and a granted app's next share never
+    sorts below the share just popped, so the whole grant sequence equals the
+    pre-sorted "ladder" of every app's per-container share values. Blocked
+    apps can be retired eagerly -- aggregate capacity only shrinks, so an app
+    whose demand does not fit now can never fit later. That turns the filling
+    into a few cumulative-sum passes over the sorted ladder (one extra pass
+    per capacity-exhaustion point) instead of O(total grants) heap rounds.
+
+    Exactness: share keys use the same multiply-then-divide float sequence as
+    the reference; capacity bookkeeping batches per-grant subtractions into
+    sums, which is bit-identical for integer-valued demands (exact float64
+    integers) and may differ in the last ulp otherwise -- every solver path
+    in this repo uses ONE of the two implementations consistently, so
+    cross-path bit-exactness never mixes the two.
+    """
+    if not apps:
+        return {}
+    n = len(apps)
+    total = cluster.total_capacity().astype(np.float64)
+    d = demand_matrix(apps).astype(np.float64)                  # (n, m)
+    pos = total > 0
+    w = np.fromiter((a.weight for a in apps), np.float64, n)
+    n_min = np.fromiter((a.n_min for a in apps), np.int64, n)
+    n_max = np.fromiter((a.n_max for a in apps), np.int64, n)
+
+    def shares_at(counts: np.ndarray) -> np.ndarray:
+        """max_k (n_i * d_{i,k}) / C_k / w_i, 0 where C_k == 0 (same float
+        op order as the reference's `weighted_share`)."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(pos[None, :],
+                              (counts[:, None] * d) / total[None, :], 0.0)
+        return (ratios.max(axis=1) if ratios.size else np.zeros(n)) / w
+
+    # Phase 1 -- guarantee n_min, in DRF (smallest weighted share) order.
+    cnt = np.zeros(n, np.int64)
+    remaining = total.copy()
+    need = n_min[:, None] * d                                   # (n, m)
+    if np.all(need.sum(axis=0) <= remaining + 1e-9):
+        # Common case: every minimum fits in aggregate -- grant all at once.
+        cnt[:] = n_min
+        remaining -= need.sum(axis=0)
+    else:
+        for i in np.argsort(shares_at(n_min), kind="stable"):
+            if np.all(need[i] <= remaining + 1e-9):
+                cnt[i] = n_min[i]
+                remaining -= need[i]
+
+    # Phase 2 -- progressive filling above n_min: sorted ladder of per-grant
+    # shares for every app that received its minimum.
+    active = np.flatnonzero(cnt > 0)
+    lengths = np.maximum(n_max[active] - cnt[active], 0)
+    total_e = int(lengths.sum())
+    if total_e:
+        i_arr = np.repeat(active, lengths)
+        offsets = np.concatenate(([0], np.cumsum(lengths[:-1])))
+        c_arr = (np.arange(total_e)
+                 - np.repeat(offsets, lengths)
+                 + np.repeat(cnt[active], lengths))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(pos[None, :],
+                              (c_arr[:, None] * d[i_arr]) / total[None, :],
+                              0.0)
+        keys = ratios.max(axis=1) / w[i_arr]
+        order_e = np.lexsort((i_arr, keys))
+        i_s = i_arr[order_e]
+        d_s = d[i_s]
+        dropped = np.zeros(n, bool)
+        while i_s.size:
+            cum = np.cumsum(d_s, axis=0)
+            ok = (cum <= remaining[None, :] + 1e-9).all(axis=1)
+            k = int(i_s.size if ok.all() else np.argmin(ok))
+            if k:
+                cnt += np.bincount(i_s[:k], minlength=n)
+                remaining = remaining - cum[k - 1]
+            if k == i_s.size:
+                break
+            # Retire every app that can no longer fit one container (the
+            # blocked app among them); their remaining ladder entries drop.
+            dropped |= ~(d <= remaining[None, :] + 1e-9).all(axis=1)
+            keep = ~dropped[i_s[k:]]
+            i_s = i_s[k:][keep]
+            d_s = d_s[k:][keep]
+
+    return {app.app_id: int(cnt[i]) for i, app in enumerate(apps)}
+
+
 def fairness_loss(actual_shares: Dict[str, float],
                   theoretical_shares: Dict[str, float]) -> float:
     """Cluster fairness loss (Eq 2): sum_i |s_i - s_hat_i|."""
@@ -184,15 +277,20 @@ class IncrementalDRF:
         self.full_refills = 0
 
     def targets(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                reference: bool = False,
                 ) -> Tuple[Dict[str, int], Dict[str, float], bool]:
         """-> (counts, shares, fast): `fast` tells the caller whether the
-        saturating fast path answered (delta reallocation keys off it)."""
+        saturating fast path answered (delta reallocation keys off it).
+        `reference=True` routes the fallback through the seed's
+        one-grant-at-a-time filling (legacy-engine cost model)."""
         counts = saturating_counts(apps, cluster)
         fast = counts is not None
         if fast:
             self.fast_hits += 1
         else:
             self.full_refills += 1
-            counts = drf_container_counts(apps, cluster)
+            fill = drf_container_counts_reference if reference \
+                else drf_container_counts
+            counts = fill(apps, cluster)
         shares = drf_shares(apps, cluster, counts=counts)
         return counts, shares, fast

@@ -8,9 +8,25 @@ Responsibilities:
   * keep previous allocations when the optimizer reports infeasibility
     (paper: "Dorm would keep existing resource allocations until more running
     applications finish and release their resources").
+
+Two bookkeeping engines behind the same API (`OptimizerConfig.soa`):
+
+  * SoA (default): all placement state lives in a `core.state.ClusterState`
+    -- one in-place matrix, incrementally-maintained free capacity, and
+    LAZY materialization of `Partition`/`TaskExecutor`/`TaskScheduler`/
+    container objects. Enforcement touches only the apps whose rows
+    changed; metrics are computed from O(n*m) arrays.
+  * legacy (`soa=False`): the PR-2 dict-of-objects engine -- one Container +
+    TaskExecutor + TaskScheduler Python object per granted container,
+    created and destroyed on every adjustment. Kept (like
+    `ReferenceClusterSimulator`) as the golden baseline that
+    benchmarks/bench_scale.py measures the SoA speedup ratio against, in
+    ONE process. Both engines produce bit-identical allocation timelines
+    (tests/test_state.py).
 """
 from __future__ import annotations
 
+import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -18,10 +34,11 @@ import numpy as np
 from .adjustment import AdjustmentProtocol, CheckpointHandle, RecordingProtocol
 from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
                       resource_utilization)
-from .optimizer import OptimizerConfig, make_optimizer
+from .optimizer import OptimizerConfig, _shares_vec, make_optimizer
 from .partition import Partition, TaskExecutor, TaskScheduler
 from .runtime import ReallocationResult
 from .slave import DormSlave
+from .state import ClusterState, LazyAppViews, LazySlaveViews
 from .types import Allocation, ApplicationSpec, ClusterSpec, validate_allocation
 
 __all__ = ["DormMaster", "ReallocationResult"]
@@ -33,25 +50,38 @@ class DormMaster:
                  optimizer_cfg: OptimizerConfig = OptimizerConfig(),
                  protocol: Optional[AdjustmentProtocol] = None):
         self.cluster = cluster
-        self.slaves: Dict[str, DormSlave] = {
-            s.slave_id: DormSlave(s) for s in cluster.slaves}
-        self.slave_ids: Tuple[str, ...] = tuple(s.slave_id for s in cluster.slaves)
         cfg = optimizer_cfg
+        self._soa = cfg.soa
+        self.slave_ids: Tuple[str, ...] = tuple(s.slave_id for s in cluster.slaves)
         # "milp" (exact), "greedy" (heuristic), or "auto" (MILP below
         # cfg.auto_switch_vars variables, greedy above -- the scale path).
         self.optimizer = make_optimizer(optimizer_kind, cfg)
         self.protocol: AdjustmentProtocol = protocol or RecordingProtocol()
-        self.partitions: Dict[str, Partition] = {}       # running apps
         self.specs: Dict[str, ApplicationSpec] = {}      # running + pending
         self.pending: List[str] = []                     # admitted, not placed
         self.prev_alloc: Optional[Allocation] = None
         self.checkpoints: Dict[str, CheckpointHandle] = {}
-        self.executors: Dict[str, List[TaskExecutor]] = {}
-        self.schedulers: Dict[str, List[TaskScheduler]] = {}
-        # Placement rows (x_{i,.}) cached per running app: recomputing them
-        # from container lists is O(b) dict-building per app per event, which
-        # dominates at 1000 slaves.
-        self._placements: Dict[str, np.ndarray] = {}
+        # Per-phase wall time (solve vs enforce vs metrics; the optimizer
+        # tracks the DRF-refill share of solve) -- see `phase_breakdown`.
+        self.phase_s: Dict[str, float] = {
+            "solve": 0.0, "enforce": 0.0, "metrics": 0.0}
+        if self._soa:
+            self.state: Optional[ClusterState] = ClusterState(cluster)
+            self.slaves = LazySlaveViews(self.state)
+            self.partitions = LazyAppViews(self.state, self.state.partition)
+            self.executors = LazyAppViews(self.state, self.state.executors)
+            self.schedulers = LazyAppViews(self.state, self.state.schedulers)
+        else:
+            self.state = None
+            self.slaves: Dict[str, DormSlave] = {
+                s.slave_id: DormSlave(s) for s in cluster.slaves}
+            self.partitions: Dict[str, Partition] = {}   # running apps
+            self.executors: Dict[str, List[TaskExecutor]] = {}
+            self.schedulers: Dict[str, List[TaskScheduler]] = {}
+            # Placement rows (x_{i,.}) cached per running app: recomputing
+            # them from container lists is O(b) dict-building per app per
+            # event, which dominates at 1000 slaves.
+            self._placements: Dict[str, np.ndarray] = {}
 
     # ------------------------------------------- SchedulerPolicy interface
     # (runtime.ClusterRuntime drives the master through these four hooks;
@@ -73,7 +103,10 @@ class DormMaster:
         spec = self.specs.get(app_id)
         if spec is None:
             return None
-        self.specs[app_id] = spec.with_bounds(n_min=n_min, n_max=n_max)
+        spec = spec.with_bounds(n_min=n_min, n_max=n_max)
+        self.specs[app_id] = spec
+        if self.state is not None:
+            self.state.update_spec(spec)
         return self.reallocate()
 
     def on_tick(self, t: float) -> Optional[ReallocationResult]:
@@ -95,6 +128,19 @@ class DormMaster:
             if spec.app_id in self.specs or spec.app_id in seen:
                 raise ValueError(f"duplicate app_id {spec.app_id}")
             seen.add(spec.app_id)
+        # Admit into the state FIRST (it validates demand shape): mutating
+        # specs/pending before a failed admission would wedge every later
+        # reallocate on an app the state never interned.
+        if self.state is not None:
+            admitted: List[str] = []
+            try:
+                for spec in specs:
+                    self.state.admit(spec)
+                    admitted.append(spec.app_id)
+            except Exception:
+                for app_id in admitted:
+                    self.state.forget(app_id)
+                raise
         for spec in specs:
             self.specs[spec.app_id] = spec
             self.pending.append(spec.app_id)
@@ -108,13 +154,15 @@ class DormMaster:
             self.protocol.kill(self.specs[app_id])
         self._teardown(app_id)
         self.specs.pop(app_id, None)
+        if self.state is not None and app_id in self.state:
+            self.state.forget(app_id)
         if app_id in self.pending:
             self.pending.remove(app_id)
         # Drop the finished app from prev_alloc so Eq-4 excludes it.
         if self.prev_alloc is not None and app_id in self.prev_alloc.app_ids:
             keep = [i for i, a in enumerate(self.prev_alloc.app_ids)
                     if a != app_id]
-            self.prev_alloc = Allocation(
+            self.prev_alloc = Allocation.trusted(
                 tuple(self.prev_alloc.app_ids[i] for i in keep),
                 self.prev_alloc.x[keep])
         return self.reallocate()
@@ -123,22 +171,41 @@ class DormMaster:
         return [self.specs[a] for a in self.partitions]
 
     def containers_of(self, app_id: str) -> int:
+        if self.state is not None:
+            return self.state.containers_of(app_id)
         p = self.partitions.get(app_id)
         return p.n_containers if p else 0
+
+    def phase_breakdown(self) -> Dict[str, float]:
+        """Cumulative per-phase scheduling seconds: optimizer solve (split
+        into the DRF-refill share and the rest), enforcement (container
+        create/destroy + protocol calls), and Eq-1/2/4 metric evaluation."""
+        refill = float(getattr(self.optimizer, "refill_s", 0.0))
+        return {
+            "drf_refill": refill,
+            "solve": max(self.phase_s["solve"] - refill, 0.0),
+            "enforce": self.phase_s["enforce"],
+            "metrics": self.phase_s["metrics"],
+        }
 
     # --------------------------------------------------------- reallocation
 
     def reallocate(self) -> ReallocationResult:
         """Invoke the optimizer over all admitted apps and enforce the result."""
-        apps = [self.specs[a] for a in self.specs]
-        alloc = self.optimizer.solve(apps, self.cluster, self.prev_alloc)
+        apps = list(self.specs.values())
+        t0 = _time.perf_counter()
+        alloc = self.optimizer.solve(apps, self.cluster, self.prev_alloc,
+                                     state=self.state)
+        self.phase_s["solve"] += _time.perf_counter() - t0
         if alloc is None:
             # Infeasible: keep existing allocations; newly admitted apps wait.
             return self._result(self._current_allocation(), (), (),
-                                tuple(self.pending))
+                                tuple(self.pending), counts_changed={})
         return self._enforce(alloc, apps)
 
     def _current_allocation(self) -> Allocation:
+        if self.state is not None:
+            return self.state.allocation()
         app_ids = tuple(self.partitions.keys())
         x = np.stack([self._placements[a] for a in app_ids]) if app_ids else \
             np.zeros((0, len(self.slave_ids)), np.int64)
@@ -153,16 +220,58 @@ class DormMaster:
         containers: create containers -> configure executors/schedulers ->
         start.
         """
-        validate_allocation(alloc, apps, self.cluster)
+        t0 = _time.perf_counter()
         adjusted: List[str] = []
         started: List[str] = []
+        counts_changed: Dict[str, int] = {}
         spec_of = {a.app_id: a for a in apps}
+
+        if self.state is not None:
+            to_place = self._changed_soa(alloc)
+        else:
+            to_place = self._changed_legacy(alloc)
 
         # Phase 1 (Fig 5, step 3): save + kill + destroy containers of every
         # running app whose placement changed -- frees capacity first, so
-        # phase-2 creations never race the teardowns. Changed-row detection
-        # is one bulk compare (a per-app array_equal loop dominates events
-        # at 1000 slaves).
+        # phase-2 creations never race the teardowns.
+        for app_id, _, was_running in to_place:
+            if was_running:
+                spec = spec_of[app_id]
+                self.checkpoints[app_id] = self.protocol.save_state(spec)
+                self.protocol.kill(spec)
+                self._teardown(app_id)
+
+        # Phase 2 (Fig 5, step 4): create containers, configure executors and
+        # schedulers, resume adjusted apps / start new ones.
+        for app_id, new_row, was_running in to_place:
+            spec = spec_of[app_id]
+            self._place(spec, new_row)
+            n_new = int(new_row.sum())
+            counts_changed[app_id] = n_new
+            if was_running:
+                self.protocol.resume(spec, n_new,
+                                     self.checkpoints.get(app_id))
+                adjusted.append(app_id)
+            else:
+                self.protocol.start(spec, n_new)
+                started.append(app_id)
+                if app_id in self.pending:
+                    self.pending.remove(app_id)
+
+        self.phase_s["enforce"] += _time.perf_counter() - t0
+        result = self._result(alloc, tuple(adjusted), tuple(started),
+                              tuple(self.pending),
+                              counts_changed=counts_changed,
+                              trusted_shares=True)
+        self.prev_alloc = alloc
+        return result
+
+    def _changed_legacy(self, alloc: Allocation,
+                        ) -> List[Tuple[str, np.ndarray, bool]]:
+        """PR-2 changed-row detection: one bulk compare of every running
+        app's cached placement row against the new allocation."""
+        validate_allocation(alloc, [self.specs[a] for a in alloc.app_ids],
+                            self.cluster)
         row_sums = alloc.x.sum(axis=1)
         running_i = [i for i, a in enumerate(alloc.app_ids)
                      if a in self.partitions]
@@ -175,39 +284,58 @@ class DormMaster:
         to_place: List[Tuple[str, np.ndarray, bool]] = []
         for i, app_id in enumerate(alloc.app_ids):
             if app_id in self.partitions:
-                if i not in changed_i:
-                    continue
-                spec = spec_of[app_id]
-                self.checkpoints[app_id] = self.protocol.save_state(spec)
-                self.protocol.kill(spec)
-                self._teardown(app_id)
-                to_place.append((app_id, alloc.x[i], True))
+                if i in changed_i:
+                    to_place.append((app_id, alloc.x[i], True))
             elif row_sums[i] > 0:
                 to_place.append((app_id, alloc.x[i], False))
+        return to_place
 
-        # Phase 2 (Fig 5, step 4): create containers, configure executors and
-        # schedulers, resume adjusted apps / start new ones.
-        for app_id, new_row, was_running in to_place:
-            spec = spec_of[app_id]
-            self._place(spec, new_row)
-            if was_running:
-                self.protocol.resume(spec, int(new_row.sum()),
-                                     self.checkpoints.get(app_id))
-                adjusted.append(app_id)
-            else:
-                self.protocol.start(spec, int(new_row.sum()))
-                started.append(app_id)
-                if app_id in self.pending:
-                    self.pending.remove(app_id)
-
-        result = self._result(alloc, tuple(adjusted), tuple(started),
-                              tuple(self.pending))
-        self.prev_alloc = alloc
-        return result
+    def _changed_soa(self, alloc: Allocation,
+                     ) -> List[Tuple[str, np.ndarray, bool]]:
+        """SoA changed-row detection: the solver already proved which rows
+        changed (`optimizer.last_changed`, exact by construction on the
+        delta path); otherwise one bulk compare against the state rows.
+        Starts are found by scanning only the pending list, never every
+        running app. The allocation is NOT re-validated here -- every solver
+        path validated it on construction."""
+        state = self.state
+        pos = None
+        changed_ids = getattr(self.optimizer, "last_changed", None)
+        to_place: List[Tuple[str, np.ndarray, bool]] = []
+        if changed_ids is None:
+            # e.g. a MILP solve: diff the running apps' rows in bulk.
+            running_i = [i for i, a in enumerate(alloc.app_ids)
+                         if state.is_placed(a)]
+            if running_i:
+                old = state.x[state.rows_for(
+                    [alloc.app_ids[i] for i in running_i])]
+                diff = (alloc.x[running_i] != old).any(axis=1)
+                for k in np.flatnonzero(diff):
+                    i = running_i[int(k)]
+                    to_place.append((alloc.app_ids[i], alloc.x[i], True))
+        elif changed_ids:
+            pos = dict(zip(alloc.app_ids, range(len(alloc.app_ids))))
+            # Allocation order, matching the legacy engine's adjusted order.
+            for app_id in sorted(changed_ids, key=pos.get):
+                if state.is_placed(app_id):
+                    i = pos[app_id]
+                    to_place.append((app_id, alloc.x[i], True))
+        # Starts: pending apps that received containers.
+        if self.pending:
+            if pos is None:
+                pos = dict(zip(alloc.app_ids, range(len(alloc.app_ids))))
+            for app_id in self.pending:
+                i = pos.get(app_id)
+                if i is not None and alloc.x[i].any():
+                    to_place.append((app_id, alloc.x[i], False))
+        return to_place
 
     # ------------------------------------------------------------- internal
 
     def _place(self, spec: ApplicationSpec, row: np.ndarray) -> None:
+        if self.state is not None:
+            self.state.place(spec.app_id, row)
+            return
         part = Partition(spec)
         execs: List[TaskExecutor] = []
         scheds: List[TaskScheduler] = []
@@ -225,6 +353,10 @@ class DormMaster:
         self._placements[spec.app_id] = np.asarray(row, dtype=np.int64).copy()
 
     def _teardown(self, app_id: str) -> None:
+        if self.state is not None:
+            if self.state.is_placed(app_id):
+                self.state.clear(app_id)
+            return
         part = self.partitions.pop(app_id, None)
         if part is None:
             return
@@ -236,28 +368,65 @@ class DormMaster:
 
     def _result(self, alloc: Allocation, adjusted: Tuple[str, ...],
                 started: Tuple[str, ...], pending: Tuple[str, ...],
-                ) -> ReallocationResult:
-        keep = [i for i, a in enumerate(alloc.app_ids) if a in self.specs]
-        apps = [self.specs[alloc.app_ids[i]] for i in keep]
-        sub = Allocation(tuple(alloc.app_ids[i] for i in keep),
-                         alloc.x[keep] if keep
-                         else np.zeros((0, self.cluster.b), np.int64))
-        # Reuse the optimizer's DRF targets for Eq 2 when they cover exactly
-        # this app set (true for every feasible solve): the fairness metric
-        # then costs O(n*m) instead of a second progressive-filling pass.
-        shares = getattr(self.optimizer, "last_shares", None)
-        if shares is not None and set(shares) != {a.app_id for a in apps}:
-            shares = None
-        return ReallocationResult(
+                counts_changed: Optional[Dict[str, int]] = None,
+                trusted_shares: bool = False) -> ReallocationResult:
+        t0 = _time.perf_counter()
+        if alloc.app_ids == tuple(self.specs):
+            keep = None
+            apps = list(self.specs.values())
+            sub = alloc
+        else:
+            keep = [i for i, a in enumerate(alloc.app_ids) if a in self.specs]
+            apps = [self.specs[alloc.app_ids[i]] for i in keep]
+            sub = Allocation.trusted(tuple(alloc.app_ids[i] for i in keep),
+                                     alloc.x[keep] if keep
+                                     else np.zeros((0, self.cluster.b),
+                                                   np.int64))
+        d = totals = None
+        if self.state is not None and apps:
+            idx = self.state.rows_for([a.app_id for a in apps])
+            d = self.state.demand[idx]
+            # After enforcement the state rows ARE this allocation, so the
+            # maintained per-app counts equal sub.x.sum(axis=1).
+            totals = self.state.counts[idx]
+        if self.state is not None:
+            # Eq 4 evaluated by construction: every adjusted app changed its
+            # row (and only those), summed over A^t ∩ A^{t-1}.
+            overhead = len(adjusted)
+        else:
+            overhead = resource_adjustment_overhead(self.prev_alloc, sub)
+        shares_vec = getattr(self.optimizer, "last_shares_vec", None)
+        if trusted_shares and totals is not None and shares_vec is not None \
+                and len(shares_vec) == len(apps):
+            # Eq 2 fully in arrays: actual dominant shares from the
+            # maintained counts vs the solver's s_hat vector (same app
+            # order as this result, by the trusted-shares contract).
+            actual_vec = _shares_vec(totals, d, self.cluster.total_capacity())
+            loss = float(np.abs(actual_vec - shares_vec).sum())
+        else:
+            # Reuse the optimizer's DRF targets for Eq 2 when they cover
+            # exactly this app set (true for every feasible solve): the
+            # fairness metric then costs O(n*m) instead of a second
+            # progressive-filling pass.
+            shares = getattr(self.optimizer, "last_shares", None)
+            if not trusted_shares and shares is not None \
+                    and set(shares) != {a.app_id for a in apps}:
+                shares = None
+            loss = cluster_fairness_loss(sub, apps, self.cluster,
+                                         theoretical=shares,
+                                         d=d, totals=totals)
+        result = ReallocationResult(
             allocation=sub,
             adjusted_app_ids=adjusted,
             started_app_ids=started,
             pending_app_ids=pending,
-            utilization=resource_utilization(sub, apps, self.cluster),
-            fairness_loss=cluster_fairness_loss(sub, apps, self.cluster,
-                                                theoretical=shares),
+            utilization=resource_utilization(sub, apps, self.cluster,
+                                             d=d, totals=totals),
+            fairness_loss=loss,
             # Eq 4 evaluated literally: r_i = 1 iff any x_{i,j} changed vs
             # the previous allocation, summed over A^t ∩ A^{t-1}.
-            adjustment_overhead=resource_adjustment_overhead(
-                self.prev_alloc, sub),
+            adjustment_overhead=overhead,
+            changed_counts=counts_changed,
         )
+        self.phase_s["metrics"] += _time.perf_counter() - t0
+        return result

@@ -10,12 +10,21 @@ from .types import Allocation, ApplicationSpec, ClusterSpec, demand_matrix
 
 
 def per_resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
-                             cluster: ClusterSpec) -> np.ndarray:
-    """u_k = sum_i sum_j x_{i,j} d_{i,k} / sum_h c_{h,k}    (Eq 1 inner term)."""
+                             cluster: ClusterSpec,
+                             d: Optional[np.ndarray] = None,
+                             totals: Optional[np.ndarray] = None,
+                             ) -> np.ndarray:
+    """u_k = sum_i sum_j x_{i,j} d_{i,k} / sum_h c_{h,k}    (Eq 1 inner term).
+
+    `d` / `totals`: optionally reuse a precomputed demand matrix and
+    per-app container counts (the SoA engine maintains both incrementally,
+    so the per-event metric costs O(n*m) with no (n, b) reduction)."""
     if not apps:
         return np.zeros(cluster.m)
-    d = demand_matrix(apps)                       # (n, m)
-    totals = alloc.x.sum(axis=1)                  # (n,)
+    if d is None:
+        d = demand_matrix(apps)                   # (n, m)
+    if totals is None:
+        totals = alloc.x.sum(axis=1)              # (n,)
     used = totals @ d                             # (m,)
     cap = cluster.total_capacity()
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -23,21 +32,29 @@ def per_resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
 
 
 def resource_utilization(alloc: Allocation, apps: Sequence[ApplicationSpec],
-                         cluster: ClusterSpec) -> float:
+                         cluster: ClusterSpec,
+                         d: Optional[np.ndarray] = None,
+                         totals: Optional[np.ndarray] = None) -> float:
     """ResourceUtilization(t) = sum_k u_k   (Eq 1). Ranges in [0, m]."""
-    return float(per_resource_utilization(alloc, apps, cluster).sum())
+    return float(per_resource_utilization(alloc, apps, cluster,
+                                          d=d, totals=totals).sum())
 
 
 def actual_shares(alloc: Allocation, apps: Sequence[ApplicationSpec],
-                  cluster: ClusterSpec) -> Dict[str, float]:
+                  cluster: ClusterSpec,
+                  d: Optional[np.ndarray] = None,
+                  totals: Optional[np.ndarray] = None) -> Dict[str, float]:
     """s_i = max_k ( d_{i,k} * sum_j x_{i,j} / sum_h c_{h,k} )."""
     if not apps:
         return {}
     total = cluster.total_capacity()
-    d = demand_matrix(apps)
+    if d is None:
+        d = demand_matrix(apps)
     # Vectorized over apps (same arithmetic as per-app `dominant_share`):
     # runs on every reallocation event.
-    totals = alloc.x.sum(axis=1).astype(np.float64)
+    if totals is None:
+        totals = alloc.x.sum(axis=1)
+    totals = totals.astype(np.float64)
     with np.errstate(divide="ignore", invalid="ignore"):
         ratios = np.where(total[None, :] > 0,
                           totals[:, None] * d / total[None, :], 0.0)
@@ -48,13 +65,15 @@ def actual_shares(alloc: Allocation, apps: Sequence[ApplicationSpec],
 def cluster_fairness_loss(alloc: Allocation, apps: Sequence[ApplicationSpec],
                           cluster: ClusterSpec,
                           theoretical: Optional[Dict[str, float]] = None,
+                          d: Optional[np.ndarray] = None,
+                          totals: Optional[np.ndarray] = None,
                           ) -> float:
     """FairnessLoss(t) = sum_i |s_i - s_hat_i|   (Eq 2)."""
     if not apps:
         return 0.0
     if theoretical is None:
-        theoretical = drf_shares(apps, cluster)
-    actual = actual_shares(alloc, apps, cluster)
+        theoretical = drf_shares(apps, cluster, d=d)
+    actual = actual_shares(alloc, apps, cluster, d=d, totals=totals)
     return float(sum(abs(actual[a.app_id] - theoretical[a.app_id]) for a in apps))
 
 
@@ -100,6 +119,11 @@ def container_churn(prev: Optional[Allocation], new: Allocation) -> int:
     reported by benchmarks/bench_scale.py."""
     if prev is None:
         return 0
+    # Prefix fast path (same reasoning as `adjusted_apps`): one bulk
+    # |new - prev| reduction instead of per-app row gathers.
+    k = len(prev.app_ids)
+    if prev.app_ids == new.app_ids[:k]:
+        return int(np.abs(new.x[:k] - prev.x).sum())
     prev_map = prev.as_dict()
     churn = 0
     for i, app_id in enumerate(new.app_ids):

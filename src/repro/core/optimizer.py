@@ -39,11 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .drf import IncrementalDRF, drf_container_counts, drf_shares
+from .drf import (IncrementalDRF, drf_container_counts,
+                  drf_container_counts_reference, drf_shares)
 from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
                     validate_allocation)
 
@@ -76,6 +78,21 @@ class OptimizerConfig:
     # Bit-exact with incremental=False by construction (tests/
     # test_incremental.py), so it is safe to leave on by default.
     incremental: bool = True
+    # Structure-of-arrays engine (PR 3). True: the greedy solver uses the
+    # vectorized ladder DRF filling, batched best-fit placement and bulk
+    # changed-row detection, and DormMaster keeps its bookkeeping in a
+    # `core.state.ClusterState` with lazily materialized container objects.
+    # False: the PR-2 dict-of-objects reference engine (kept, like
+    # ReferenceClusterSimulator, as the golden baseline the benchmark
+    # measures the SoA speedup ratio against -- in ONE process).
+    # Both engines are bit-exact with each other (tests/test_state.py).
+    soa: bool = True
+    # Rolling-horizon exact solve (MilpOptimizer): monolithic MILP while
+    # n_apps * b <= this, block decomposition beyond -- blocks ordered by
+    # utilization weight (DRF-target tie-broken), each solved exactly
+    # against residual capacity, consuming the remaining global Eq-15/16
+    # budgets. 0 disables the decomposition (always monolithic).
+    rolling_horizon_vars: int = 4_000
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -89,9 +106,10 @@ def adjust_budget(cfg: OptimizerConfig, n_common: int) -> int:
 
 
 def _dominant_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-                    ) -> np.ndarray:
+                    d: Optional[np.ndarray] = None) -> np.ndarray:
     """g_i = max_k d_{i,k} / C_k  (share per container)."""
-    d = demand_matrix(apps)                     # (n, m)
+    if d is None:
+        d = demand_matrix(apps)                 # (n, m)
     cap = cluster.total_capacity()              # (m,)
     with np.errstate(divide="ignore", invalid="ignore"):
         ratios = np.where(cap > 0, d / cap, 0.0)
@@ -99,20 +117,37 @@ def _dominant_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
 
 
 def _util_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-                ) -> np.ndarray:
+                d: Optional[np.ndarray] = None) -> np.ndarray:
     """w_i = sum_k d_{i,k} / C_k -- utilization gained per container of app i."""
-    d = demand_matrix(apps)
+    if d is None:
+        d = demand_matrix(apps)
     cap = cluster.total_capacity()
     with np.errstate(divide="ignore", invalid="ignore"):
         ratios = np.where(cap > 0, d / cap, 0.0)
     return ratios.sum(axis=1)
 
 
+def _shares_vec(counts: np.ndarray, d: np.ndarray, total: np.ndarray,
+                ) -> np.ndarray:
+    """Dominant shares for given counts (same arithmetic as `drf_shares`)."""
+    n_vec = counts.astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratios = np.where(total[None, :] > 0,
+                          n_vec[:, None] * d / total[None, :], 0.0)
+    return ratios.max(axis=1) if ratios.size else np.zeros(len(counts))
+
+
 def _drf_targets(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                 reference: bool = False,
+                 d: Optional[np.ndarray] = None,
                  ) -> Tuple[Dict[str, int], np.ndarray]:
-    """One progressive-filling pass -> (counts, s_hat vector in app order)."""
-    counts = drf_container_counts(apps, cluster)
-    shares = drf_shares(apps, cluster, counts=counts)
+    """One progressive-filling pass -> (counts, s_hat vector in app order).
+    `reference=True` runs the seed's one-grant-at-a-time filling (the legacy
+    engine's cost model); both produce identical counts."""
+    fill = drf_container_counts_reference if reference \
+        else drf_container_counts
+    counts = fill(apps, cluster)
+    shares = drf_shares(apps, cluster, counts=counts, d=d)
     s_hat = np.array([shares[a.app_id] for a in apps])
     return counts, s_hat
 
@@ -125,13 +160,21 @@ class MilpOptimizer:
             raise RuntimeError("scipy not available; use GreedyOptimizer")
         self.cfg = cfg
         self.last_shares: Optional[Dict[str, float]] = None
+        self.last_shares_vec: Optional[np.ndarray] = None  # solve app order
+        self.last_changed: Optional[Tuple[str, ...]] = None  # never proven
+        self.refill_s = 0.0        # cumulative DRF-refill time (phase stat)
+        self.monolithic_solves = 0
+        self.rolling_solves = 0
 
     # ------------------------------------------------------ dense assembly
 
     def _assemble_dense(self, apps, d, cap, g, s_hat_vec, prev_map, common,
+                        budget_l: float, budget_r: float,
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Loop-built dense (A, lb, ub) -- the reference assembly. Row order
-        must match `_assemble_sparse` exactly."""
+        must match `_assemble_sparse` exactly. `budget_l`/`budget_r` are the
+        Eq-15/Eq-16 right-hand sides (a rolling-horizon block receives its
+        proportional slice of the global budgets)."""
         n, b = d.shape[0], cap.shape[0]
         m = cap.shape[1]
         app_ids = tuple(a.app_id for a in apps)
@@ -195,19 +238,20 @@ class MilpOptimizer:
         # Eq 15: total fairness loss budget.
         row = np.zeros(nvar)
         row[nx:nx + nl] = 1.0
-        add(row, -np.inf, fairness_budget(self.cfg, m))
+        add(row, -np.inf, budget_l)
 
         # Eq 16: adjustment budget.
         if n_r:
             row = np.zeros(nvar)
             row[nx + nl:] = 1.0
-            add(row, -np.inf, float(adjust_budget(self.cfg, n_r)))
+            add(row, -np.inf, float(budget_r))
 
         return np.stack(A_rows), np.array(lb_rows), np.array(ub_rows)
 
     # ----------------------------------------------------- sparse assembly
 
-    def _assemble_sparse(self, apps, d, cap, g, s_hat_vec, prev_map, common):
+    def _assemble_sparse(self, apps, d, cap, g, s_hat_vec, prev_map, common,
+                         budget_l: float, budget_r: float):
         """Vectorized COO assembly of the same constraint system (same row
         order as `_assemble_dense`), returned as a csr_array."""
         n, b = d.shape[0], cap.shape[0]
@@ -289,7 +333,7 @@ class MilpOptimizer:
         cols.append(nx + np.arange(nl))
         vals.append(np.ones(nl))
         lbs.append(np.array([-np.inf]))
-        ubs.append(np.array([fairness_budget(self.cfg, m)]))
+        ubs.append(np.array([budget_l]))
         n_rows = o4 + 1
 
         # Eq 16: adjustment budget.
@@ -298,7 +342,7 @@ class MilpOptimizer:
             cols.append(nx + nl + np.arange(n_r))
             vals.append(np.ones(n_r))
             lbs.append(np.array([-np.inf]))
-            ubs.append(np.array([float(adjust_budget(self.cfg, n_r))]))
+            ubs.append(np.array([float(budget_r)]))
             n_rows += 1
 
         A = _sp.coo_array(
@@ -313,64 +357,112 @@ class MilpOptimizer:
     # --------------------------------------------------------------- solve
 
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-              prev: Optional[Allocation] = None,
+              prev: Optional[Allocation] = None, state=None,
               ) -> Optional[Allocation]:
+        """Exact P2. Monolithic while n * b <= cfg.rolling_horizon_vars;
+        rolling-horizon block decomposition beyond (the scale path for the
+        exact solver -- instances with >= 5k x-variables stay solvable).
+        `state` is accepted for SchedulerPolicy-interface parity and passed
+        to the greedy incumbent."""
+        self.last_changed = None
         if not apps:
             self.last_shares = {}
+            self.last_shares_vec = np.zeros(0)
             return Allocation.empty((), cluster.b)
+        app_ids = tuple(a.app_id for a in apps)
+        t_refill = _time.perf_counter()
+        drf_counts, s_hat_vec = _drf_targets(apps, cluster)
+        self.refill_s += _time.perf_counter() - t_refill
+        self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
+        self.last_shares_vec = s_hat_vec
+        rh = self.cfg.rolling_horizon_vars
+        if rh and len(apps) > 1 and len(apps) * cluster.b > rh:
+            self.rolling_solves += 1
+            return self._solve_rolling(apps, cluster, prev, drf_counts,
+                                       s_hat_vec, state)
+        self.monolithic_solves += 1
+        return self._solve_block(apps, cluster, prev,
+                                 (drf_counts, s_hat_vec), state=state)
+
+    def _solve_block(self, apps: Sequence[ApplicationSpec],
+                     cluster: ClusterSpec, prev: Optional[Allocation],
+                     targets, cap: Optional[np.ndarray] = None,
+                     budget_l: Optional[float] = None,
+                     budget_r: Optional[int] = None,
+                     incumbent="warm", state=None) -> Optional[Allocation]:
+        """One exact MILP over `apps`.
+
+        Overrides for rolling-horizon blocks: `cap` (residual per-slave
+        capacity), `budget_l`/`budget_r` (the block's slice of the Eq-15/16
+        budgets), `incumbent` (an Allocation used as cutoff + fallback;
+        "warm" derives one from the greedy heuristic when cfg.warm_start).
+        Any incumbent is used only if it honors the Eq-15 AND Eq-16 budgets
+        itself: cutting off against (or falling back to) a budget-violating
+        point would silently replace the exact solver's correct
+        "infeasible" answer."""
         n, b, m = len(apps), cluster.b, cluster.m
         app_ids = tuple(a.app_id for a in apps)
         d = demand_matrix(apps)                     # (n, m)
-        cap = cluster.capacity_matrix()             # (b, m)
-        g = _dominant_coeff(apps, cluster)          # (n,)
-        drf_counts, s_hat_vec = _drf_targets(apps, cluster)
-        self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
+        residual = cap is not None                  # rolling-horizon block?
+        if cap is None:
+            cap = cluster.capacity_matrix()         # (b, m)
+        g = _dominant_coeff(apps, cluster, d)       # (n,)
+        drf_counts, s_hat_vec = targets
 
         prev_map = prev.as_dict() if prev is not None else {}
         common = [i for i, a in enumerate(app_ids) if a in prev_map]
         n_r = len(common)
+        if budget_l is None:
+            budget_l = fairness_budget(self.cfg, m)
+        if budget_r is None:
+            budget_r = adjust_budget(self.cfg, n_r)
 
         # Variable layout: [ x (n*b ints) | l (n cont) | r (n_r binary) ]
         nx, nl = n * b, n
         nvar = nx + nl + n_r
 
         c_obj = np.zeros(nvar)
-        util_w = _util_coeff(apps, cluster)         # (n,)
+        util_w = _util_coeff(apps, cluster, d)      # (n,)
         c_obj[:nx] = -np.repeat(util_w, b)          # milp minimizes
 
         if self.cfg.sparse:
             A, lb_rows, ub_rows = self._assemble_sparse(
-                apps, d, cap, g, s_hat_vec, prev_map, common)
+                apps, d, cap, g, s_hat_vec, prev_map, common,
+                budget_l, float(budget_r))
         else:
             A, lb_rows, ub_rows = self._assemble_dense(
-                apps, d, cap, g, s_hat_vec, prev_map, common)
+                apps, d, cap, g, s_hat_vec, prev_map, common,
+                budget_l, float(budget_r))
 
-        # Warm start: greedy incumbent -> objective cutoff plane + fallback.
-        # The incumbent is only usable if it honors the Eq-15 budget itself:
-        # greedy packing can undershoot its DRF targets, and returning (or
-        # cutting off against) a budget-violating incumbent would silently
-        # replace the exact solver's correct "infeasible" answer.
-        incumbent: Optional[Allocation] = None
-        if self.cfg.warm_start:
-            incumbent = GreedyOptimizer(self.cfg).solve(
-                apps, cluster, prev, _targets=(drf_counts, s_hat_vec))
-            if incumbent is not None:
-                inc_loss = float(np.abs(
-                    g * incumbent.x.sum(axis=1) - s_hat_vec).sum())
-                if inc_loss > fairness_budget(self.cfg, m) + 1e-9:
-                    incumbent = None
-            if incumbent is not None:
-                inc_obj = float(-util_w @ incumbent.x.sum(axis=1))
-                cut = np.zeros((1, nvar))
-                cut[0, :nx] = c_obj[:nx]
-                if self.cfg.sparse:
-                    A = _sp.vstack([A, _sp.csc_array(cut)]).tocsc()
-                    A.indices = A.indices.astype(np.int32)
-                    A.indptr = A.indptr.astype(np.int32)
-                else:
-                    A = np.vstack([A, cut])
-                lb_rows = np.concatenate([lb_rows, [-np.inf]])
-                ub_rows = np.concatenate([ub_rows, [inc_obj + 1e-9]])
+        if incumbent == "warm":
+            incumbent = None
+            if self.cfg.warm_start:
+                incumbent = GreedyOptimizer(self.cfg).solve(
+                    apps, cluster, prev, _targets=(drf_counts, s_hat_vec),
+                    state=state)
+        if incumbent is not None:
+            inc_loss = float(np.abs(
+                g * incumbent.x.sum(axis=1) - s_hat_vec).sum())
+            if inc_loss > budget_l + 1e-9:
+                incumbent = None
+        if incumbent is not None and common:
+            inc_changed = sum(
+                1 for i in common
+                if not np.array_equal(incumbent.x[i], prev_map[app_ids[i]]))
+            if inc_changed > budget_r:
+                incumbent = None
+        if incumbent is not None:
+            inc_obj = float(-util_w @ incumbent.x.sum(axis=1))
+            cut = np.zeros((1, nvar))
+            cut[0, :nx] = c_obj[:nx]
+            if self.cfg.sparse:
+                A = _sp.vstack([A, _sp.csc_array(cut)]).tocsc()
+                A.indices = A.indices.astype(np.int32)
+                A.indptr = A.indptr.astype(np.int32)
+            else:
+                A = np.vstack([A, cut])
+            lb_rows = np.concatenate([lb_rows, [-np.inf]])
+            ub_rows = np.concatenate([ub_rows, [inc_obj + 1e-9]])
 
         constraints = LinearConstraint(A, lb_rows, ub_rows)
 
@@ -386,10 +478,131 @@ class MilpOptimizer:
                    options={"time_limit": self.cfg.time_limit_s,
                             "mip_rel_gap": self.cfg.mip_rel_gap})
         if not res.success or res.x is None:
-            return incumbent            # None unless warm_start found one
+            return incumbent            # None unless an incumbent survived
         x = np.rint(res.x[:nx]).astype(np.int64).reshape(n, b)
         alloc = Allocation(app_ids, x)
-        validate_allocation(alloc, apps, cluster)
+        if not residual:
+            # Monolithic solves validate here; rolling blocks are checked
+            # once, on the combined allocation.
+            validate_allocation(alloc, apps, cluster, d=d)
+        return alloc
+
+    def _solve_rolling(self, apps: Sequence[ApplicationSpec],
+                       cluster: ClusterSpec, prev: Optional[Allocation],
+                       drf_counts: Dict[str, int], s_hat_vec: np.ndarray,
+                       state=None) -> Optional[Allocation]:
+        """Rolling-horizon decomposition of P2 (the exact path past ~2k
+        variables).
+
+        Apps are partitioned into blocks of at most
+        floor(rolling_horizon_vars / b) apps, ordered by utilization weight
+        with the DRF target as tie-break (the same priority order the
+        monolithic objective pushes apps past their targets in). Each block
+        is solved as an exact sub-MILP against the residual capacity left
+        by earlier blocks, with a GLOBAL greedy guide supplying (a) the
+        later blocks' reserved placements -- an early block can never
+        starve a later block below the guide point, (b) each block's
+        incumbent (cutoff + fallback), and (c) the budget split: a block
+        may spend the remaining global Eq-15/Eq-16 budgets minus the later
+        blocks' guide spend, so the incumbent always fits and the totals
+        stay within the monolithic bounds. The union of the block solutions
+        is feasible for P2 by construction; on instances small enough to
+        also solve monolithically the objective lands within ~1%
+        (tests/test_rolling_horizon.py)."""
+        n, b, m = len(apps), cluster.b, cluster.m
+        app_ids = tuple(a.app_id for a in apps)
+        d = demand_matrix(apps)
+        cap = cluster.capacity_matrix().astype(np.float64)
+        inv_cap = 1.0 / np.maximum(cap, 1e-9)
+        prev_map = prev.as_dict() if prev is not None else {}
+
+        # GLOBAL greedy guide: a P2-feasible point (capacity, n_min/n_max,
+        # Eq-15/16 budgets all honored globally). Its placements become the
+        # per-block reservations + incumbents, and its per-block budget
+        # spend anchors the budget split -- so every block's sub-MILP
+        # starts from a feasible incumbent and can only improve on the
+        # guide. If even the greedy cannot find a feasible point, the
+        # monolithic MILP would almost surely time out too: keep previous
+        # allocations (paper semantics).
+        guide = GreedyOptimizer(self.cfg).solve(
+            apps, cluster, prev, _targets=(drf_counts, s_hat_vec),
+            state=state)
+        if guide is None:
+            return None
+        g = _dominant_coeff(apps, cluster, d)
+        guide_loss = np.abs(g * guide.x.sum(axis=1) - s_hat_vec)    # (n,)
+        guide_changed = np.zeros(n, bool)
+        for i, a in enumerate(app_ids):
+            pr = prev_map.get(a)
+            if pr is not None and not np.array_equal(guide.x[i], pr):
+                guide_changed[i] = True
+
+        per_block = max(1, self.cfg.rolling_horizon_vars // b)
+        # Block order = the greedy utilization push's priority order
+        # (utilization gained per container, tie-broken by DRF target then
+        # index): the budget slack is then spent on the same apps the
+        # monolithic objective would push past their DRF targets first.
+        util_w = _util_coeff(apps, cluster, d)
+        order = np.lexsort((np.arange(n), s_hat_vec, -util_w))
+        blocks = [[int(i) for i in order[k:k + per_block]]
+                  for k in range(0, n, per_block)]
+
+        # Budget split: block t may spend (global budget) - (actual spend
+        # of earlier blocks) - (guide spend reserved for later blocks).
+        # Inductively that is always >= the block's own guide spend, so the
+        # guide incumbent is never rejected, and the final totals are
+        # within the global Eq-15/Eq-16 budgets.
+        budget_l_slack = max(
+            fairness_budget(self.cfg, m) - float(guide_loss.sum()), 0.0)
+        c_total = sum(1 for a in app_ids if a in prev_map)
+        budget_r_slack = max(
+            (adjust_budget(self.cfg, c_total) if c_total else 0)
+            - int(guide_changed.sum()), 0)
+
+        free = cap - guide.x.T.astype(np.float64) @ d
+        x = np.zeros((n, b), np.int64)
+        for blk in blocks:
+            bapps = [apps[i] for i in blk]
+            bids = tuple(app_ids[i] for i in blk)
+            d_blk = d[blk]
+            # Release this block's guide rows into its own residual (the
+            # sub-MILP re-decides those placements freely).
+            free += guide.x[blk].T.astype(np.float64) @ d_blk
+            incumbent = Allocation(bids, guide.x[blk].copy())
+            bprev = None
+            if prev_map:
+                pids = tuple(a for a in bids if a in prev_map)
+                if pids:
+                    bprev = Allocation(pids, np.stack(
+                        [prev_map[a] for a in pids]))
+            # Block budget = current slack + this block's guide spend;
+            # invariant: slack' = block budget - actual spend >= 0 (the
+            # sub-MILP enforces actual <= budget), so the final totals sum
+            # to at most the global budgets.
+            bl = budget_l_slack + float(guide_loss[blk].sum())
+            br = budget_r_slack + int(guide_changed[blk].sum())
+            sub = self._solve_block(
+                bapps, cluster, bprev, (drf_counts, s_hat_vec[blk]),
+                cap=free, budget_l=bl, budget_r=br,
+                incumbent=incumbent, state=state)
+            if sub is None:
+                return None              # unreachable while the guide fits
+            x[blk] = sub.x
+            free -= sub.x.T.astype(np.float64) @ d_blk
+            loss_t = float(np.abs(g[blk] * sub.x.sum(axis=1)
+                                  - s_hat_vec[blk]).sum())
+            budget_l_slack = max(bl - loss_t, 0.0)
+            if bprev is not None:
+                changed_t = sum(
+                    1 for r, a in enumerate(bids)
+                    if a in prev_map
+                    and not np.array_equal(sub.x[r], prev_map[a]))
+            else:
+                changed_t = 0
+            budget_r_slack = max(br - changed_t, 0)
+
+        alloc = Allocation(app_ids, x)
+        validate_allocation(alloc, apps, cluster, d=d)
         return alloc
 
 
@@ -425,6 +638,63 @@ def _best_fit_place(x: np.ndarray, free: np.ndarray, d: np.ndarray,
         need -= 1
 
 
+def _best_fit_place_batch(x: np.ndarray, free: np.ndarray, d: np.ndarray,
+                          inv_cap: np.ndarray, i: int, limit: int) -> bool:
+    """Batched equivalent of `_best_fit_place`: ALL of app i's containers are
+    placed with one masked argsort + scatter over the slave axis instead of a
+    per-container argmin loop.
+
+    Identical placements by construction: granting a container onto slave j
+    only lowers j's best-fit score (free shrinks monotonically), so the
+    sequential argmin keeps choosing j until it no longer fits -- i.e. it
+    fills each slave to its max feasible count in ascending order of the
+    INITIAL (score, index) key, which is exactly what the argsort/scatter
+    computes. Bit-identical for integer-valued demands (the delta path's
+    guard); for fractional demands the batched capacity arithmetic can
+    differ from the one-at-a-time subtraction in the last ulp, which is why
+    the engines are never mixed within one solve path.
+
+    Returns True iff at least one container was granted (changed-row
+    tracking for the master's incremental enforcement).
+    """
+    di = d[i]
+    need = limit - int(x[i].sum())
+    if need <= 0:
+        return False
+    # One (b, m) compare finds the feasible slaves; the max-count divide
+    # then runs only on those (clusters run mostly full, so the fit set is
+    # usually small).
+    fit_js = np.flatnonzero((di <= free + 1e-9).all(axis=1))
+    if not fit_js.size:
+        return False
+    sub_free = free[fit_js]
+    pos = di > 0
+    if pos.any():
+        q = np.floor((sub_free[:, pos] + 1e-9) / di[pos]).min(axis=1)
+        q = np.maximum(q, 1.0).astype(np.int64)     # max containers per slave
+    else:
+        q = np.full(fit_js.shape[0], need, np.int64)   # zero demand
+    score = ((sub_free - di) * inv_cap[fit_js]).sum(axis=1)
+    # Fast path: the best-fit slave hosts the whole batch (one argmin
+    # instead of a full argsort -- the sequential loop would fill the
+    # argmin slave first anyway).
+    jpos = int(np.argmin(score))
+    if q[jpos] >= need:
+        j = int(fit_js[jpos])
+        x[i, j] += need
+        free[j] -= float(need) * di
+        return True
+    order = np.argsort(score, kind="stable")        # ties -> lowest index
+    js = fit_js[order]
+    csum = np.minimum(np.cumsum(q[order]), need)
+    counts = np.diff(np.concatenate(([0], csum)))
+    nz = counts > 0
+    js, counts = js[nz], counts[nz]
+    x[i, js] += counts
+    free[js] -= counts[:, None].astype(np.float64) * di[None, :]
+    return True
+
+
 class GreedyOptimizer:
     """DRF-guided heuristic for P2 with placement stickiness.
 
@@ -457,45 +727,132 @@ class GreedyOptimizer:
     def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
         self.cfg = cfg
         self.drf = IncrementalDRF()
-        self.last_shares: Optional[Dict[str, float]] = None
+        self._last_shares: Optional[Dict[str, float]] = None
+        self._last_share_ids: Optional[Tuple[str, ...]] = None
+        self.last_shares_vec: Optional[np.ndarray] = None  # solve app order
+        # App ids (within prev's) whose placement row changed vs `prev`,
+        # when the solve can prove it cheaply (SoA engine: tracked during
+        # placement / one bulk compare). None = the caller must diff rows
+        # itself (legacy engine, MILP results).
+        self.last_changed: Optional[Tuple[str, ...]] = None
         self.delta_solves = 0
         self.full_solves = 0
+        self.refill_s = 0.0        # cumulative DRF-refill time (phase stat)
+        # Futile top-up memo: app_id -> (state.epoch, target) of a delta
+        # placement attempt that could not reach its target. Free capacity
+        # only shrinks while the epoch is unchanged, so the retry is
+        # provably a no-op and is skipped (results identical by proof).
+        # Cleared whenever the epoch moves -- every entry is stale then,
+        # and this bounds the dict at O(live apps) over unbounded streams.
+        self._futile: Dict[str, Tuple[int, int]] = {}
+        self._futile_epoch = -1
+
+    @property
+    def last_shares(self) -> Optional[Dict[str, float]]:
+        """{app_id: s_hat} of the last solve. Built lazily on the fast
+        path: the SoA master consumes `last_shares_vec` directly, so the
+        O(n) dict would otherwise be thrown away every event."""
+        if self._last_shares is None and self._last_share_ids is not None:
+            self._last_shares = dict(zip(self._last_share_ids,
+                                         self.last_shares_vec.tolist()))
+        return self._last_shares
+
+    @last_shares.setter
+    def last_shares(self, value: Optional[Dict[str, float]]) -> None:
+        self._last_shares = value
+        self._last_share_ids = None
 
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
               prev: Optional[Allocation] = None,
-              _targets=None) -> Optional[Allocation]:
+              _targets=None, state=None) -> Optional[Allocation]:
         """`_targets`: optional precomputed `_drf_targets` result, so a
         caller that already ran the progressive filling (MilpOptimizer's
-        warm start) does not pay for a second pass."""
+        warm start) does not pay for a second pass. `state`: optional
+        `core.state.ClusterState` whose placement rows mirror `prev`
+        (the DormMaster's SoA engine) -- per-app coefficient arrays and the
+        incrementally-maintained free/aggregate vectors are then reused
+        instead of being rebuilt from the spec objects every event."""
+        self.last_changed = None
         if not apps:
             self.last_shares = {}
+            self.last_shares_vec = np.zeros(0)
+            self.last_changed = ()
             return Allocation.empty((), cluster.b)
+        soa = self.cfg.soa
         n, b, m = len(apps), cluster.b, cluster.m
         app_ids = tuple(a.app_id for a in apps)
-        d = demand_matrix(apps)
+        if state is not None:
+            idx = state.rows_for(app_ids)
+            d = state.demand[idx]
+            g = state.g[idx]
+            util_w = state.util_w[idx]
+            nmin_v = state.n_min[idx]
+            nmax_v = state.n_max[idx]
+            integral = state.all_integral()
+        else:
+            d = demand_matrix(apps)
+            g = _dominant_coeff(apps, cluster, d)
+            util_w = _util_coeff(apps, cluster, d)
+            nmin_v = np.fromiter((a.n_min for a in apps), np.int64, n)
+            nmax_v = np.fromiter((a.n_max for a in apps), np.int64, n)
+            integral = bool((d == np.floor(d)).all())
         cap = cluster.capacity_matrix().astype(np.float64)
-        g = _dominant_coeff(apps, cluster)
-        util_w = _util_coeff(apps, cluster)
+        total_cap = cluster.total_capacity()
+        budget_l = fairness_budget(self.cfg, m)
+
+        # -- DRF refill (timed: the phase breakdown's drf_refill bucket).
+        t_refill = _time.perf_counter()
         fast = False
         if _targets is not None:
             drf_counts, s_hat_vec = _targets
             self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
+            target = np.fromiter((drf_counts[a] for a in app_ids),
+                                 np.int64, n)
         elif self.cfg.incremental:
-            # Incremental DRF refill: O(n*m) saturating fast path when it
-            # provably matches the full filling, full filling otherwise.
-            drf_counts, shares, fast = self.drf.targets(apps, cluster)
-            self.last_shares = shares
-            s_hat_vec = np.array([shares[a] for a in app_ids])
+            if state is not None and integral:
+                # O(m) probe against the incrementally-maintained aggregate
+                # n_max demand (exact for integral demands) instead of the
+                # O(n*m) re-aggregation in `drf.saturating_counts`.
+                fast = state.saturates_at_nmax()
+                if fast:
+                    self.drf.fast_hits += 1
+                    target = nmax_v.astype(np.int64, copy=True)
+                    s_hat_vec = _shares_vec(target, d, total_cap)
+                    self._last_shares = None          # built lazily
+                    self._last_share_ids = app_ids
+                else:
+                    self.drf.full_refills += 1
+                    drf_counts = drf_container_counts(apps, cluster)
+                    shares = drf_shares(apps, cluster, counts=drf_counts,
+                                        d=d)
+                    self.last_shares = shares
+                    s_hat_vec = np.fromiter((shares[a] for a in app_ids),
+                                            np.float64, n)
+                    target = np.fromiter((drf_counts[a] for a in app_ids),
+                                         np.int64, n)
+            else:
+                # Incremental DRF refill: O(n*m) saturating fast path when
+                # it provably matches the full filling, full otherwise.
+                drf_counts, shares, fast = self.drf.targets(
+                    apps, cluster, reference=not soa)
+                self.last_shares = shares
+                s_hat_vec = np.fromiter((shares[a] for a in app_ids),
+                                        np.float64, n)
+                target = np.fromiter((drf_counts[a] for a in app_ids),
+                                     np.int64, n)
         else:
             # Full re-solve semantics (the seed's per-event behaviour):
             # progressive filling from scratch on every event.
-            drf_counts, s_hat_vec = _drf_targets(apps, cluster)
+            drf_counts, s_hat_vec = _drf_targets(apps, cluster,
+                                                 reference=not soa, d=d)
             self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
-        budget_l = fairness_budget(self.cfg, m)
+            target = np.fromiter((drf_counts[a] for a in app_ids),
+                                 np.int64, n)
+        self.refill_s += _time.perf_counter() - t_refill
+        self.last_shares_vec = s_hat_vec
 
         # -- step 1: choose target counts.
-        target = np.array([drf_counts[a] for a in app_ids], dtype=np.int64)
-        if np.any(target < np.array([a.n_min for a in apps])):
+        if np.any(target < nmin_v):
             # Aggregate capacity cannot host every app's minimum -> infeasible;
             # paper behaviour: keep existing allocations (master handles it).
             return None
@@ -503,21 +860,49 @@ class GreedyOptimizer:
         def total_loss(counts: np.ndarray) -> float:
             return float(np.abs(g * counts - s_hat_vec).sum())
 
-        # Row views, not copies (as_dict copies every row; this runs per
-        # event and the solver only reads previous rows).
-        prev_map = (dict(zip(prev.app_ids, prev.x)) if prev is not None
-                    else {})
-        delta = bool(self.cfg.incremental and fast and prev_map
-                     and set(prev_map).issubset(app_ids))
+        drf_target0 = target       # pre-push DRF point (step-3 re-check)
+
+        # The master appends new apps after surviving ones, so prev's app
+        # list is almost always a prefix of the current one; membership is
+        # then just an index compare and NO prev dict is built at all.
+        # Otherwise: row views, not copies (as_dict copies every row; this
+        # runs per event and the solver only reads previous rows).
+        n_prev = len(prev.app_ids) if prev is not None else 0
+        k_prefix = 0
+        prev_map: Optional[Dict[str, np.ndarray]] = None
+        if soa and n_prev and prev.app_ids == app_ids[:n_prev]:
+            k_prefix = n_prev
+        elif prev is not None:
+            prev_map = dict(zip(prev.app_ids, prev.x))
+        else:
+            prev_map = {}
+
+        def in_prev(i: int) -> bool:
+            return i < k_prefix if prev_map is None \
+                else app_ids[i] in prev_map
+
+        def prev_row(i: int) -> np.ndarray:
+            return prev.x[i] if prev_map is None else prev_map[app_ids[i]]
+
+        delta = bool(self.cfg.incremental and fast and n_prev
+                     and (prev_map is None
+                          or set(prev_map).issubset(app_ids)))
         if delta:
             # Guard: a shrunk bound (Resize event) can push a target below
             # the previous count; the stickiness loop must then TRIM rows,
             # so the prev-rows warm start would not match -- full path.
-            tgt_of = dict(zip(app_ids, target.tolist()))
-            if any(int(row.sum()) > tgt_of[a]
-                   for a, row in prev_map.items()):
-                delta = False
-        if delta and not bool((d == np.floor(d)).all()):
+            if state is not None:
+                if bool((state.counts[idx] > target).any()):
+                    delta = False
+            elif prev_map is None:
+                if bool((prev.x.sum(axis=1) > target[:k_prefix]).any()):
+                    delta = False
+            else:
+                tgt_of = dict(zip(app_ids, target.tolist()))
+                if any(int(row.sum()) > tgt_of[a]
+                       for a, row in prev_map.items()):
+                    delta = False
+        if delta and not integral:
             # Guard: with fractional demands (e.g. Alibaba plan_cpu/100
             # replays) the delta path's one-matmul free computation and the
             # full path's sequential row subtraction can differ in the last
@@ -532,12 +917,12 @@ class GreedyOptimizer:
             # n_max, so the push is provably a no-op). Pure-python
             # incremental loop: the loss delta of one extra container is
             # local to the app, so the Eq-15 re-check is O(1), not O(n).
-            remaining = (cluster.total_capacity() - target @ d).tolist()
+            remaining = (total_cap - target @ d).tolist()
             d_list = d.tolist()
             g_list = g.tolist()
             s_hat_list = s_hat_vec.tolist()
             tgt = target.tolist()
-            nmax_list = [a.n_max for a in apps]
+            nmax_list = nmax_v.tolist()
             cur_loss = sum(abs(g_list[i] * tgt[i] - s_hat_list[i])
                            for i in range(n))
             order = np.argsort(-util_w).tolist()  # best utilization first
@@ -562,18 +947,36 @@ class GreedyOptimizer:
             target = np.array(tgt, dtype=np.int64)
 
         # -- step 2: placement with stickiness.
+        place_fn = _best_fit_place_batch if soa else _best_fit_place
+        inv_cap = 1.0 / np.maximum(cap, 1e-9)
+        changed_track: Optional[set] = None   # indices changed vs prev rows
         if delta:
             # Delta warm start: every surviving app keeps its previous row
             # verbatim (the stickiness loop below would reproduce exactly
             # that: targets are at n_max >= previous counts, and previous
             # rows are jointly capacity-feasible, so nothing is trimmed).
             self.delta_solves += 1
-            x = np.zeros((n, b), dtype=np.int64)
-            for i, a in enumerate(app_ids):
-                pr = prev_map.get(a)
-                if pr is not None:
-                    x[i] = pr
-            free = cap - x.T.astype(np.float64) @ d
+            # Only the SoA placement loops feed the tracker; the legacy
+            # engine must fall back to the row compare.
+            changed_track = set() if soa else None
+            if state is not None:
+                # The state's rows ARE the previous allocation: one gather
+                # for x, one copy of the incrementally-maintained free
+                # matrix -- no per-app row loop, no (b, n) @ (n, m) matmul.
+                x = state.x[idx]                # fancy index -> fresh copy
+                free = state.free.copy()
+                sums = state.counts[idx].copy()
+            else:
+                x = np.zeros((n, b), dtype=np.int64)
+                if k_prefix:
+                    x[:k_prefix] = prev.x       # one bulk copy
+                else:
+                    for i, a in enumerate(app_ids):
+                        pr = prev_map.get(a)
+                        if pr is not None:
+                            x[i] = pr
+                free = cap - x.T.astype(np.float64) @ d
+                sums = x.sum(axis=1)
         else:
             self.full_solves += 1
             x = np.zeros((n, b), dtype=np.int64)
@@ -582,7 +985,10 @@ class GreedyOptimizer:
             # the per-slave keepable count has the closed form
             # min(prev_j, max q: q*d <= free_j + eps), capped cumulatively.
             for i, a in enumerate(app_ids):
-                pr = prev_map.get(a)
+                if prev_map is None:
+                    pr = prev.x[i] if i < k_prefix else None
+                else:
+                    pr = prev_map.get(a)
                 if pr is None or target[i] <= 0:
                     continue
                 di = d[i]
@@ -598,42 +1004,96 @@ class GreedyOptimizer:
                 if keep.any():
                     x[i] = keep
                     free -= keep[:, None] * di[None, :]
-        # Best-fit the remainder (one container at a time, vectorized over
-        # slaves). Two passes: every app is raised to its n_min before anyone
-        # is topped up to the full target -- packing early apps to their
-        # whole target first would starve the tail below n_min on a
-        # saturated cluster and spuriously report P2 infeasible.
-        inv_cap = 1.0 / np.maximum(cap, 1e-9)
-        sums = x.sum(axis=1)
-        for i in range(n):
-            if sums[i] < apps[i].n_min:
-                _best_fit_place(x, free, d, inv_cap, i, apps[i].n_min)
-        for i in range(n):
-            if x[i].sum() < target[i]:
-                _best_fit_place(x, free, d, inv_cap, i, int(target[i]))
-            if x[i].sum() < apps[i].n_min:
-                # Packing failed below n_min: give up -> infeasible signal.
-                return None
+            sums = x.sum(axis=1)
+        # Best-fit the remainder. Two passes: every app is raised to its
+        # n_min before anyone is topped up to the full target -- packing
+        # early apps to their whole target first would starve the tail below
+        # n_min on a saturated cluster and spuriously report P2 infeasible.
+        if soa:
+            # Only the apps below target are visited (ascending index order,
+            # same as the legacy scan), and row sums are bookkept instead of
+            # re-reduced per app.
+            memo = epoch = None
+            if changed_track is not None and state is not None:
+                memo = self._futile
+                epoch = state.epoch
+                if epoch != self._futile_epoch:
+                    memo.clear()
+                    self._futile_epoch = epoch
+            for i in np.flatnonzero(sums < nmin_v):
+                i = int(i)
+                if place_fn(x, free, d, inv_cap, i, int(nmin_v[i])):
+                    sums[i] = int(x[i].sum())
+                    if changed_track is not None and in_prev(i):
+                        changed_track.add(i)
+            for i in np.flatnonzero(sums < target):
+                i = int(i)
+                tgt_i = int(target[i])
+                if memo is not None:
+                    # Skip a top-up that already found no fitting slave at
+                    # this capacity epoch (no capacity was freed since, so
+                    # the attempt is provably a no-op; such apps already
+                    # hold >= n_min from the previous allocation).
+                    rec = memo.get(app_ids[i])
+                    if rec is not None and rec[0] == epoch \
+                            and rec[1] == tgt_i:
+                        continue
+                if place_fn(x, free, d, inv_cap, i, tgt_i):
+                    sums[i] = int(x[i].sum())
+                    if changed_track is not None and in_prev(i):
+                        changed_track.add(i)
+                if sums[i] < nmin_v[i]:
+                    # Packing failed below n_min -> infeasible signal.
+                    return None
+                if memo is not None:
+                    if sums[i] < tgt_i:
+                        memo[app_ids[i]] = (epoch, tgt_i)
+                    else:
+                        memo.pop(app_ids[i], None)
+        else:
+            for i in range(n):
+                if sums[i] < apps[i].n_min:
+                    place_fn(x, free, d, inv_cap, i, apps[i].n_min)
+            for i in range(n):
+                if x[i].sum() < target[i]:
+                    place_fn(x, free, d, inv_cap, i, int(target[i]))
+                if x[i].sum() < apps[i].n_min:
+                    # Packing failed below n_min: give up -> infeasible.
+                    return None
+            sums = x.sum(axis=1)
 
         # -- step 3: adjustment budget.
-        common = [i for i, a in enumerate(app_ids) if a in prev_map]
+        if k_prefix:
+            common = list(range(k_prefix))
+        elif prev_map:
+            common = [i for i, a in enumerate(app_ids) if a in prev_map]
+        else:
+            common = []
         if common:
             budget_r = adjust_budget(self.cfg, len(common))
-            changed = [i for i in common
-                       if not np.array_equal(x[i], prev_map[app_ids[i]])]
+            if changed_track is not None:
+                # Delta path: rows start as prev's rows, so the placement
+                # grants above are EXACTLY the changed rows -- no compare.
+                changed = sorted(changed_track)
+            elif soa and k_prefix:
+                diff = (x[:k_prefix] != prev.x).any(axis=1)
+                changed = np.flatnonzero(diff).tolist()
+            else:
+                changed = [i for i in common
+                           if not np.array_equal(x[i], prev_row(i))]
             # Revert least-valuable changes until within budget (reverting must
             # stay capacity-feasible; reverts free or consume capacity).
-            changed.sort(key=lambda i: util_w[i] * (x[i].sum()
-                                                    - prev_map[app_ids[i]].sum()))
+            changed.sort(key=lambda i: util_w[i] * (sums[i]
+                                                    - prev_row(i).sum()))
             if len(changed) > budget_r:
                 used = x.T.astype(np.float64) @ d       # (b, m)
                 while len(changed) > budget_r:
                     reverted = False
                     for pos_i in range(len(changed) - 1, -1, -1):
                         i = changed[pos_i]
-                        pr = prev_map[app_ids[i]]
+                        pr = prev_row(i)
                         pr_n = int(pr.sum())
-                        if pr_n > apps[i].n_max or pr_n < apps[i].n_min:
+                        if pr_n > nmax_v[i] or pr_n < nmin_v[i]:
                             # Bounds moved since the previous allocation
                             # (Resize event): the old row is no longer a
                             # legal state to revert to.
@@ -643,6 +1103,7 @@ class GreedyOptimizer:
                         if np.all(used + delta_u <= cap + 1e-6):
                             used += delta_u
                             x[i] = pr
+                            sums[i] = pr_n
                             changed.pop(pos_i)
                             reverted = True
                             break
@@ -650,15 +1111,25 @@ class GreedyOptimizer:
                         return None     # cannot satisfy Eq 16 -> infeasible
             # Re-check fairness budget after reverts; if blown, also infeasible
             # (paper keeps previous allocation in that case).
-            if total_loss(x.sum(axis=1)) > budget_l + 1e-6:
-                drf_loss = total_loss(np.array(
-                    [min(max(drf_counts[a], apps[i].n_min), apps[i].n_max)
-                     for i, a in enumerate(app_ids)]))
+            if total_loss(sums) > budget_l + 1e-6:
+                drf_loss = total_loss(np.clip(drf_target0, nmin_v, nmax_v))
                 if drf_loss <= budget_l + 1e-6:
                     return None
+            if soa:
+                self.last_changed = tuple(app_ids[i] for i in changed)
+        elif soa:
+            self.last_changed = ()
 
+        if delta:
+            # Provably feasible, skip the O(n*b) re-validation: rows start
+            # from the (validated) previous allocation, every grant stayed
+            # within the exactly-maintained free capacity (the delta path
+            # requires integral demands), and counts end in
+            # [n_min, target <= n_max]. The legacy engine still validates,
+            # so the engine bit-exactness tests cross-check this proof.
+            return Allocation.trusted(app_ids, x)
         alloc = Allocation(app_ids, x)
-        validate_allocation(alloc, apps, cluster)
+        validate_allocation(alloc, apps, cluster, d=d)
         return alloc
 
 
@@ -672,7 +1143,24 @@ class AutoOptimizer:
         self.cfg = cfg
         self._milp = MilpOptimizer(cfg) if _HAVE_SCIPY else None
         self._greedy = GreedyOptimizer(cfg)
-        self.last_shares: Optional[Dict[str, float]] = None
+        self._last_solver = self._greedy
+
+    @property
+    def last_shares(self) -> Optional[Dict[str, float]]:
+        return self._last_solver.last_shares
+
+    @property
+    def last_shares_vec(self) -> Optional[np.ndarray]:
+        return self._last_solver.last_shares_vec
+
+    @property
+    def last_changed(self) -> Optional[Tuple[str, ...]]:
+        return self._last_solver.last_changed
+
+    @property
+    def refill_s(self) -> float:
+        return self._greedy.refill_s + \
+            (self._milp.refill_s if self._milp is not None else 0.0)
 
     def select(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec):
         """The solver that `solve` would dispatch to for this instance."""
@@ -682,11 +1170,11 @@ class AutoOptimizer:
         return self._greedy
 
     def solve(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-              prev: Optional[Allocation] = None,
+              prev: Optional[Allocation] = None, state=None,
               ) -> Optional[Allocation]:
         solver = self.select(apps, cluster)
-        alloc = solver.solve(apps, cluster, prev)
-        self.last_shares = solver.last_shares
+        alloc = solver.solve(apps, cluster, prev, state=state)
+        self._last_solver = solver
         return alloc
 
 

@@ -200,6 +200,8 @@ def _parse_philly(rows: List[List[str]], cfg: ReplayConfig,
 
 def _parse_alibaba(rows: List[List[str]], cfg: ReplayConfig,
                    ) -> List[WorkloadApp]:
+    if not rows:
+        raise ValueError("alibaba: empty trace")
     # Headerless (as published); accept an optional header row too.
     first = [c.strip().lower() for c in rows[0]]
     data = rows[1:] if "task_name" in first else rows

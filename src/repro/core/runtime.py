@@ -118,6 +118,12 @@ class ReallocationResult:
     utilization: float
     fairness_loss: float
     adjustment_overhead: int
+    # Incremental-sync contract with the runtime: {app_id: new container
+    # count} for EXACTLY the apps whose count changed since this policy's
+    # previous result (empty dict = nothing changed). None = no guarantee;
+    # the runtime must rebuild every app's count from `allocation` (the
+    # unbounded-churn baselines leave it None on reallocation events).
+    changed_counts: Optional[Dict[str, int]] = None
 
 
 @runtime_checkable
@@ -229,6 +235,18 @@ class PolicyTimer:
 
     def mean_ms(self) -> float:
         return 1e3 * self.total_s() / max(self.n_calls, 1)
+
+    def median_ms(self) -> float:
+        """Median per-event policy time: robust to OS-jitter spikes and to
+        the rare expensive events (full refills), so cross-config ratios
+        computed from it are stable even on a loaded machine."""
+        if not self.calls:
+            return 0.0
+        times = sorted(s for _, s in self.calls)
+        mid = len(times) // 2
+        if len(times) % 2:
+            return 1e3 * times[mid]
+        return 1e3 * 0.5 * (times[mid - 1] + times[mid])
 
     def by_kind(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
@@ -412,17 +430,30 @@ class ClusterRuntime:
             return float(tf[s]), s
 
         def apply(res: ReallocationResult) -> None:
-            cont[active] = 0
-            counts = res.allocation.x.sum(axis=1)
-            for i, app_id in enumerate(res.allocation.app_ids):
-                s = slot_of.get(app_id)
-                if s is None or not active[s]:
-                    continue
-                c = int(counts[i])
-                cont[s] = c
-                rt = self.runtimes[app_id]
-                if c > 0 and rt.started_at is None:
-                    rt.started_at = t
+            if res.changed_counts is not None:
+                # Incremental sync: touch ONLY the apps the policy reports
+                # as changed (adjusted + started), instead of rebuilding
+                # every running app's slot state each event.
+                for app_id, c in res.changed_counts.items():
+                    s = slot_of.get(app_id)
+                    if s is None or not active[s]:
+                        continue
+                    cont[s] = c
+                    rt = self.runtimes[app_id]
+                    if c > 0 and rt.started_at is None:
+                        rt.started_at = t
+            else:
+                cont[active] = 0
+                counts = res.allocation.x.sum(axis=1)
+                for i, app_id in enumerate(res.allocation.app_ids):
+                    s = slot_of.get(app_id)
+                    if s is None or not active[s]:
+                        continue
+                    c = int(counts[i])
+                    cont[s] = c
+                    rt = self.runtimes[app_id]
+                    if c > 0 and rt.started_at is None:
+                        rt.started_at = t
             for app_id in res.adjusted_app_ids:
                 s = slot_of.get(app_id)
                 if s is not None and active[s]:

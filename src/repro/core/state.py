@@ -1,0 +1,415 @@
+"""Structure-of-arrays allocation state: the scheduling hot-path engine.
+
+Before this module existed, every reallocation event churned thousands of
+Python objects: `DormMaster._place` created one `Container`, `TaskExecutor`
+and `TaskScheduler` per granted container (and destroyed them all again on
+the next adjustment), and every consumer that needed the placement matrix
+rebuilt it from those object lists. At 1000 slaves x 500 apps the object
+churn -- not the optimizer arithmetic -- dominated per-event scheduling
+time.
+
+`ClusterState` replaces the dict-of-objects bookkeeping with flat arrays:
+
+  * app ids are interned to integer rows of a single in-place placement
+    matrix `x` (rows are recycled through a free list as apps finish),
+  * per-app demand vectors, elasticity bounds, weights and the derived
+    optimizer coefficients (dominant-share coefficient g_i, utilization
+    weight w_i) are materialized ONCE at admission into parallel arrays,
+  * the per-slave free-capacity matrix and the aggregate all-n_max demand
+    vector are maintained incrementally (O(b_touched * m) per placement
+    change), so the saturating-DRF feasibility probe is O(m) per event,
+  * the object layer (`Partition` / `TaskExecutor` / `TaskScheduler` /
+    per-slave container lists) is materialized LAZILY, only when some
+    consumer actually asks for it (live integrations, tests, dashboards),
+    and invalidated when the app's placement changes.
+
+Exactness note: all incremental float updates (free capacity, aggregate
+n_max demand) are add/subtract of products of integers stored in float64,
+which is exact while magnitudes stay far below 2**53 -- the same argument
+the optimizer's delta path already relies on. For fractional demands the
+callers fall back to freshly-computed quantities (see
+`GreedyOptimizer`'s integral-demand guard), so bit-exactness versus the
+object-engine reference never depends on float associativity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .partition import Partition, TaskExecutor, TaskScheduler
+from .slave import Container
+from .types import Allocation, ApplicationSpec, ClusterSpec
+
+__all__ = ["ClusterState", "StateSlaveView", "LazyAppViews", "LazySlaveViews"]
+
+_EPS = 1e-9
+
+
+class ClusterState:
+    """Flat-array allocation state for one cluster (see module docstring)."""
+
+    def __init__(self, cluster: ClusterSpec, capacity_hint: int = 64):
+        self.cluster = cluster
+        self.slave_ids: Tuple[str, ...] = tuple(
+            s.slave_id for s in cluster.slaves)
+        self.slave_index: Dict[str, int] = {
+            s: j for j, s in enumerate(self.slave_ids)}
+        self.b = cluster.b
+        self.m = cluster.m
+        self.cap = cluster.capacity_matrix().astype(np.float64)   # (b, m)
+        self.free = self.cap.copy()                               # (b, m)
+        self.total_cap = self.cap.sum(axis=0)                     # (m,)
+
+        n0 = max(int(capacity_hint), 8)
+        self.x = np.zeros((n0, self.b), np.int64)        # placement rows
+        self.demand = np.zeros((n0, self.m), np.float64)
+        self.counts = np.zeros(n0, np.int64)             # row sums of x
+        self.n_min = np.zeros(n0, np.int64)
+        self.n_max = np.zeros(n0, np.int64)
+        self.weight = np.ones(n0, np.int64)
+        self.g = np.zeros(n0, np.float64)                # max_k d_k / C_k
+        self.util_w = np.zeros(n0, np.float64)           # sum_k d_k / C_k
+        self._integral = np.ones(n0, bool)               # d == floor(d)?
+
+        self.row_of: Dict[str, int] = {}
+        self.spec_of: Dict[str, ApplicationSpec] = {}
+        self._free_rows: List[int] = []
+        self._rows_cache: Optional[np.ndarray] = None   # admission order
+        self._ids_cache: Tuple[str, ...] = ()
+        self._placed: Dict[str, None] = {}               # ordered set
+        self._n_fractional = 0
+        # Monotone counter bumped whenever free capacity INCREASES anywhere
+        # (teardown, shrinking placement). While it is unchanged, a
+        # placement attempt that found no fitting slave is provably still
+        # futile -- the delta solver memoizes on it.
+        self.epoch = 0
+        # sum_i n_max_i * d_i over ADMITTED apps (saturating-DRF probe)
+        self.nmax_demand = np.zeros(self.m, np.float64)
+
+        # Lazily materialized object layer.
+        self._parts: Dict[str, Partition] = {}
+        self._execs: Dict[str, List[TaskExecutor]] = {}
+        self._scheds: Dict[str, List[TaskScheduler]] = {}
+        self._next_cid = np.zeros(self.b, np.int64)      # container id seqs
+
+    # ------------------------------------------------------------ admission
+
+    def admit(self, spec: ApplicationSpec) -> int:
+        """Intern an application: assign a row, materialize per-app arrays."""
+        if spec.app_id in self.row_of:
+            raise ValueError(f"app {spec.app_id} already admitted")
+        d = spec.demand.as_array()
+        if d.shape[0] != self.m:
+            # Validate BEFORE touching the free list: raising after the pop
+            # would leak the recycled row slot.
+            raise ValueError(
+                f"{spec.app_id}: demand has {d.shape[0]} resources, "
+                f"cluster has {self.m}")
+        if self._free_rows:
+            i = self._free_rows.pop()
+        else:
+            i = len(self.row_of)
+            if i >= self.x.shape[0]:
+                self._grow(2 * self.x.shape[0])
+        self.row_of[spec.app_id] = i
+        self.spec_of[spec.app_id] = spec
+        self.x[i] = 0
+        self.counts[i] = 0
+        self.demand[i] = d
+        self.n_min[i] = spec.n_min
+        self.n_max[i] = spec.n_max
+        self.weight[i] = spec.weight
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(self.total_cap > 0, d / self.total_cap, 0.0)
+        self.g[i] = float(ratios.max()) if ratios.size else 0.0
+        self.util_w[i] = float(ratios.sum())
+        integral = bool((d == np.floor(d)).all())
+        self._integral[i] = integral
+        if not integral:
+            self._n_fractional += 1
+        self.nmax_demand += spec.n_max * d
+        self._rows_cache = None
+        return i
+
+    def update_spec(self, spec: ApplicationSpec) -> None:
+        """Re-bound an admitted app (runtime `Resize`): demand is immutable,
+        only n_min/n_max/weight may change."""
+        i = self.row_of[spec.app_id]
+        if not np.array_equal(spec.demand.as_array(), self.demand[i]):
+            raise ValueError(
+                f"{spec.app_id}: demand changes require re-admission")
+        self.nmax_demand += (spec.n_max - self.n_max[i]) * self.demand[i]
+        self.n_min[i] = spec.n_min
+        self.n_max[i] = spec.n_max
+        self.weight[i] = spec.weight
+        self.spec_of[spec.app_id] = spec
+        # Bound changes move solve targets, which changes how much capacity
+        # the apps AHEAD of a memoized top-up consume within a solve -- a
+        # recorded futile attempt is no longer provably futile.
+        self.epoch += 1
+
+    def forget(self, app_id: str) -> None:
+        """Release a finished app's row back to the free list."""
+        i = self.row_of.pop(app_id)
+        spec = self.spec_of.pop(app_id)
+        if self.counts[i]:
+            self._release_row(app_id, i)
+        self.nmax_demand -= spec.n_max * self.demand[i]
+        if not self._integral[i]:
+            self._n_fractional -= 1
+        self._placed.pop(app_id, None)
+        self._drop_materialized(app_id)
+        self._free_rows.append(i)
+        self._rows_cache = None
+        # Unconditional bump: a later app re-using this id must never hit a
+        # stale futile-top-up memo entry.
+        self.epoch += 1
+
+    def _grow(self, n: int) -> None:
+        def grown(arr, fill=0):
+            shape = (n,) + arr.shape[1:]
+            out = np.full(shape, fill, arr.dtype) if fill else \
+                np.zeros(shape, arr.dtype)
+            out[:arr.shape[0]] = arr
+            return out
+        self.x = grown(self.x)
+        self.demand = grown(self.demand)
+        self.counts = grown(self.counts)
+        self.n_min = grown(self.n_min)
+        self.n_max = grown(self.n_max)
+        self.weight = grown(self.weight, fill=1)
+        self.g = grown(self.g)
+        self.util_w = grown(self.util_w)
+        self._integral = grown(self._integral, fill=True)
+
+    # ------------------------------------------------------------ placement
+
+    def place(self, app_id: str, row: np.ndarray) -> None:
+        """Set app's placement row in place; free capacity is maintained
+        incrementally (only the touched slave rows are updated)."""
+        i = self.row_of[app_id]
+        new = np.asarray(row, np.int64)
+        delta = new - self.x[i]
+        touched = np.flatnonzero(delta)
+        if touched.size:
+            self.free[touched] -= (delta[touched, None].astype(np.float64)
+                                   * self.demand[i][None, :])
+            self.x[i] = new
+            self.counts[i] = int(new.sum())
+            if (delta[touched] < 0).any() and self.demand[i].any():
+                self.epoch += 1          # some slave regained capacity
+        self._placed[app_id] = None
+        self._drop_materialized(app_id)
+
+    def clear(self, app_id: str) -> None:
+        """Zero the app's row (teardown), returning its capacity."""
+        i = self.row_of[app_id]
+        self._release_row(app_id, i)
+
+    def _release_row(self, app_id: str, i: int) -> None:
+        touched = np.flatnonzero(self.x[i])
+        if touched.size:
+            self.free[touched] += (self.x[i][touched, None].astype(np.float64)
+                                   * self.demand[i][None, :])
+            self.x[i] = 0
+            self.counts[i] = 0
+            if self.demand[i].any():
+                self.epoch += 1          # capacity returned to the pool
+        self._placed.pop(app_id, None)
+        self._drop_materialized(app_id)
+
+    # -------------------------------------------------------------- queries
+
+    def __contains__(self, app_id: str) -> bool:
+        return app_id in self.row_of
+
+    def is_placed(self, app_id: str) -> bool:
+        return app_id in self._placed
+
+    def placed_ids(self) -> Tuple[str, ...]:
+        """Placed app ids in placement order (the object-engine dict order)."""
+        return tuple(self._placed)
+
+    def containers_of(self, app_id: str) -> int:
+        i = self.row_of.get(app_id)
+        return int(self.counts[i]) if i is not None else 0
+
+    def placement(self, app_id: str) -> np.ndarray:
+        """The app's x row (a copy -- the internal row mutates in place)."""
+        return self.x[self.row_of[app_id]].copy()
+
+    def rows_for(self, app_ids: Sequence[str]) -> np.ndarray:
+        """Row indices for `app_ids`. When the query is every admitted app
+        in admission order (the master's per-event case), the cached
+        admission-order vector answers without per-app dict lookups; the
+        id-tuple compare is mostly pointer equality on interned strings,
+        far cheaper than n dict probes."""
+        n = len(app_ids)
+        if n == len(self.row_of) and n:
+            if self._rows_cache is None:
+                self._ids_cache = tuple(self.row_of)
+                self._rows_cache = np.fromiter(self.row_of.values(),
+                                               np.int64, n)
+            if tuple(app_ids) == self._ids_cache:
+                return self._rows_cache
+        return np.fromiter((self.row_of[a] for a in app_ids), np.int64, n)
+
+    def allocation(self, app_ids: Optional[Sequence[str]] = None,
+                   ) -> Allocation:
+        """Snapshot an Allocation (gather copy) for the given apps
+        (default: all placed apps, placement order)."""
+        ids = tuple(app_ids) if app_ids is not None else self.placed_ids()
+        if not ids:
+            return Allocation((), np.zeros((0, self.b), np.int64))
+        return Allocation.trusted(ids, self.x[self.rows_for(ids)])
+
+    def all_integral(self) -> bool:
+        """True iff every admitted app's demand vector is integer-valued
+        (the delta path's exactness precondition)."""
+        return self._n_fractional == 0
+
+    def saturates_at_nmax(self) -> bool:
+        """O(m) probe: can the aggregate capacity host EVERY admitted app at
+        its n_max? (`drf.saturating_counts`'s condition, incrementally
+        maintained -- exact for integral demands.)"""
+        return bool(np.all(self.nmax_demand <= self.total_cap + _EPS))
+
+    def used(self) -> np.ndarray:
+        """(b, m) resources in use (derived: cap - free)."""
+        return self.cap - self.free
+
+    # ------------------------------------------- lazy object materialization
+
+    def partition(self, app_id: str) -> Partition:
+        """Materialize (and cache) the app's Partition + Container objects.
+        Dropped automatically when the app's placement changes."""
+        part = self._parts.get(app_id)
+        if part is None:
+            part = self._materialize(app_id)
+        return part
+
+    def executors(self, app_id: str) -> List[TaskExecutor]:
+        if app_id not in self._execs:
+            self._materialize(app_id)
+        return self._execs[app_id]
+
+    def schedulers(self, app_id: str) -> List[TaskScheduler]:
+        if app_id not in self._scheds:
+            self._materialize(app_id)
+        return self._scheds[app_id]
+
+    def _materialize(self, app_id: str) -> Partition:
+        spec = self.spec_of[app_id]
+        part = Partition(spec)
+        execs: List[TaskExecutor] = []
+        scheds: List[TaskScheduler] = []
+        row = self.x[self.row_of[app_id]]
+        for j in np.flatnonzero(row):
+            sid = self.slave_ids[j]
+            for _ in range(int(row[j])):
+                cid = f"{sid}/c{int(self._next_cid[j])}"
+                self._next_cid[j] += 1
+                c = Container(cid, app_id, sid, spec.demand)
+                part.containers.append(c)
+                execs.append(TaskExecutor(cid, app_id))
+                scheds.append(TaskScheduler(cid, app_id))
+        self._parts[app_id] = part
+        self._execs[app_id] = execs
+        self._scheds[app_id] = scheds
+        return part
+
+    def _drop_materialized(self, app_id: str) -> None:
+        self._parts.pop(app_id, None)
+        self._execs.pop(app_id, None)
+        self._scheds.pop(app_id, None)
+
+
+class StateSlaveView:
+    """Read-only DormSlave-shaped view over one slave's slice of the state
+    (what the master's `slaves` mapping hands out under the SoA engine).
+    `used`/`available` are O(m) reads of the incrementally-maintained free
+    matrix; `containers_of` materializes lazily via the state."""
+
+    def __init__(self, state: ClusterState, j: int):
+        self._state = state
+        self.j = j
+        self.spec = state.cluster.slaves[j]
+
+    @property
+    def slave_id(self) -> str:
+        return self.spec.slave_id
+
+    def used(self) -> np.ndarray:
+        return self._state.cap[self.j] - self._state.free[self.j]
+
+    def available(self) -> np.ndarray:
+        return self._state.free[self.j].copy()
+
+    def can_host(self, demand) -> bool:
+        return bool(np.all(demand.as_array()
+                           <= self._state.free[self.j] + _EPS))
+
+    def containers_of(self, app_id: str) -> List[Container]:
+        if self._state.containers_of(app_id) == 0:
+            return []
+        return [c for c in self._state.partition(app_id).containers
+                if c.slave_id == self.slave_id]
+
+    @property
+    def containers(self) -> Dict[str, Container]:
+        """All containers hosted here (materializes every placed app)."""
+        out: Dict[str, Container] = {}
+        for app_id in self._state.placed_ids():
+            for c in self.containers_of(app_id):
+                out[c.container_id] = c
+        return out
+
+
+class LazyAppViews(Mapping):
+    """Dict-shaped lazy view keyed by placed app id: `partitions`,
+    `executors` and `schedulers` on the master materialize through this.
+    Membership and iteration never materialize objects."""
+
+    def __init__(self, state: ClusterState, build):
+        self._state = state
+        self._build = build
+
+    def __getitem__(self, app_id: str):
+        if app_id not in self._state._placed:
+            raise KeyError(app_id)
+        return self._build(app_id)
+
+    def __contains__(self, app_id) -> bool:
+        return app_id in self._state._placed
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._state._placed)
+
+    def __len__(self) -> int:
+        return len(self._state._placed)
+
+
+class LazySlaveViews(Mapping):
+    """Dict-shaped view of `StateSlaveView`s keyed by slave id."""
+
+    def __init__(self, state: ClusterState):
+        self._state = state
+        self._views: Dict[str, StateSlaveView] = {}
+
+    def __getitem__(self, slave_id: str) -> StateSlaveView:
+        view = self._views.get(slave_id)
+        if view is None:
+            view = StateSlaveView(self._state,
+                                  self._state.slave_index[slave_id])
+            self._views[slave_id] = view
+        return view
+
+    def __contains__(self, slave_id) -> bool:
+        return slave_id in self._state.slave_index
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._state.slave_ids)
+
+    def __len__(self) -> int:
+        return self._state.b

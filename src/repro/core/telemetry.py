@@ -52,6 +52,17 @@ class MetricsLogger:
             adjusted=list(e.result.adjusted_app_ids),
             started=list(e.result.started_app_ids)))
 
+    def log_phase_breakdown(self, breakdown: Dict[str, float],
+                            t: Optional[float] = None, **extra: Any) -> None:
+        """Record a scheduler per-phase timing breakdown (DormMaster.
+        phase_breakdown(): cumulative solve / drf_refill / enforce /
+        metrics seconds) as a kind="phase" row."""
+        row: Dict[str, Any] = dict(breakdown)
+        if t is not None:
+            row["t"] = t
+        row.update(extra)
+        self.log("phase", **row)
+
     def of_kind(self, kind: str) -> List[Dict[str, Any]]:
         return [r for r in self.rows if r["kind"] == kind]
 
@@ -70,9 +81,15 @@ class MetricsLogger:
         samples = self.of_kind("sample")
         if not samples:
             return {}
-        return {
+        out = {
             "events": len(samples),
             "max_fairness_loss": max(r["fairness_loss"] for r in samples),
             "total_adjustments": sum(r["adjustment_overhead"]
                                      for r in samples),
         }
+        phases = self.of_kind("phase")
+        if phases:
+            out["phase_breakdown"] = {
+                k: v for k, v in phases[-1].items()
+                if k not in ("kind", "t") and isinstance(v, (int, float))}
+        return out

@@ -173,6 +173,17 @@ class Allocation:
         if (self.x < 0).any():
             raise ValueError("allocations must be non-negative")
 
+    @classmethod
+    def trusted(cls, app_ids: Tuple[str, ...], x: np.ndarray) -> "Allocation":
+        """Construct without the __post_init__ scans, for hot paths whose
+        `x` is already a non-negative int64 matrix (rows gathered from a
+        validated allocation or the SoA state). The full-matrix negativity
+        scan costs O(n*b) per event at cluster scale."""
+        out = cls.__new__(cls)
+        out.app_ids = app_ids
+        out.x = x
+        return out
+
     def containers_of(self, app_id: str) -> int:
         return int(self.x[self.app_ids.index(app_id)].sum())
 
@@ -196,13 +207,16 @@ def demand_matrix(apps: Sequence[ApplicationSpec]) -> np.ndarray:
 
 def validate_allocation(alloc: Allocation, apps: Sequence[ApplicationSpec],
                         cluster: ClusterSpec,
-                        enforce_n_min: bool = True) -> None:
-    """Raise if an allocation violates capacity (Eq 6) or bounds (Eqs 7-9)."""
+                        enforce_n_min: bool = True,
+                        d: Optional[np.ndarray] = None) -> None:
+    """Raise if an allocation violates capacity (Eq 6) or bounds (Eqs 7-9).
+    `d`: optionally reuse a precomputed demand matrix (hot solver paths)."""
     if not apps:
         if alloc.x.size:
             raise ValueError("allocation rows for zero apps")
         return
-    d = demand_matrix(apps)                    # (n, m)
+    if d is None:
+        d = demand_matrix(apps)                # (n, m)
     cap = cluster.capacity_matrix()            # (b, m)
     # float64 matmul: BLAS path (int64 matmul is a slow loop), exact for
     # container counts/demands far below 2**53.

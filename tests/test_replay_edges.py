@@ -1,0 +1,115 @@
+"""Trace-replay edge cases (repro.core.replay): malformed CSV rows,
+out-of-order submit times, and headerless alibaba corner cases must raise or
+skip DETERMINISTICALLY -- never crash with an unrelated error or silently
+reorder work."""
+import pytest
+
+from repro.core import ReplayConfig, replay_trace
+
+
+# ------------------------------------------------------------ malformed rows
+
+def test_philly_malformed_numeric_cell_raises_value_error():
+    trace = ("jobid,submitted_time,run_time,num_gpus\n"
+             "j1,0,3600,2\n"
+             "j2,oops,3600,2\n")
+    with pytest.raises(ValueError):
+        replay_trace(trace, fmt="philly")
+
+
+def test_philly_missing_required_column_raises_with_column_name():
+    trace = "jobid,submitted_time,num_gpus\nj1,0,2\n"
+    with pytest.raises(ValueError, match="run_time"):
+        replay_trace(trace, fmt="philly")
+
+
+def test_generic_malformed_row_raises():
+    trace = ("app_id,submit_time,duration_s,cpus,gpus,ram_gb,n_min,n_max,"
+             "weight\n"
+             "a,0,100,not-a-number,0,4,1,2,1\n")
+    with pytest.raises(ValueError):
+        replay_trace(trace, fmt="generic")
+
+
+def test_unknown_format_raises():
+    with pytest.raises(ValueError, match="unknown trace format"):
+        replay_trace("x,y\n1,2\n", fmt="borg")
+
+
+# -------------------------------------------------- skip rules (not crashes)
+
+def test_philly_zero_duration_and_zero_gpu_rows_skip():
+    trace = ("jobid,submitted_time,run_time,num_gpus\n"
+             "dead,0,0,2\n"          # zero duration: failed job
+             "cpu,10,3600,0\n"       # zero GPUs
+             "ok,20,3600,2\n")
+    apps = replay_trace(trace, fmt="philly")
+    assert [w.spec.app_id for w in apps] == ["ok"]
+
+
+def test_alibaba_short_and_non_terminated_rows_skip():
+    base = "t1,2,j1,1,Terminated,100,200,100,0.5"
+    trace = "\n".join([
+        base,
+        "t2,2,j1,1",                              # short row: skipped
+        "t3,2,j1,1,Failed,100,200,100,0.5",       # not Terminated
+        "t4,1,j2,1,Terminated,300,200,100,0.5",   # end < start
+        "t5,0,j2,1,Terminated,100,200,100,0.5",   # zero instances
+    ]) + "\n"
+    apps = replay_trace(trace, fmt="alibaba")
+    assert [w.spec.app_id for w in apps] == ["j1/t1"]
+
+
+# ----------------------------------------------------- ordering + shifting
+
+def test_out_of_order_submit_times_sort_and_shift_to_zero():
+    trace = ("jobid,submitted_time,run_time,num_gpus\n"
+             "late,5000,3600,1\n"
+             "early,1000,3600,2\n"
+             "mid,2500,3600,1\n")
+    apps = replay_trace(trace, fmt="philly")
+    assert [w.spec.app_id for w in apps] == ["early", "mid", "late"]
+    times = [w.spec.submit_time for w in apps]
+    assert times == sorted(times)
+    assert times[0] == 0.0                       # shifted to t=0
+    assert times[2] == pytest.approx(4000.0)     # relative gaps preserved
+
+
+def test_out_of_order_alibaba_headerless_sorts_deterministically():
+    trace = ("t2,1,j,1,Terminated,900,1000,100,0.5\n"
+             "t1,1,j,1,Terminated,100,300,100,0.5\n")
+    apps = replay_trace(trace, fmt="alibaba")
+    assert [w.spec.app_id for w in apps] == ["j/t1", "j/t2"]
+    assert apps[0].spec.submit_time == 0.0
+
+
+# ---------------------------------------------------- headerless alibaba
+
+def test_alibaba_optional_header_row_accepted():
+    headered = ("task_name,instance_num,job_name,task_type,status,"
+                "start_time,end_time,plan_cpu,plan_mem\n"
+                "t1,2,j1,1,Terminated,100,200,100,0.5\n")
+    headerless = "t1,2,j1,1,Terminated,100,200,100,0.5\n"
+    a = replay_trace(headered, fmt="alibaba")
+    b = replay_trace(headerless, fmt="alibaba")
+    assert len(a) == len(b) == 1
+    assert a[0].spec == b[0].spec
+
+
+def test_alibaba_empty_trace_raises_value_error():
+    """Regression: an empty alibaba source used to crash with IndexError on
+    the header probe; it must raise the same deterministic ValueError as
+    the headered formats."""
+    with pytest.raises(ValueError, match="empty trace"):
+        replay_trace([], fmt="alibaba")
+    with pytest.raises(ValueError):
+        replay_trace([], fmt="philly")
+
+
+def test_alibaba_demand_mapping_and_elasticity_bounds():
+    cfg = ReplayConfig(min_fraction=0.5, ram_unit_gb=64.0)
+    trace = "t1,8,j1,1,Terminated,0,1000,250,0.25\n"
+    (w,) = replay_trace(trace, fmt="alibaba", cfg=cfg)
+    assert w.spec.demand.values == (2.5, 0.0, 16.0)   # plan_cpu/100, mem*64
+    assert w.spec.n_max == 8 and w.spec.n_min == 4    # ceil(8 * 0.5)
+    assert w.spec.serial_work == pytest.approx(1000.0 * 8)

@@ -1,0 +1,297 @@
+"""SoA allocation engine (repro.core.state) tests: incremental bookkeeping
+matches brute force, lazy object materialization is consistent, the batched
+best-fit placement equals the sequential reference, and the SoA master is
+bit-exact with the PR-2 dict-of-objects engine across whole event streams."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, ClusterSimulator, ClusterSpec,
+                        ClusterState, DormMaster, OptimizerConfig,
+                        Reallocated, RecordingProtocol, ResourceVector,
+                        TraceConfig, generate_trace, heterogeneous_cluster)
+from repro.core.optimizer import _best_fit_place, _best_fit_place_batch
+
+
+def _app(i, cpus=2, gpus=0, ram=8, w=1, nmax=8, nmin=1):
+    return ApplicationSpec(f"app{i}", "x",
+                           ResourceVector.of(cpus, gpus, ram), w, nmax, nmin)
+
+
+def _cluster(n=4, cap=(16, 2, 64)):
+    return ClusterSpec.homogeneous(n, ResourceVector.of(*cap))
+
+
+# ---------------------------------------------------------------- bookkeeping
+
+def test_state_free_capacity_matches_brute_force():
+    rng = np.random.default_rng(0)
+    cluster = _cluster(6)
+    state = ClusterState(cluster)
+    apps = [_app(i, cpus=int(rng.integers(1, 4)), ram=int(rng.integers(2, 9)))
+            for i in range(8)]
+    for a in apps:
+        state.admit(a)
+    live = {}
+    for step in range(60):
+        a = apps[int(rng.integers(len(apps)))]
+        if a.app_id in live and rng.random() < 0.4:
+            state.clear(a.app_id)
+            del live[a.app_id]
+        else:
+            row = rng.integers(0, 2, size=cluster.b)
+            state.place(a.app_id, row)
+            live[a.app_id] = row
+        # brute force: free = cap - sum_i x_i ⊗ d_i
+        used = np.zeros((cluster.b, cluster.m))
+        for app_id, row in live.items():
+            d = state.demand[state.row_of[app_id]]
+            used += row[:, None] * d[None, :]
+        np.testing.assert_allclose(state.free, state.cap - used)
+        for app_id, row in live.items():
+            assert state.containers_of(app_id) == int(row.sum())
+            np.testing.assert_array_equal(state.placement(app_id), row)
+
+
+def test_state_row_recycling_and_aggregate_nmax():
+    cluster = _cluster(2)
+    state = ClusterState(cluster, capacity_hint=2)
+    a, b, c = _app(1, nmax=4), _app(2, nmax=2), _app(3, nmax=8)
+    state.admit(a)
+    state.admit(b)
+    np.testing.assert_allclose(
+        state.nmax_demand, 4 * a.demand.as_array() + 2 * b.demand.as_array())
+    state.place(a.app_id, np.array([1, 1]))
+    state.forget(a.app_id)                  # releases row AND capacity
+    np.testing.assert_allclose(state.free, state.cap)
+    state.admit(c)                          # recycles a's row
+    np.testing.assert_allclose(
+        state.nmax_demand, 2 * b.demand.as_array() + 8 * c.demand.as_array())
+    assert state.saturates_at_nmax() == (
+        bool(np.all(state.nmax_demand <= state.total_cap + 1e-9)))
+    # growth past the initial capacity hint keeps data intact
+    for i in range(10, 30):
+        state.admit(_app(i))
+    assert state.containers_of(b.app_id) == 0
+    state.place(b.app_id, np.array([2, 0]))
+    assert state.containers_of(b.app_id) == 2
+
+
+def test_allocation_gather_correct_when_placed_order_diverges():
+    """Regression (code review): placement order can diverge from admission
+    order in the MIDDLE while first and last app coincide (adjust a middle
+    app, then place a newly admitted one). The row gather must still pair
+    every app id with ITS row, not the admission-order cache."""
+    cluster = _cluster(4)
+    state = ClusterState(cluster)
+    rows = {}
+    for i, app in enumerate([_app(1), _app(2), _app(3)]):
+        state.admit(app)
+        row = np.zeros(cluster.b, np.int64)
+        row[i] = i + 1
+        state.place(app.app_id, row)
+        rows[app.app_id] = row
+    # adjust the MIDDLE app: teardown + re-place moves it to the end of
+    # the placed order (admission order unchanged)
+    state.clear("app2")
+    new2 = np.zeros(cluster.b, np.int64)
+    new2[3] = 7
+    state.place("app2", new2)
+    rows["app2"] = new2
+    state.admit(_app(4))
+    new4 = np.zeros(cluster.b, np.int64)
+    new4[0] = 5
+    state.place("app4", new4)
+    rows["app4"] = new4
+    assert state.placed_ids() == ("app1", "app3", "app2", "app4")
+    alloc = state.allocation()
+    for i, a in enumerate(alloc.app_ids):
+        np.testing.assert_array_equal(alloc.x[i], rows[a])
+    # admission-order query still hits the cache and stays correct
+    alloc2 = state.allocation(("app1", "app2", "app3", "app4"))
+    for i, a in enumerate(alloc2.app_ids):
+        np.testing.assert_array_equal(alloc2.x[i], rows[a])
+
+
+def test_state_epoch_bumps_only_when_capacity_returns():
+    cluster = _cluster(2)
+    state = ClusterState(cluster)
+    a = _app(1)
+    state.admit(a)
+    e0 = state.epoch
+    state.place(a.app_id, np.array([2, 0]))     # pure growth: no bump
+    assert state.epoch == e0
+    state.place(a.app_id, np.array([3, 0]))
+    assert state.epoch == e0
+    state.place(a.app_id, np.array([1, 2]))     # slave 0 regained capacity
+    assert state.epoch > e0
+    e1 = state.epoch
+    state.clear(a.app_id)
+    assert state.epoch > e1
+
+
+def test_update_spec_rebounds_and_rejects_demand_change():
+    cluster = _cluster(2)
+    state = ClusterState(cluster)
+    a = _app(1, nmax=4)
+    state.admit(a)
+    state.update_spec(a.with_bounds(n_max=8))
+    np.testing.assert_allclose(state.nmax_demand, 8 * a.demand.as_array())
+    import dataclasses
+    changed = dataclasses.replace(a, demand=ResourceVector.of(9, 9, 9))
+    with pytest.raises(ValueError):
+        state.update_spec(changed)
+
+
+# ------------------------------------------------------- lazy materialization
+
+def test_lazy_views_materialize_on_demand_only():
+    m = DormMaster(_cluster(), "greedy", OptimizerConfig(0.2, 0.2),
+                   protocol=RecordingProtocol())
+    m.submit(_app(1))
+    state = m.state
+    assert state is not None
+    # membership and iteration must NOT build objects
+    assert "app1" in m.partitions
+    assert list(m.partitions) == ["app1"]
+    assert not state._parts
+    n = m.containers_of("app1")
+    assert n >= 1
+    # materialization on access: one executor/scheduler per container,
+    # containers match the placement row per slave
+    assert len(m.executors["app1"]) == n
+    assert len(m.schedulers["app1"]) == n
+    part = m.partitions["app1"]
+    assert part.n_containers == n
+    np.testing.assert_array_equal(part.placement(m.slave_ids),
+                                  state.placement("app1"))
+    # slave views agree with the state (and with each other)
+    used = sum(np.asarray(m.slaves[s].used()) for s in m.slave_ids)
+    assert used.sum() > 0
+    total_by_slave = sum(len(m.slaves[s].containers_of("app1"))
+                         for s in m.slave_ids)
+    assert total_by_slave == n
+    # a placement change invalidates the cached objects
+    m.submit(_app(2, nmax=32))
+    if "app1" in [a for a in m.partitions]:
+        _ = m.partitions["app1"]            # re-materializes cleanly
+    m.complete("app1")
+    m.complete("app2")
+    assert sum(np.asarray(m.slaves[s].used()).sum()
+               for s in m.slave_ids) == 0
+
+
+# ------------------------------------------------ batched best-fit placement
+
+def test_batched_best_fit_matches_sequential_reference():
+    rng = np.random.default_rng(1)
+    for trial in range(200):
+        b = int(rng.integers(1, 12))
+        mdim = 3
+        cap = rng.integers(4, 40, size=(b, mdim)).astype(np.float64)
+        free1 = cap - rng.integers(0, 4, size=(b, mdim))
+        free1 = np.maximum(free1, 0.0)
+        free2 = free1.copy()
+        n = int(rng.integers(1, 5))
+        d = rng.integers(0, 5, size=(n, mdim)).astype(np.float64)
+        inv_cap = 1.0 / np.maximum(cap, 1e-9)
+        x1 = np.zeros((n, b), np.int64)
+        x2 = np.zeros((n, b), np.int64)
+        for i in range(n):
+            limit = int(rng.integers(1, 20))
+            _best_fit_place(x1, free1, d, inv_cap, i, limit)
+            _best_fit_place_batch(x2, free2, d, inv_cap, i, limit)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_allclose(free1, free2)
+
+
+# ------------------------------------------- engine-level stream bit-exactness
+
+def _run_engine(soa, cluster, wl, incremental=True):
+    cfg = OptimizerConfig(0.2, 0.2, incremental=incremental, soa=soa)
+    m = DormMaster(cluster, "greedy", cfg, protocol=RecordingProtocol())
+    allocs = []
+    sim = ClusterSimulator(m, wl, horizon_s=24 * 3600.0)
+    sim.runtime.bus.subscribe(
+        Reallocated,
+        lambda e: allocs.append((e.t, e.result.allocation.app_ids,
+                                 e.result.allocation.x.copy(),
+                                 e.result.adjusted_app_ids,
+                                 e.result.started_app_ids)))
+    res = sim.run()
+    return res, allocs
+
+
+@pytest.mark.parametrize("n_slaves,n_apps,seed,inter", [
+    (60, 60, 4, 600.0),      # abundant: delta path dominates
+    (10, 40, 7, 120.0),      # saturated: full solves + infeasible episodes
+])
+def test_soa_engine_bit_exact_with_object_engine(n_slaves, n_apps, seed,
+                                                 inter):
+    """The SoA engine is a pure optimization: allocation timelines, event
+    times, adjusted/started sets, durations and (to float tolerance; the
+    engines sum Eq-2 in different float orders) metric samples all match
+    the PR-2 dict-of-objects engine."""
+    cluster = heterogeneous_cluster(n_slaves, seed=1)
+    wl = generate_trace(TraceConfig(n_apps=n_apps, seed=seed,
+                                    mean_interarrival_s=inter))
+    res_s, al_s = _run_engine(True, cluster, wl)
+    res_l, al_l = _run_engine(False, cluster, wl)
+    assert len(al_s) == len(al_l)
+    for (ts, ids_s, x_s, adj_s, st_s), (tl, ids_l, x_l, adj_l, st_l) in zip(
+            al_s, al_l):
+        assert ts == tl
+        assert ids_s == ids_l
+        np.testing.assert_array_equal(x_s, x_l)
+        assert adj_s == adj_l
+        assert st_s == st_l
+    assert res_s.durations() == res_l.durations()
+    for sa, sb in zip(res_s.samples, res_l.samples):
+        assert sa.t == sb.t
+        assert sa.running == sb.running and sa.pending == sb.pending
+        assert sa.adjustment_overhead == sb.adjustment_overhead
+        assert sa.utilization == pytest.approx(sb.utilization, abs=1e-9)
+        assert sa.fairness_loss == pytest.approx(sb.fairness_loss, abs=1e-9)
+
+
+# --------------------------------------------- incremental runtime slot sync
+
+def test_master_reports_changed_counts_contract():
+    """`ReallocationResult.changed_counts` lists exactly the started +
+    adjusted apps with their new counts (the runtime's incremental
+    slot-sync contract); an infeasible event reports an empty dict."""
+    cluster = ClusterSpec.homogeneous(1, ResourceVector.of(4, 0, 16))
+    m = DormMaster(cluster, "greedy", OptimizerConfig(0.2, 0.2),
+                   protocol=RecordingProtocol())
+    res = m.submit(ApplicationSpec("a", "x", ResourceVector.of(2, 0, 8),
+                                   1, 4, 1))
+    assert set(res.changed_counts) == set(res.started_app_ids)
+    assert res.changed_counts["a"] == m.containers_of("a")
+    # infeasible arrival: nothing changed
+    res2 = m.submit(ApplicationSpec("b", "x", ResourceVector.of(4, 0, 16),
+                                    1, 1, 1))
+    assert "b" in res2.pending_app_ids
+    assert res2.changed_counts == {}
+    res3 = m.complete("a")
+    assert set(res3.changed_counts) == \
+        set(res3.started_app_ids) | set(res3.adjusted_app_ids)
+
+
+# -------------------------------------------------------- phase breakdown
+
+def test_phase_breakdown_and_telemetry_row():
+    from repro.core import MetricsLogger
+    m = DormMaster(_cluster(), "greedy", OptimizerConfig(0.2, 0.2),
+                   protocol=RecordingProtocol())
+    m.submit(_app(1))
+    m.submit(_app(2))
+    m.complete("app1")
+    phases = m.phase_breakdown()
+    assert set(phases) == {"drf_refill", "solve", "enforce", "metrics"}
+    assert all(v >= 0.0 for v in phases.values())
+    assert phases["solve"] + phases["drf_refill"] > 0.0
+    logger = MetricsLogger()
+    logger.log_phase_breakdown(phases, t=123.0, engine="soa")
+    row = logger.of_kind("phase")[0]
+    assert row["t"] == 123.0 and row["engine"] == "soa"
+    assert row["solve"] == phases["solve"]
+    assert "phase_breakdown" in logger.summary() or not logger.of_kind("sample")
