@@ -1,0 +1,92 @@
+"""Walkthrough: closing the loop from serving load to runtime `Resize`.
+
+The paper's headline capability is resizing partitions at APPLICATION
+RUNTIME (§III, Eqs 1-4): Dorm's adjustment protocol (save -> kill ->
+resume, Fig 5) makes a resize cheap, and the P2 optimizer keeps every
+reallocation inside the fairness (Eq 15) and churn (Eq 16) budgets. What
+the optimizer cannot know is WHEN a serving application needs a different
+size -- that signal lives in the application's own load. This example wires
+the whole loop:
+
+  1. `generate_trace(serve_lifetime=True)` emits a mixed train/serve
+     workload; every serve-class app carries a `ServingLoadProfile` -- a
+     deterministic diurnal QPS curve with burst windows -- and completes
+     after its serving LIFETIME (extra containers are capacity, not
+     speedup).
+  2. `AutoscalePolicy` wraps the DormMaster. On each runtime `Tick` it
+     samples every tracked app's `qps(t)`, runs target-tracking control
+     (setpoint utilization of the provisioned qps capacity, hysteresis
+     band, cooldown, sustained-low delay, step limits) and injects
+     `Resize(t, app, n_min, n_max)` through `ClusterRuntime.inject`.
+  3. The MASTER arbitrates: the resize triggers a normal optimizer pass,
+     so fairness and churn stay budgeted cluster-wide, and a request the
+     cluster cannot host is REJECTED (bounds revert) instead of wedging
+     future solves. Every decision is published on the bus as a
+     `ScaleDecision`; every applied resize shows up as a `Reallocated`
+     sample like any other event.
+  4. `SLOMonitor` subscribes to the bus and integrates the serving SLO
+     proxies: overload-seconds (time provisioned below load), scaling lag
+     (decision -> capacity catch-up), and Eq-4 churn attributed per
+     triggering event type.
+
+Run:  PYTHONPATH=src python examples/autoscale_serving.py
+"""
+from repro.core import (AutoscaleConfig, AutoscalePolicy, ClusterRuntime,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        ScaleDecision, SLOMonitor, TraceConfig,
+                        generate_trace, heterogeneous_cluster,
+                        signals_from_workload)
+
+
+def main() -> None:
+    # A 60-slave cluster, half serving: small enough to read the decision
+    # log, loaded enough that bursts force real arbitration.
+    cluster = heterogeneous_cluster(60, seed=1)
+    wl = generate_trace(TraceConfig(
+        n_apps=80, seed=7, mean_interarrival_s=300.0,
+        serving_fraction=0.5, serve_lifetime=True,
+        qps_mean_util=1.0, qps_burst_prob=0.5, qps_burst_mult=(2.0, 3.5)))
+    signals = signals_from_workload(wl)
+    print(f"{len(wl)} apps, {len(signals)} serving apps with QPS signals\n")
+
+    master = DormMaster(cluster, "greedy", OptimizerConfig(0.2, 0.2),
+                        protocol=RecordingProtocol())
+    acfg = AutoscaleConfig(setpoint=0.65, band=0.15, cooldown_s=600.0,
+                           scale_down_delay_s=1800.0, max_step=8)
+    policy = AutoscalePolicy(master, signals, acfg)
+    runtime = ClusterRuntime(policy, adjustment_cost_s=60.0,
+                             horizon_s=24 * 3600.0, tick_interval_s=300.0)
+    policy.attach(runtime)
+    monitor = SLOMonitor(signals, acfg).attach(runtime)
+
+    # Watch the control loop live: every ScaleDecision is a bus event.
+    log = []
+    runtime.bus.subscribe(ScaleDecision, log.append)
+
+    result = runtime.run(wl)
+
+    print("first scale decisions (bus `ScaleDecision` events):")
+    for d in log[:10]:
+        print(f"  t={d.t / 3600.0:5.2f}h {d.app_id:24s} {d.reason:10s} "
+              f"qps={d.qps:7.0f} util={d.utilization:5.2f} c={d.containers:3d}"
+              f"  [{d.n_min_old},{d.n_max_old}] -> "
+              f"[{d.n_min_new},{d.n_max_new}]")
+
+    done = sum(1 for r in result.completions.values()
+               if r.finished_at is not None)
+    slo = monitor.summary(result.horizon_s, policy.decisions)
+    print(f"\ncompleted {done}/{len(wl)} apps; "
+          f"{len(policy.decisions)} decisions "
+          f"({policy.decisions_by_reason()})")
+    print(f"time-averaged utilization: "
+          f"{result.time_averaged_utilization():.3f} (Eq 1)")
+    print(f"time-averaged fairness loss: "
+          f"{result.time_averaged_fairness_loss():.4f} (Eq 2)")
+    print(f"overload-seconds total: {slo['overload_seconds_total']:.0f}")
+    print(f"scaling lag (mean): {slo['scaling_lag_mean_s']:.0f}s "
+          f"({slo['scaleups_unresolved']} unresolved)")
+    print(f"Eq-4 churn by trigger: {slo['churn_by_trigger']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,14 +2,17 @@
 optimizer (Sun et al., SMARTCOMP 2017) -- the paper's core contribution."""
 from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
                          RecordingProtocol)
+from .autoscale import (AutoscaleConfig, AutoscalePolicy, LoadSignal,
+                        ReplayLoadSignal, SLOMonitor, signals_from_workload)
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
                   drf_container_counts_reference, drf_shares, fairness_loss,
                   saturating_counts)
 from .master import DormMaster
-from .metrics import (actual_shares, adjusted_apps, cluster_fairness_loss,
-                      container_churn, per_resource_utilization,
+from .metrics import (actual_shares, adjusted_apps, churn_attribution,
+                      cluster_fairness_loss, container_churn,
+                      overload_seconds, per_resource_utilization,
                       resource_adjustment_overhead, resource_utilization)
 from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
                         OptimizerConfig, adjust_budget, fairness_budget,
@@ -18,8 +21,8 @@ from .partition import Partition, TaskExecutor, TaskScheduler
 from .replay import REPLAY_CLASS_INDEX, ReplayConfig, replay_trace
 from .runtime import (AppRuntime, Arrival, ClusterRuntime, Completion, Event,
                       EventBus, MetricSample, PolicyTimer, Reallocated,
-                      ReallocationResult, Resize, SchedulerPolicy, SimResult,
-                      Tick, as_policy)
+                      ReallocationResult, Resize, ScaleDecision,
+                      SchedulerPolicy, SimResult, Tick, as_policy)
 from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
                         speedup_ratios)
 from .slave import Container, DormSlave
@@ -28,14 +31,18 @@ from .telemetry import MetricsLogger
 from .types import (Allocation, ApplicationSpec, ClusterSpec, ResourceVector,
                     SlaveSpec, demand_matrix, validate_allocation)
 from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
-                       SCALE_CLASSES, SLAVE_FLAVORS, TABLE_II, TraceConfig,
-                       WorkloadApp, generate_trace, generate_workload,
+                       SCALE_CLASSES, SLAVE_FLAVORS, TABLE_II,
+                       ServingLoadProfile, TraceConfig, WorkloadApp,
+                       generate_trace, generate_workload,
                        heterogeneous_cluster, paper_testbed,
                        sample_app_duration_s, sample_task_duration_s)
 
 __all__ = [
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
-    "RecordingProtocol", "MESOS_SCHED_LATENCY_S", "DRFScheduler",
+    "RecordingProtocol", "AutoscaleConfig", "AutoscalePolicy", "LoadSignal",
+    "ReplayLoadSignal", "SLOMonitor", "signals_from_workload",
+    "ScaleDecision", "ServingLoadProfile", "overload_seconds",
+    "churn_attribution", "MESOS_SCHED_LATENCY_S", "DRFScheduler",
     "StaticScheduler", "TaskLevelOverheadModel", "IncrementalDRF",
     "dominant_share", "drf_container_counts",
     "drf_container_counts_reference", "drf_shares", "fairness_loss",

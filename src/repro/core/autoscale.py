@@ -1,0 +1,504 @@
+"""Serving-workload autoscaling: load signals -> `Resize` events (§III Eq 1-4
+at application runtime).
+
+The paper's headline capability is resizing partitions while applications
+run, but until this module nothing CLOSED the loop from a serving app's load
+back into `Resize` events -- resizes only happened when a user injected one.
+This is the OASiS/Shockwave-style regime (PAPERS.md): admission and scaling
+decisions driven by observed load, with fairness arbitration left to the
+scheduler.
+
+Three pieces:
+
+* **Load signals** -- per-app QPS over time. `workload.generate_trace`
+  attaches a deterministic `ServingLoadProfile` (diurnal sinusoid + burst
+  windows) to every serve-class app; `ReplayLoadSignal` is the
+  replay-driven variant (piecewise-constant samples from a production QPS
+  log, CSV `t_s,qps`). Anything with a `.qps(t)` method works.
+
+* **`AutoscalePolicy`** -- a transparent `SchedulerPolicy` wrapper (same
+  pattern as `runtime.PolicyTimer`). On every runtime `Tick` it samples
+  each tracked app's signal, runs target-tracking control -- utilization
+  setpoint with a hysteresis band, per-app cooldown, sustained-low delay
+  before shrinking, and per-decision step limits -- and turns decisions
+  into `Resize(t, app_id, n_min, n_max)` events injected through
+  `ClusterRuntime.inject`. The autoscaler only moves BOUNDS: the DRF/MILP
+  optimizer still arbitrates contention, fairness (Eq 2/15) and adjustment
+  churn (Eq 4/16) across every app in the cluster. Each decision is also
+  published on the bus as a `runtime.ScaleDecision`.
+
+  Control law, per app with signal `q(t)`, `c` current containers and `P`
+  = qps_per_container: utilization u = q / (c * P); desired count
+  D = ceil(q / (P * setpoint)). Scale up when u > setpoint + band; scale
+  down when u < setpoint - band has been sustained for
+  `scale_down_delay_s`. The autoscaler moves the GUARANTEE: on scale-up
+  n_min = min(D, c + max_step, hard_max) with hard_max = ceil(original
+  n_max * hard_max_factor) -- the burst ceiling a peak-provisioned
+  deployment would have reserved statically; on scale-down the guarantee
+  is RELEASED toward D, paced from the current n_min (n_min' =
+  min(n_min, max(D, n_min - max_step, 1))) and never raised -- a
+  wide-open app (n_min already below D) keeps it. The CEILING n_max is
+  only
+  ever extended past the app's own request during a burst
+  (max(requested n_max, n_min + headroom)) and retired back to the
+  request on scale-down -- it is never cut below what the app asked for,
+  so idle capacity stays utilized (Eq 1) and actual shrinking happens
+  only when the optimizer takes the capacity for someone who needs it.
+  A Resize the optimizer cannot satisfy (infeasible P2) is REJECTED by
+  the master (bounds revert); the controller retries after its cooldown.
+
+* **`SLOMonitor`** -- an `EventBus` subscriber computing the SLO proxies:
+  per-app overload-seconds (time provisioned below load,
+  `metrics.overload_seconds`), scaling lag (decision -> allocation
+  catch-up), and churn attribution (Eq-4 adjustments split by triggering
+  event type, `metrics.churn_attribution`).
+
+Demo: examples/autoscale_serving.py.  Scale: benchmarks/bench_autoscale.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
+
+import numpy as np
+
+from .metrics import churn_attribution, overload_seconds
+from .runtime import (Completion, Reallocated, ReallocationResult, Resize,
+                      ScaleDecision, as_policy)
+from .types import ApplicationSpec
+from .workload import ServingLoadProfile, WorkloadApp
+
+__all__ = [
+    "LoadSignal", "ReplayLoadSignal", "AutoscaleConfig", "AutoscalePolicy",
+    "SLOMonitor", "signals_from_workload",
+]
+
+
+@runtime_checkable
+class LoadSignal(Protocol):
+    """Anything exposing queries-per-second at a wall-clock time."""
+
+    def qps(self, t: float) -> float: ...
+
+
+class ReplayLoadSignal:
+    """Replay-driven load signal: piecewise-constant QPS from (t, qps)
+    samples (e.g. a production metrics export). Sample k holds over
+    [t_k, t_{k+1}); 0 before the first sample and after `horizon_s` past
+    the last (the service is not up outside its observed window)."""
+
+    def __init__(self, times: Sequence[float], qps: Sequence[float],
+                 horizon_s: float = 0.0,
+                 qps_per_container: Optional[float] = None):
+        self.times = np.asarray(times, dtype=np.float64)
+        self.values = np.asarray(qps, dtype=np.float64)
+        if self.times.shape != self.values.shape or self.times.ndim != 1:
+            raise ValueError("times and qps must be equal-length 1-D")
+        if self.times.size and (np.diff(self.times) < 0).any():
+            raise ValueError("times must be ascending")
+        self.horizon_s = horizon_s
+        # None -> consumers fall back to AutoscaleConfig.qps_per_container.
+        self.qps_per_container = qps_per_container
+
+    @classmethod
+    def from_csv(cls, source, horizon_s: float = 0.0) -> "ReplayLoadSignal":
+        """Parse `t_s,qps` CSV text / lines / path (header required)."""
+        import csv
+        import io
+        import os
+        if isinstance(source, (str, os.PathLike)):
+            text = os.fspath(source)
+            if "\n" in text:
+                rows = [r for r in csv.reader(io.StringIO(text)) if r]
+            else:
+                with open(text, newline="") as fh:
+                    rows = [r for r in csv.reader(fh) if r]
+        else:
+            rows = [r for r in csv.reader(iter(source)) if r]
+        if not rows:
+            raise ValueError("replay signal: empty trace")
+        header = [c.strip().lower() for c in rows[0]]
+        if "t_s" not in header or "qps" not in header:
+            raise ValueError(f"replay signal needs t_s,qps columns; "
+                             f"got {header}")
+        ti, qi = header.index("t_s"), header.index("qps")
+        pairs = sorted((float(r[ti]), float(r[qi])) for r in rows[1:])
+        return cls([p[0] for p in pairs], [p[1] for p in pairs],
+                   horizon_s=horizon_s)
+
+    def window(self) -> Tuple[float, float]:
+        """[start, end] of the signal's support (SLO integrals use this):
+        first sample to last sample + the hold horizon."""
+        if not self.times.size:
+            return 0.0, 0.0
+        return float(self.times[0]), float(self.times[-1] + self.horizon_s)
+
+    def qps(self, t: float) -> float:
+        if not self.times.size or t < self.times[0]:
+            return 0.0
+        if t > self.times[-1] + self.horizon_s:
+            return 0.0
+        k = int(np.searchsorted(self.times, t, side="right")) - 1
+        return float(self.values[k])
+
+
+def signals_from_workload(workload: Sequence[WorkloadApp],
+                          ) -> Dict[str, ServingLoadProfile]:
+    """{app_id: load profile} for every app carrying a QPS trace."""
+    return {w.spec.app_id: w.load for w in workload if w.load is not None}
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Knobs of the target-tracking control loop."""
+    # Fallback qps capacity per container, used only when a signal does not
+    # carry its own `qps_per_container` (ServingLoadProfile always does --
+    # set on generation from TraceConfig, so the two stay calibrated).
+    qps_per_container: float = 100.0
+    setpoint: float = 0.65            # target utilization of provisioned qps
+    band: float = 0.15                # hysteresis: act outside setpoint+-band
+    cooldown_s: float = 300.0         # min seconds between actions per app
+    scale_down_delay_s: float = 1800.0  # sustained-low time before a shrink
+    max_step: int = 8                 # max container-count move per decision
+    headroom: int = 1                 # n_max = n_min + headroom
+    hard_max_factor: float = 2.0      # burst ceiling vs the app's spec n_max
+    # Forward Tick events to the wrapped policy too (True: the wrapper is
+    # transparent -- a DormMaster keeps its periodic rebalance cadence;
+    # False: ticks only drive the control loop).
+    forward_ticks: bool = True
+
+    def qps_capacity(self, signal: Any) -> float:
+        """Per-container qps capacity for `signal` (its own factor when it
+        carries one, this config's fallback otherwise)."""
+        per = getattr(signal, "qps_per_container", None)
+        return float(per) if per else self.qps_per_container
+
+
+class AutoscalePolicy:
+    """Transparent `SchedulerPolicy` wrapper running the control loop.
+
+    Wraps ANY policy (DormMaster, baselines, a PolicyTimer...). Call
+    `attach(runtime)` before `runtime.run` so decisions can be injected as
+    `Resize` events; without a runtime, decisions are applied by calling
+    the inner policy's `on_resize` directly from the tick (useful for
+    driving the policy without an event loop, e.g. in unit tests)."""
+
+    def __init__(self, policy: Any, signals: Mapping[str, LoadSignal],
+                 cfg: AutoscaleConfig = AutoscaleConfig()):
+        self.policy = as_policy(policy)
+        self.signals: Dict[str, LoadSignal] = dict(signals)
+        self.cfg = cfg
+        self.runtime = None
+        self.decisions: List[ScaleDecision] = []
+        self._specs: Dict[str, ApplicationSpec] = {}   # tracked bounds
+        self._ceiling0: Dict[str, int] = {}            # app's requested n_max
+        self._hard_max: Dict[str, int] = {}
+        self._own: Dict[str, Tuple[int, int]] = {}     # in-flight decisions
+        self._last_action: Dict[str, float] = {}
+        self._low_since: Dict[str, float] = {}
+
+    def attach(self, runtime) -> "AutoscalePolicy":
+        """Bind to the `ClusterRuntime` that will drive this policy."""
+        self.runtime = runtime
+        return self
+
+    # ------------------------------------------- SchedulerPolicy interface
+
+    def on_arrival(self, specs: Sequence[ApplicationSpec],
+                   ) -> ReallocationResult:
+        for spec in specs:
+            if spec.app_id in self.signals:
+                self._specs[spec.app_id] = spec
+                self._ceiling0[spec.app_id] = spec.n_max
+                self._hard_max[spec.app_id] = max(
+                    spec.n_max,
+                    int(math.ceil(spec.n_max * self.cfg.hard_max_factor)))
+        return self.policy.on_arrival(specs)
+
+    def on_completion(self, app_id: str) -> ReallocationResult:
+        self._specs.pop(app_id, None)
+        self._ceiling0.pop(app_id, None)
+        self._hard_max.pop(app_id, None)
+        self._last_action.pop(app_id, None)
+        self._low_since.pop(app_id, None)
+        self._own.pop(app_id, None)
+        return self.policy.on_completion(app_id)
+
+    def on_resize(self, app_id: str, n_min: Optional[int] = None,
+                  n_max: Optional[int] = None,
+                  ) -> Optional[ReallocationResult]:
+        # Track bound changes (our own injected decisions come back through
+        # here, and so do external resizes) with the spec's own clamping
+        # arithmetic, so the tracker never drifts from the master's view.
+        # A None result means the policy declined (no-op or rejected as
+        # infeasible): keep the old tracking, so the next tick retries
+        # instead of believing bounds the master reverted.
+        spec = self._specs.get(app_id)
+        own = self._own.get(app_id) == (n_min, n_max)
+        if own:
+            del self._own[app_id]
+        res = self.policy.on_resize(app_id, n_min, n_max)
+        if spec is not None and res is not None:
+            new = spec.with_bounds(n_min=n_min, n_max=n_max)
+            self._specs[app_id] = new
+            if not own:
+                # An EXTERNAL resize resets the reference ceiling: the
+                # user's explicit n_max is the new request the controller
+                # must never cut below (and the burst ceiling scales with
+                # it).
+                self._ceiling0[app_id] = new.n_max
+                self._hard_max[app_id] = max(
+                    new.n_max,
+                    int(math.ceil(new.n_max * self.cfg.hard_max_factor)))
+        return res
+
+    def on_tick(self, t: float) -> Optional[ReallocationResult]:
+        direct = self._control(t)
+        if not self.cfg.forward_ticks:
+            return direct
+        tick_res = self.policy.on_tick(t)
+        if direct is None or tick_res is None:
+            return tick_res if direct is None else direct
+        # Runtime-less mode with forwarding: neither the control loop's
+        # applied resizes nor the inner rebalance may be dropped.
+        return self._merge([direct, tick_res])
+
+    def containers_of(self, app_id: str) -> int:
+        return self.policy.containers_of(app_id)
+
+    def __getattr__(self, name):
+        return getattr(self.policy, name)
+
+    # --------------------------------------------------------- control loop
+
+    def _control(self, t: float) -> Optional[ReallocationResult]:
+        cfg = self.cfg
+        results: List[ReallocationResult] = []
+        for app_id, spec in list(self._specs.items()):
+            sig = self.signals[app_id]
+            c = self.policy.containers_of(app_id)
+            if c <= 0:
+                # Admitted but not placed: the optimizer decides first
+                # placement; the autoscaler has no utilization to track.
+                continue
+            q = sig.qps(t)
+            per = cfg.qps_capacity(sig)
+            util = q / (c * per)
+            if util < cfg.setpoint - cfg.band:
+                self._low_since.setdefault(app_id, t)
+            else:
+                self._low_since.pop(app_id, None)
+            last = self._last_action.get(app_id)
+            if last is not None and t - last < cfg.cooldown_s:
+                continue
+            desired = max(1, int(math.ceil(q / (per * cfg.setpoint))))
+            hard_max = self._hard_max[app_id]
+            ceiling0 = self._ceiling0[app_id]
+            if util > cfg.setpoint + cfg.band:
+                reason = "scale-up"
+                want = min(desired, c + cfg.max_step, hard_max)
+                if want <= c:
+                    continue          # already at the ceiling / step-bound
+                # Raise the guarantee to the target and EXTEND the ceiling
+                # past the app's requested n_max when the burst needs it
+                # (never cut an extension while scaling up).
+                lo = want
+                hi = min(hard_max, max(spec.n_max, want + cfg.headroom))
+            elif (app_id in self._low_since
+                  and t - self._low_since[app_id] >= cfg.scale_down_delay_s):
+                reason = "scale-down"
+                # RELEASE the guarantee toward the target, paced by
+                # max_step, never raising it; retire any burst-time
+                # ceiling extension but NEVER cut the ceiling below the
+                # app's own requested n_max OR below the current count
+                # (forcing an immediate trim is the optimizer's call, not
+                # the controller's; as contention pulls the count down,
+                # later decisions retire the ceiling after it) -- idle
+                # capacity stays utilized (Eq 1). This also relaxes,
+                # stepwise, a minimum the cluster failed to honor (count
+                # pinned below a too-ambitious n_min would otherwise
+                # reject every future solve involving it).
+                lo = min(spec.n_min,
+                         max(desired, spec.n_min - cfg.max_step, 1))
+                hi = max(ceiling0,
+                         min(spec.n_max, max(lo + cfg.headroom, c)))
+            else:
+                continue
+            new = spec.with_bounds(n_min=lo, n_max=hi)
+            if (new.n_min, new.n_max) == (spec.n_min, spec.n_max):
+                continue
+            decision = ScaleDecision(
+                t=t, app_id=app_id, qps=q, utilization=util, containers=c,
+                n_min_old=spec.n_min, n_max_old=spec.n_max,
+                n_min_new=new.n_min, n_max_new=new.n_max, reason=reason)
+            self.decisions.append(decision)
+            self._last_action[app_id] = t
+            self._low_since.pop(app_id, None)
+            self._own[app_id] = (new.n_min, new.n_max)
+            if self.runtime is not None:
+                self.runtime.bus.publish(decision)
+                # The optimizer -- not the autoscaler -- arbitrates the
+                # actual counts: the Resize flows through the normal event
+                # loop (and its own Reallocated sample).
+                self.runtime.inject(
+                    Resize(t, app_id, new.n_min, new.n_max))
+            else:
+                res = self.on_resize(app_id, new.n_min, new.n_max)
+                if res is not None:
+                    results.append(res)
+        if not results:
+            return None
+        return self._merge(results)
+
+    @staticmethod
+    def _merge(results: List[ReallocationResult]) -> ReallocationResult:
+        """Fold several direct on_resize results into one (runtime-less
+        mode only): last allocation/metrics win, adjusted/started/changed
+        sets accumulate so no slot update or pause is lost."""
+        last = results[-1]
+        if len(results) == 1:
+            return last
+        adjusted: Dict[str, None] = {}
+        started: Dict[str, None] = {}
+        changed: Optional[Dict[str, int]] = {}
+        for r in results:
+            adjusted.update(dict.fromkeys(r.adjusted_app_ids))
+            started.update(dict.fromkeys(r.started_app_ids))
+            if changed is not None:
+                if r.changed_counts is None:
+                    changed = None       # one full rebuild poisons the merge
+                else:
+                    changed.update(r.changed_counts)
+        return dataclasses.replace(
+            last,
+            adjusted_app_ids=tuple(adjusted),
+            started_app_ids=tuple(started),
+            changed_counts=changed)
+
+    # ------------------------------------------------------------ readouts
+
+    def decisions_by_reason(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.decisions:
+            out[d.reason] = out.get(d.reason, 0) + 1
+        return out
+
+
+class SLOMonitor:
+    """Bus subscriber tracking per-app provisioned capacity vs load.
+
+    Subscribes to `Reallocated` (container-count transitions, via the
+    incremental `changed_counts` contract when available) and `Completion`
+    (supply drops to zero). `summary()` integrates the SLO proxies."""
+
+    def __init__(self, signals: Mapping[str, LoadSignal],
+                 cfg: AutoscaleConfig = AutoscaleConfig(),
+                 sample_dt_s: float = 60.0):
+        self.signals = dict(signals)
+        self.cfg = cfg
+        self.sample_dt_s = sample_dt_s
+        self.timelines: Dict[str, List[Tuple[float, int]]] = {
+            a: [] for a in self.signals}
+        self._counts: Dict[str, int] = {}
+        self._finished: Dict[str, float] = {}
+        self.reallocated: List[Reallocated] = []
+
+    def attach(self, runtime) -> "SLOMonitor":
+        runtime.bus.subscribe(Reallocated, self._on_realloc)
+        runtime.bus.subscribe(Completion, self._on_completion)
+        return self
+
+    # ------------------------------------------------------------- tracking
+
+    def _on_realloc(self, ev: Reallocated) -> None:
+        self.reallocated.append(ev)
+        res = ev.result
+        if res.changed_counts is not None:
+            items = list(res.changed_counts.items())
+        else:
+            counts = res.allocation.x.sum(axis=1)
+            items = [(a, int(counts[i]))
+                     for i, a in enumerate(res.allocation.app_ids)]
+            # Apps dropped from the allocation entirely supply zero.
+            listed = set(res.allocation.app_ids)
+            items += [(a, 0) for a, c in self._counts.items()
+                      if c and a not in listed]
+        for app_id, c in items:
+            if app_id in self.timelines and self._counts.get(app_id, 0) != c:
+                self._counts[app_id] = c
+                self.timelines[app_id].append((ev.t, int(c)))
+
+    def _on_completion(self, ev: Completion) -> None:
+        if ev.app_id in self.timelines:
+            self._finished[ev.app_id] = ev.t
+            if self._counts.get(ev.app_id, 0):
+                self._counts[ev.app_id] = 0
+                self.timelines[ev.app_id].append((ev.t, 0))
+
+    # ------------------------------------------------------------- readouts
+
+    def supply_at(self, app_id: str, ts: np.ndarray) -> np.ndarray:
+        """Provisioned qps capacity (containers * the signal's per-container
+        capacity) at the sample times, from the recorded step timeline."""
+        tl = self.timelines.get(app_id, [])
+        if not tl:
+            return np.zeros(len(ts))
+        tt = np.fromiter((p[0] for p in tl), np.float64, len(tl))
+        cc = np.fromiter((p[1] for p in tl), np.float64, len(tl))
+        idx = np.searchsorted(tt, ts, side="right") - 1
+        out = np.where(idx >= 0, cc[np.maximum(idx, 0)], 0.0)
+        return out * self.cfg.qps_capacity(self.signals.get(app_id))
+
+    def overload_seconds_of(self, app_id: str, t_end: float) -> float:
+        """Time the app was provisioned below its load, integrated over its
+        LIFE: submission to completion (a finished service owes nothing to
+        load its signal shows afterwards), capped by the signal's own
+        support window (`sig.window()` when it has one -- the profile and
+        replay signals define it; anything else integrates to t_end)."""
+        sig = self.signals[app_id]
+        window = getattr(sig, "window", None)
+        t0, sig_end = window() if callable(window) else (0.0, t_end)
+        hi = min(sig_end, t_end, self._finished.get(app_id, t_end))
+        if hi <= t0:
+            return 0.0
+        ts = np.arange(t0, hi, self.sample_dt_s)
+        ts = np.concatenate([ts, [hi]])
+        demand = np.fromiter((sig.qps(float(t)) for t in ts),
+                             np.float64, len(ts))
+        return overload_seconds(ts, self.supply_at(app_id, ts), demand)
+
+    def scaling_lag_s(self, decisions: Sequence[ScaleDecision],
+                      t_end: float) -> Tuple[float, int]:
+        """(mean lag over resolved scale-ups, count of unresolved ones).
+        Lag = decision time -> first allocation with count >= the decided
+        n_min (the load-crossing-to-capacity-catch-up latency)."""
+        lags: List[float] = []
+        unresolved = 0
+        for d in decisions:
+            if d.reason != "scale-up":
+                continue
+            tl = self.timelines.get(d.app_id, [])
+            hit = next((t for t, c in tl
+                        if t >= d.t and c >= d.n_min_new), None)
+            if hit is None:
+                unresolved += 1
+            else:
+                lags.append(hit - d.t)
+        return (float(np.mean(lags)) if lags else 0.0), unresolved
+
+    def summary(self, t_end: float,
+                decisions: Sequence[ScaleDecision] = (),
+                ) -> Dict[str, Any]:
+        per_app = {a: self.overload_seconds_of(a, t_end)
+                   for a in self.signals}
+        lag, unresolved = self.scaling_lag_s(decisions, t_end)
+        return {
+            "overload_seconds_total": float(sum(per_app.values())),
+            "overload_seconds_mean": (float(np.mean(list(per_app.values())))
+                                      if per_app else 0.0),
+            "scaling_lag_mean_s": lag,
+            "scaleups_unresolved": unresolved,
+            "churn_by_trigger": churn_attribution(self.reallocated),
+        }

@@ -99,15 +99,41 @@ class DormMaster:
                   ) -> Optional[ReallocationResult]:
         """External elasticity-bound change (runtime `Resize` event): update
         the app's [n_min, n_max] and let the optimizer re-size its partition
-        through the usual checkpoint-based adjustment protocol."""
+        through the usual checkpoint-based adjustment protocol.
+
+        No-op resizes (bounds unchanged after `with_bounds` clamping) return
+        None WITHOUT solving: an autoscaler re-asserting the current bounds
+        every tick must not cost a reallocation pass per app per tick.
+
+        A TIGHTENING resize that makes P2 infeasible is REJECTED: the
+        bounds revert and None is returned. The paper's keep-allocations
+        fallback is the right response to an arrival the cluster cannot
+        place yet -- but a load-driven scaling request that sticks as an
+        unsatisfiable floor (a raised n_min), or an n_max cut below the
+        current count that the Eq-16 budget can never enforce, would wedge
+        every future solve until the app finishes. Admission control for
+        those (OASiS-style): the requester may retry later. A resize that
+        only RELAXES the bounds cannot have caused the infeasibility, so
+        it keeps the normal fallback -- critically, a step-paced guarantee
+        release must still walk n_min down while the cluster is infeasible
+        for unrelated reasons, or the release would livelock."""
         spec = self.specs.get(app_id)
         if spec is None:
             return None
-        spec = spec.with_bounds(n_min=n_min, n_max=n_max)
-        self.specs[app_id] = spec
+        new = spec.with_bounds(n_min=n_min, n_max=n_max)
+        if new.n_min == spec.n_min and new.n_max == spec.n_max:
+            return None
+        tightening = (new.n_min > spec.n_min
+                      or new.n_max < self.containers_of(app_id))
+        self.specs[app_id] = new
         if self.state is not None:
-            self.state.update_spec(spec)
-        return self.reallocate()
+            self.state.rebound(new)       # fast path: no re-admission
+        res = self.reallocate(reject_infeasible=tightening)
+        if res is None:
+            self.specs[app_id] = spec
+            if self.state is not None:
+                self.state.rebound(spec)
+        return res
 
     def on_tick(self, t: float) -> Optional[ReallocationResult]:
         """Periodic rebalance (runtime `Tick` event)."""
@@ -190,14 +216,21 @@ class DormMaster:
 
     # --------------------------------------------------------- reallocation
 
-    def reallocate(self) -> ReallocationResult:
-        """Invoke the optimizer over all admitted apps and enforce the result."""
+    def reallocate(self, reject_infeasible: bool = False,
+                   ) -> Optional[ReallocationResult]:
+        """Invoke the optimizer over all admitted apps and enforce the result.
+
+        `reject_infeasible`: return None instead of the keep-allocations
+        result when the solve is infeasible (the resize path reverts the
+        triggering bound change in that case)."""
         apps = list(self.specs.values())
         t0 = _time.perf_counter()
         alloc = self.optimizer.solve(apps, self.cluster, self.prev_alloc,
                                      state=self.state)
         self.phase_s["solve"] += _time.perf_counter() - t0
         if alloc is None:
+            if reject_infeasible:
+                return None
             # Infeasible: keep existing allocations; newly admitted apps wait.
             return self._result(self._current_allocation(), (), (),
                                 tuple(self.pending), counts_changed={})

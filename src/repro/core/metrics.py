@@ -1,4 +1,6 @@
-"""Cluster metrics -- literal implementations of the paper's Eqs 1-4."""
+"""Cluster metrics -- literal implementations of the paper's Eqs 1-4, plus
+serving-SLO proxies (overload time, churn attribution) for the autoscaling
+scenario class."""
 from __future__ import annotations
 
 from typing import Dict, Optional, Sequence
@@ -107,6 +109,36 @@ def adjusted_apps(prev: Optional[Allocation], new: Allocation) -> Dict[str, int]
 def resource_adjustment_overhead(prev: Optional[Allocation], new: Allocation) -> int:
     """ResourceAdjustmentOverhead(t) = sum_{i in A^t ∩ A^{t-1}} r_i   (Eq 4)."""
     return int(sum(adjusted_apps(prev, new).values()))
+
+
+def overload_seconds(t: np.ndarray, supply: np.ndarray, demand: np.ndarray,
+                     ) -> float:
+    """Seconds during which demand exceeds supply, over a sampled timeline.
+
+    `t` (ascending), `supply` and `demand` are aligned samples; sample k is
+    held over [t_k, t_{k+1}) (left step function, matching how the runtime
+    holds an allocation until the next event). The serving SLO proxy: with
+    supply = containers * qps_per_container and demand = the app's QPS
+    trace, this is the time the app was provisioned below its load."""
+    t = np.asarray(t, dtype=np.float64)
+    if t.shape[0] < 2:
+        return 0.0
+    dt = np.diff(t)
+    over = np.asarray(demand, np.float64)[:-1] \
+        > np.asarray(supply, np.float64)[:-1] + 1e-9
+    return float(dt[over].sum())
+
+
+def churn_attribution(reallocated_events: Sequence) -> Dict[str, int]:
+    """Split total Eq-4 churn by WHAT triggered it: {event type name:
+    adjusted-app count} over a stream of `runtime.Reallocated` events.
+    Attributes an autoscaling run's adjustment overhead to Resize events
+    (the autoscaler's doing) vs Arrival/Completion/Tick reallocations."""
+    out: Dict[str, int] = {}
+    for ev in reallocated_events:
+        kind = type(ev.event).__name__
+        out[kind] = out.get(kind, 0) + len(ev.result.adjusted_app_ids)
+    return out
 
 
 def container_churn(prev: Optional[Allocation], new: Allocation) -> int:

@@ -29,6 +29,7 @@ this runtime).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time as _time
 from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
                     Tuple, Union, runtime_checkable)
@@ -84,6 +85,25 @@ class Reallocated:
     t: float
     event: "Event"
     result: "ReallocationResult"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleDecision:
+    """Published by an autoscaler (`autoscale.AutoscalePolicy`) when its
+    target-tracking control re-bounds a serving app: the observed load, the
+    provisioned-capacity utilization it implies, and the [n_min, n_max]
+    move. The matching `Resize` is injected separately, so the optimizer --
+    not the autoscaler -- still arbitrates the actual container counts."""
+    t: float
+    app_id: str
+    qps: float
+    utilization: float               # qps / (containers * qps_per_container)
+    containers: int
+    n_min_old: int
+    n_max_old: int
+    n_min_new: int
+    n_max_new: int
+    reason: str                      # "scale-up" | "scale-down"
 
 
 Event = Union[Arrival, Completion, Resize, Tick]
@@ -293,22 +313,41 @@ class SimResult:
     total_adjustments: int
     horizon_s: float
 
-    def time_averaged_utilization(self, t_max: Optional[float] = None) -> float:
-        """Time-weighted mean of Eq-1 utilization over [0, t_max].
-
-        Vectorized step-function integral: interval k carries the
-        utilization of sample k-1 (0 before the first sample), clipped
-        to [0, t_end]."""
+    def _time_averaged(self, values: np.ndarray,
+                       t_max: Optional[float]) -> float:
+        """Time-weighted mean of a per-sample step function over [0, t_end]:
+        interval k carries sample k-1's value (0 before the first sample),
+        clipped to [0, t_end]."""
         if not self.samples:
             return 0.0
         t_end = t_max if t_max is not None else self.horizon_s
         ns = len(self.samples)
         st = np.fromiter((s.t for s in self.samples), np.float64, ns)
-        su = np.fromiter((s.utilization for s in self.samples), np.float64, ns)
         edges = np.concatenate(([0.0], np.minimum(st, t_end), [t_end]))
-        u = np.concatenate(([0.0], su))
+        u = np.concatenate(([0.0], values))
         total = float((u * np.maximum(0.0, np.diff(edges))).sum())
         return total / max(t_end, _EPS)
+
+    def time_averaged_utilization(self, t_max: Optional[float] = None) -> float:
+        """Time-weighted mean of Eq-1 utilization over [0, t_max]."""
+        ns = len(self.samples)
+        return self._time_averaged(
+            np.fromiter((s.utilization for s in self.samples),
+                        np.float64, ns), t_max)
+
+    def time_averaged_fairness_loss(self,
+                                    t_max: Optional[float] = None) -> float:
+        """Time-weighted mean of Eq-2 fairness loss over [0, t_max].
+
+        The event-weighted `mean_fairness_loss` over-counts runs that
+        SAMPLE more often inside contention windows (e.g. autoscalers
+        injecting Resize events exactly when load spikes); this weights
+        each sample by how long its allocation was actually in force, so
+        two runs of the same scenario are comparable."""
+        ns = len(self.samples)
+        return self._time_averaged(
+            np.fromiter((s.fairness_loss for s in self.samples),
+                        np.float64, ns), t_max)
 
     def max_fairness_loss(self) -> float:
         return max((s.fairness_loss for s in self.samples), default=0.0)
@@ -375,23 +414,32 @@ class ClusterRuntime:
         self.batch_window_s = batch_window_s
         self.tick_interval_s = tick_interval_s
         self.bus = bus if bus is not None else EventBus()
-        self._injected: List[Event] = []
+        # (t, seq, event) min-heap: popping by (t, seq) reproduces the old
+        # stable sort-by-t order for pre-run injections, and accepts LIVE
+        # injections while `run` is in flight (an autoscaler reacting to a
+        # Tick injects Resize events for the same instant).
+        self._inj_heap: List[Tuple[float, int, Event]] = []
+        self._inj_seq = 0
         self.runtimes: Dict[str, AppRuntime] = {}
         self.samples: List[MetricSample] = []
         self.total_adjustments = 0
 
     def inject(self, *events: Event) -> None:
-        """Queue external events (typically `Resize`) for the next run."""
-        self._injected.extend(events)
+        """Queue external events (typically `Resize`). Callable before
+        `run` and from WITHIN a running simulation (policy hooks / bus
+        subscribers): a mid-run event timestamped at or before the current
+        simulation time fires before time advances further."""
+        for e in events:
+            heapq.heappush(self._inj_heap, (e.t, self._inj_seq, e))
+            self._inj_seq += 1
 
     # ------------------------------------------------------------------ run
 
     def run(self, workload: Sequence[WorkloadApp]) -> SimResult:
         arrivals = sorted(workload, key=lambda w: w.spec.submit_time)
-        injected = sorted(self._injected, key=lambda e: e.t)
+        inj_heap = self._inj_heap
         n_total = len(arrivals)
         ai = 0
-        ei = 0
         t = 0.0
         tick_dt = self.tick_interval_s
         next_tick = tick_dt if tick_dt > 0 else np.inf
@@ -401,11 +449,21 @@ class ClusterRuntime:
         cont = np.zeros(n_total, dtype=np.int64)
         paused = np.zeros(n_total)
         active = np.zeros(n_total, dtype=bool)
+        svc = np.zeros(n_total, dtype=bool)      # service-lifetime apps
         slot_ids: List[Optional[str]] = [None] * n_total
         slot_of: Dict[str, int] = {}
         next_slot = 0
         rate_mult = self.rate_multiplier
         use_batch = self.batch_window_s > 0
+
+        def rates() -> np.ndarray:
+            """Per-slot progress rate. Batch jobs burn container-seconds
+            (linear data-parallel scaling); SERVICE apps burn wall-clock
+            seconds of being up -- rate 1 while any container is placed,
+            regardless of count (extra containers are serving capacity,
+            not speedup)."""
+            return np.where(svc, (cont > 0).astype(np.float64),
+                            cont * rate_mult)
 
         def advance(t0: float, t1: float) -> None:
             """Integrate progress over [t0, t1] (rates are piecewise-
@@ -414,13 +472,13 @@ class ClusterRuntime:
                 return
             lo = np.maximum(t0, np.minimum(paused, t1))
             dt = t1 - lo
-            np.copyto(rem, np.maximum(0.0, rem - dt * cont * rate_mult),
+            np.copyto(rem, np.maximum(0.0, rem - dt * rates()),
                       where=active)
 
         def next_completion() -> Tuple[float, Optional[int]]:
             if n_total == 0:
                 return np.inf, None
-            rate = cont * rate_mult
+            rate = rates()
             with np.errstate(divide="ignore", invalid="ignore"):
                 tf = np.where(active & (rate > 0),
                               np.maximum(t, paused) + rem / rate, np.inf)
@@ -465,12 +523,14 @@ class ClusterRuntime:
             nonlocal next_slot
             s = next_slot
             next_slot += 1
-            rt = AppRuntime(app=w, remaining_work=w.spec.serial_work,
-                            submitted_at=at)
+            is_svc = w.spec.service_s > 0
+            budget = w.spec.service_s if is_svc else w.spec.serial_work
+            rt = AppRuntime(app=w, remaining_work=budget, submitted_at=at)
             self.runtimes[w.spec.app_id] = rt
             slot_ids[s] = w.spec.app_id
             slot_of[w.spec.app_id] = s
-            rem[s] = w.spec.serial_work
+            svc[s] = is_svc
+            rem[s] = budget
             cont[s] = 0
             paused[s] = 0.0
             active[s] = True
@@ -486,7 +546,9 @@ class ClusterRuntime:
         while True:
             t_arr = (arrivals[ai].spec.submit_time
                      if ai < n_total else np.inf)
-            t_inj = injected[ei].t if ei < len(injected) else np.inf
+            # A live injection stamped in the past fires "now": simulation
+            # time never moves backwards.
+            t_inj = max(inj_heap[0][0], t) if inj_heap else np.inf
             t_ext = min(t_inj, next_tick)
             t_fin, fin_slot = next_completion()
             t_next = min(t_arr, t_fin, t_ext)
@@ -510,8 +572,7 @@ class ClusterRuntime:
                        self.policy.on_completion(app_id))
             elif t_ext <= t_arr:
                 if t_inj <= next_tick:
-                    ev = injected[ei]
-                    ei += 1
+                    ev = heapq.heappop(inj_heap)[2]
                     res = None
                     if isinstance(ev, Resize):
                         s = slot_of.get(ev.app_id)

@@ -139,6 +139,14 @@ class ClusterState:
         if not np.array_equal(spec.demand.as_array(), self.demand[i]):
             raise ValueError(
                 f"{spec.app_id}: demand changes require re-admission")
+        self.rebound(spec)
+
+    def rebound(self, spec: ApplicationSpec) -> None:
+        """Bound/weight mutation WITHOUT the demand compare -- the
+        autoscaler's per-tick fast path (its specs come from
+        `with_bounds`, which cannot change demand). No re-admission: the
+        app keeps its row, placement and materialized coefficients."""
+        i = self.row_of[spec.app_id]
         self.nmax_demand += (spec.n_max - self.n_max[i]) * self.demand[i]
         self.n_min[i] = spec.n_min
         self.n_max[i] = spec.n_max

@@ -35,7 +35,8 @@ class MetricsLogger:
         kind="event" row (the samples already flow in via the runtime's
         `logger=` hook; this adds the event stream itself -- arrivals with
         app ids, completions, resizes, ticks)."""
-        from .runtime import Arrival, Completion, Reallocated, Resize, Tick
+        from .runtime import (Arrival, Completion, Reallocated, Resize,
+                              ScaleDecision, Tick)
 
         bus.subscribe(Arrival, lambda e: self.log(
             "event", event="arrival", t=e.t,
@@ -51,6 +52,10 @@ class MetricsLogger:
             "event", event="reallocated", t=e.t,
             adjusted=list(e.result.adjusted_app_ids),
             started=list(e.result.started_app_ids)))
+        bus.subscribe(ScaleDecision, lambda e: self.log(
+            "event", event="scale_decision", t=e.t, app=e.app_id,
+            reason=e.reason, qps=e.qps, utilization=e.utilization,
+            n_min=e.n_min_new, n_max=e.n_max_new))
 
     def log_phase_breakdown(self, breakdown: Dict[str, float],
                             t: Optional[float] = None, **extra: Any) -> None:

@@ -79,6 +79,11 @@ class ApplicationSpec:
     model: str = ""                   # e.g. "VGG-16"; or an assigned arch id
     serial_work: float = 0.0          # total work units; duration = work / n_containers
     submit_time: float = 0.0
+    # Serving lifetime: when > 0 the app is a SERVICE -- it completes after
+    # this many seconds of being up (containers > 0), independent of its
+    # container count (extra containers add serving capacity, they do not
+    # finish the app sooner). 0 = work-based batch job (the default).
+    service_s: float = 0.0
 
     def __post_init__(self):
         if self.n_min < 1 or self.n_max < self.n_min:

@@ -21,7 +21,8 @@ benchmarks/bench_scale.py and examples/large_cluster.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+import math
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,10 +77,61 @@ def sample_task_duration_s(rng: np.random.Generator, size: int = 1) -> np.ndarra
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingLoadProfile:
+    """Deterministic QPS trace for one serving application.
+
+    The load a serving app must answer at wall-clock time `t`:
+    a diurnal sinusoid around `base_qps` (same non-homogeneous shape the
+    arrival process uses) times the multiplier of any burst window covering
+    `t` (a traffic spike). Zero outside [t0, t0 + horizon_s] -- the app is
+    not serving before it is submitted or after its trace window ends.
+    Consumed by `repro.core.autoscale`: the autoscaler samples `qps(t)` on
+    runtime Ticks and converts it into `Resize` bound changes."""
+
+    base_qps: float
+    amplitude: float                 # diurnal swing, in [0, 1)
+    period_s: float
+    phase: float                     # radians offset into the sinusoid
+    t0: float                        # signal start (the app's submit time)
+    horizon_s: float                 # signal length from t0
+    # (start, end, multiplier) burst windows, absolute times; generation
+    # clamps end <= t0 + horizon_s (a burst drawn at the end of the window
+    # must not extend the signal past its own horizon).
+    bursts: Tuple[Tuple[float, float, float], ...] = ()
+    # One container answers this many qps -- carried ON the signal so the
+    # autoscaler/SLO consumers stay calibrated with the generator
+    # (TraceConfig.qps_per_container) without a side-channel knob.
+    qps_per_container: float = 100.0
+
+    def qps(self, t: float) -> float:
+        if t < self.t0 or t > self.t0 + self.horizon_s:
+            return 0.0
+        v = self.base_qps * (1.0 + self.amplitude * math.sin(
+            2.0 * math.pi * (t - self.t0) / self.period_s + self.phase))
+        for start, end, mult in self.bursts:
+            if start <= t < end:
+                v *= mult
+                break
+        return max(v, 0.0)
+
+    def window(self) -> Tuple[float, float]:
+        """[start, end] of the signal's support (SLO integrals use this)."""
+        return self.t0, self.t0 + self.horizon_s
+
+    def peak_qps(self) -> float:
+        """Upper bound of the trace (diurnal crest times the largest burst
+        multiplier) -- what a peak-provisioned static deployment sizes for."""
+        peak = self.base_qps * (1.0 + self.amplitude)
+        mult = max((b[2] for b in self.bursts), default=1.0)
+        return peak * max(mult, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadApp:
     spec: ApplicationSpec
     class_index: int            # row of TABLE_II
     base_duration_s: float      # duration at 1 container (serial)
+    load: Optional[ServingLoadProfile] = None   # serve-class QPS trace
 
 
 def generate_workload(seed: int = 0,
@@ -180,6 +232,27 @@ class TraceConfig:
     burst_size: Tuple[int, int] = (3, 10)     # inclusive burst-size range
     train_duration_s: Tuple[float, float] = (1800.0, 6 * 3600.0)
     serve_duration_s: Tuple[float, float] = (600.0, 2 * 3600.0)
+    # Trace horizon: when set, no app may be submitted past this time --
+    # arrivals (and every member of a burst, whose jittered submit times can
+    # otherwise spill over) are clamped to it.
+    duration_s: Optional[float] = None
+    # A burst's members arrive within this window after the burst instant
+    # (0 = all at the same timestamp, the historical behaviour that
+    # exercises event batching).
+    burst_spread_s: float = 0.0
+    # Serve-class jobs as true SERVICES (ApplicationSpec.service_s): they
+    # complete after their sampled duration of being UP, independent of
+    # container count -- extra containers are serving capacity, not
+    # speedup. Off by default: the historical work-based traces (and every
+    # timeline pinned on them) are unchanged.
+    serve_lifetime: bool = False
+    # -- per-app QPS load-signal knobs (serve classes only) ---------------
+    qps_traces: bool = True                   # attach ServingLoadProfiles
+    qps_per_container: float = 100.0          # one container answers this
+    qps_mean_util: float = 0.65               # mean load vs anchor capacity
+    qps_burst_prob: float = 0.3               # per burst-slot draw (2 slots)
+    qps_burst_mult: Tuple[float, float] = (1.8, 3.5)
+    qps_burst_len_s: Tuple[float, float] = (600.0, 2400.0)
 
 
 def heterogeneous_cluster(n_slaves: int = 1000, seed: int = 0,
@@ -219,12 +292,52 @@ def _diurnal_arrival_times(rng: np.random.Generator, n: int,
     return out
 
 
+def _serving_load_profile(cfg: TraceConfig, slot: int, anchor: int,
+                          submit_time: float, dur: float,
+                          ) -> ServingLoadProfile:
+    """Per-app QPS trace for a serve-class job: diurnal sinusoid anchored so
+    mean load occupies `qps_mean_util` of the job's anchor-count capacity,
+    plus 0-2 burst windows. Drawn from a PER-APP generator (seeded on
+    (trace seed, slot)) so attaching/re-knobbing the signals never perturbs
+    the shared arrival/duration stream of an existing seed."""
+    rng = np.random.default_rng([cfg.seed, 7919, slot])
+    horizon = dur * 1.5
+    amplitude = min(max(cfg.diurnal_amplitude, 0.0), 0.95)
+    bursts: List[Tuple[float, float, float]] = []
+    for _ in range(2):
+        if rng.uniform() < cfg.qps_burst_prob:
+            start = submit_time + float(rng.uniform(0.0, horizon))
+            length = float(rng.uniform(*cfg.qps_burst_len_s))
+            # Clamp: a burst drawn near the end of the signal horizon must
+            # not extend the trace past its own duration.
+            end = min(start + length, submit_time + horizon)
+            if end > start:
+                bursts.append(
+                    (start, end, float(rng.uniform(*cfg.qps_burst_mult))))
+    return ServingLoadProfile(
+        base_qps=anchor * cfg.qps_per_container * cfg.qps_mean_util,
+        amplitude=amplitude,
+        period_s=cfg.diurnal_period_s,
+        phase=float(rng.uniform(0.0, 2.0 * np.pi)),
+        t0=submit_time,
+        horizon_s=horizon,
+        bursts=tuple(sorted(bursts)),
+        qps_per_container=cfg.qps_per_container,
+    )
+
+
 def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
     """`cfg.n_apps` applications with diurnal Poisson arrivals; serving
-    arrivals may burst (several jobs at the same timestamp). `class_index`
-    indexes SCALE_CLASSES. `serial_work` anchors each job's sampled duration
-    at the midpoint of its [n_min, n_max] elasticity range, so schedulers
-    that scale a job out finish it early (speedup) and starved jobs drag."""
+    arrivals may burst (several jobs at the same timestamp, spread over
+    `cfg.burst_spread_s` when set). `class_index` indexes SCALE_CLASSES.
+    `serial_work` anchors each job's sampled duration at the midpoint of its
+    [n_min, n_max] elasticity range, so schedulers that scale a job out
+    finish it early (speedup) and starved jobs drag. Serve-class jobs carry
+    a `ServingLoadProfile` QPS trace (`cfg.qps_traces`) for the autoscaler.
+
+    With `cfg.duration_s` set, NO submit time exceeds it: both the arrival
+    stream and every burst member (whose jittered time can land past the
+    burst instant) are clamped to the horizon."""
     rng = np.random.default_rng(cfg.seed)
     times = _diurnal_arrival_times(rng, cfg.n_apps, cfg.mean_interarrival_s,
                                    cfg.diurnal_amplitude, cfg.diurnal_period_s)
@@ -233,6 +346,8 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
     ti = 0
     while len(apps) < cfg.n_apps:
         t = times[min(ti, len(times) - 1)]
+        if cfg.duration_s is not None:
+            t = min(t, cfg.duration_s)
         ti += 1
         serving = rng.uniform() < cfg.serving_fraction
         if serving and rng.uniform() < cfg.burst_prob:
@@ -242,7 +357,7 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
             burst = 1
         burst = min(burst, cfg.n_apps - len(apps))
         cls_pool = _SERVE_CLASS_IDS if serving else _TRAIN_CLASS_IDS
-        for _ in range(burst):
+        for k in range(burst):
             ci = int(cls_pool[int(rng.integers(len(cls_pool)))])
             executor, model, demand, weight, n_max, n_min, kind = \
                 SCALE_CLASSES[ci]
@@ -254,6 +369,14 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
             sigma = (np.log(hi) - np.log(lo)) / 4.0
             dur = float(np.clip(rng.lognormal(mu, sigma), lo, hi))
             anchor = max(1, (n_min + n_max) // 2)
+            t_k = t
+            if k > 0 and cfg.burst_spread_s > 0:
+                # Spread later burst members over the window; a burst drawn
+                # at the end of the trace horizon would otherwise emit apps
+                # with submit_time past `duration_s` -- clamp.
+                t_k = t + float(rng.uniform(0.0, cfg.burst_spread_s))
+                if cfg.duration_s is not None:
+                    t_k = min(t_k, cfg.duration_s)
             spec = ApplicationSpec(
                 app_id=f"job-{slot:04d}-{model}",
                 executor=executor,
@@ -264,10 +387,14 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
                 cmd=("start.sh", "resume.sh"),
                 model=model,
                 serial_work=dur * anchor,
-                submit_time=t,
+                submit_time=t_k,
+                service_s=(dur if kind == "serve" and cfg.serve_lifetime
+                           else 0.0),
             )
+            load = (_serving_load_profile(cfg, slot, anchor, t_k, dur)
+                    if kind == "serve" and cfg.qps_traces else None)
             apps.append(WorkloadApp(spec=spec, class_index=ci,
-                                    base_duration_s=dur))
+                                    base_duration_s=dur, load=load))
             slot += 1
     return apps
 

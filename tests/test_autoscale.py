@@ -1,0 +1,414 @@
+"""Autoscaling subsystem tests: load signals (generation, clamping,
+replay), the target-tracking control loop (hysteresis, cooldown, step
+limits, guarantee release, infeasible-resize rejection), service-lifetime
+runtime semantics, live mid-run event injection, and the SLO monitor."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, Arrival, AutoscaleConfig,
+                        AutoscalePolicy, ClusterRuntime, ClusterSpec,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        ReplayLoadSignal, Resize, ResourceVector,
+                        SLOMonitor, ScaleDecision, ServingLoadProfile,
+                        Tick, TraceConfig, WorkloadApp, generate_trace,
+                        overload_seconds, signals_from_workload)
+
+
+def _cluster(n=4, cap=(16, 0, 64)):
+    return ClusterSpec.homogeneous(n, ResourceVector.of(*cap))
+
+
+def _dorm(cluster, theta=(1.0, 1.0)):
+    return DormMaster(cluster, "greedy", OptimizerConfig(*theta),
+                      protocol=RecordingProtocol())
+
+
+def _serve_app(i, nmax=8, nmin=1, work=6 * 3600.0, t=0.0, service_s=0.0):
+    spec = ApplicationSpec(f"svc{i}", "S", ResourceVector.of(2, 0, 4),
+                           1, nmax, nmin, serial_work=work, submit_time=t,
+                           service_s=service_s)
+    return WorkloadApp(spec=spec, class_index=0, base_duration_s=work)
+
+
+def _signal(app_id="svc0", base=800.0, t0=0.0, horizon=24 * 3600.0):
+    return ServingLoadProfile(base_qps=base, amplitude=0.0,
+                              period_s=24 * 3600.0, phase=0.0, t0=t0,
+                              horizon_s=horizon)
+
+
+# ------------------------------------------------------------ load signals
+
+def test_generate_trace_attaches_qps_profiles_to_serve_classes():
+    wl = generate_trace(TraceConfig(n_apps=60, seed=3, serving_fraction=0.5))
+    from repro.core import SCALE_CLASSES
+    for w in wl:
+        is_serve = SCALE_CLASSES[w.class_index][6] == "serve"
+        assert (w.load is not None) == is_serve
+        if w.load is not None:
+            assert w.load.t0 == w.spec.submit_time
+            assert w.load.base_qps > 0
+            # burst windows clamped inside the signal's own horizon
+            for start, end, mult in w.load.bursts:
+                assert w.load.t0 <= start < end
+                assert end <= w.load.t0 + w.load.horizon_s + 1e-9
+                assert mult > 1.0
+    assert signals_from_workload(wl)            # non-empty mapping
+
+
+def test_qps_signal_generation_does_not_perturb_arrival_stream():
+    """Profiles come from per-app generators: toggling them (or re-knobbing
+    the qps config) must leave the shared arrival/duration stream of an
+    existing seed untouched."""
+    a = generate_trace(TraceConfig(n_apps=40, seed=5))
+    b = generate_trace(TraceConfig(n_apps=40, seed=5, qps_traces=False))
+    c = generate_trace(TraceConfig(n_apps=40, seed=5, qps_mean_util=0.2,
+                                   qps_burst_prob=0.9))
+    for x, y in zip(a, b):
+        assert x.spec == y.spec and x.base_duration_s == y.base_duration_s
+        assert y.load is None
+    for x, y in zip(a, c):
+        assert x.spec == y.spec
+
+
+def test_serving_load_profile_qps_shape():
+    prof = ServingLoadProfile(base_qps=100.0, amplitude=0.5,
+                              period_s=3600.0, phase=0.0, t0=100.0,
+                              horizon_s=7200.0,
+                              bursts=((500.0, 900.0, 3.0),))
+    assert prof.qps(99.0) == 0.0                # before the window
+    assert prof.qps(100.0) == pytest.approx(100.0)   # sin(0) = 0
+    assert prof.qps(100.0 + 7200.0 + 1) == 0.0  # after the window
+    assert prof.qps(600.0) == pytest.approx(
+        3.0 * 100.0 * (1 + 0.5 * np.sin(2 * np.pi * 500.0 / 3600.0)))
+    assert prof.qps(900.0) < 3.0 * 150.0        # burst end is exclusive
+    assert prof.peak_qps() == pytest.approx(450.0)
+
+
+def test_burst_at_horizon_end_is_clamped():
+    """Regression (generate_trace burst edge): with a trace horizon set, a
+    burst drawn near the end used to emit apps with submit_time past
+    `duration_s` once members are jittered -- every submit time must clamp."""
+    cfg = TraceConfig(n_apps=120, seed=11, mean_interarrival_s=30.0,
+                      serving_fraction=1.0, burst_prob=1.0,
+                      burst_size=(4, 8), burst_spread_s=1800.0,
+                      duration_s=1800.0)
+    wl = generate_trace(cfg)
+    assert len(wl) == 120
+    assert max(w.spec.submit_time for w in wl) <= cfg.duration_s + 1e-9
+    # sanity: without the horizon, the same jitter DOES spill past it --
+    # the clamp is doing real work.
+    free = generate_trace(TraceConfig(
+        n_apps=120, seed=11, mean_interarrival_s=30.0, serving_fraction=1.0,
+        burst_prob=1.0, burst_size=(4, 8), burst_spread_s=1800.0))
+    assert max(w.spec.submit_time for w in free) > 1800.0
+
+
+def test_replay_load_signal_piecewise_and_csv():
+    sig = ReplayLoadSignal([0.0, 60.0, 120.0], [100.0, 250.0, 50.0],
+                           horizon_s=600.0)
+    assert sig.qps(-1.0) == 0.0
+    assert sig.qps(0.0) == 100.0
+    assert sig.qps(59.9) == 100.0
+    assert sig.qps(60.0) == 250.0
+    assert sig.qps(120.0 + 600.0) == 50.0       # held through the horizon
+    assert sig.qps(120.0 + 600.1) == 0.0
+    csv = ReplayLoadSignal.from_csv("t_s,qps\n60,250\n0,100\n",
+                                    horizon_s=60.0)
+    assert csv.qps(30.0) == 100.0 and csv.qps(61.0) == 250.0
+    with pytest.raises(ValueError):
+        ReplayLoadSignal.from_csv("a,b\n1,2\n")
+    with pytest.raises(ValueError):
+        ReplayLoadSignal.from_csv([])            # empty trace: no IndexError
+    with pytest.raises(ValueError):
+        ReplayLoadSignal([10.0, 0.0], [1.0, 2.0])
+
+
+def test_slo_monitor_integrates_replay_signals():
+    """Regression (code review): ReplayLoadSignal's horizon_s is a hold
+    PAST the last sample, not a length from t0 -- the overload integral
+    must use the signal's own window, not profile-shaped attributes."""
+    sig = ReplayLoadSignal([0.0, 3600.0], [500.0, 500.0])
+    acfg = AutoscaleConfig(qps_per_container=100.0)
+    mon = SLOMonitor({"svc0": sig}, acfg, sample_dt_s=60.0)
+    mon.timelines["svc0"] = [(0.0, 1)]           # 100 qps supply all hour
+    assert mon.overload_seconds_of("svc0", 7200.0) == pytest.approx(
+        3600.0, rel=0.05)
+
+
+# ------------------------------------------- service-lifetime runtime path
+
+def test_service_lifetime_completion_independent_of_count():
+    """A service app completes after `service_s` seconds of being up,
+    whatever its container count; a batch app still completes by work."""
+    cluster = _cluster()
+    svc = _serve_app(0, nmax=8, service_s=3600.0, t=0.0)
+    batch = WorkloadApp(
+        spec=ApplicationSpec("batch", "x", ResourceVector.of(2, 0, 4),
+                             1, 4, 1, serial_work=4 * 3600.0,
+                             submit_time=0.0),
+        class_index=0, base_duration_s=4 * 3600.0)
+    rt = ClusterRuntime(_dorm(cluster), horizon_s=24 * 3600.0)
+    res = rt.run([svc, batch])
+    fin_svc = res.completions["svc0"].finished_at
+    fin_batch = res.completions["batch"].finished_at
+    # service: exactly its lifetime (it got containers at t=0, never
+    # paused) -- NOT serial_work / containers
+    assert fin_svc == pytest.approx(3600.0)
+    # batch: work-based as ever (4 container-hours at 4 containers = 1 h)
+    assert fin_batch == pytest.approx(4 * 3600.0 / 4)
+    assert res.completions["batch"].remaining_work == pytest.approx(0.0)
+
+
+def test_service_pause_extends_lifetime():
+    """Adjustment downtime stalls a service's uptime accumulation: a resize
+    mid-life pushes its completion out by the pause."""
+    cluster = _cluster()
+    svc = _serve_app(0, nmax=8, service_s=3600.0)
+    master = _dorm(cluster)
+    rt = ClusterRuntime(master, adjustment_cost_s=120.0,
+                        horizon_s=24 * 3600.0)
+    rt.inject(Resize(1800.0, "svc0", n_max=2))   # forces an adjustment
+    res = rt.run([svc])
+    fin = res.completions["svc0"].finished_at
+    assert fin == pytest.approx(3600.0 + 120.0)
+
+
+# ----------------------------------------------------- live event injection
+
+def test_mid_run_injection_from_bus_subscriber():
+    """`inject()` called while the loop is running (here: from a Tick
+    subscriber, as the autoscaler does) fires at the current instant."""
+    cluster = _cluster()
+    master = _dorm(cluster)
+    rt = ClusterRuntime(master, horizon_s=4 * 3600.0,
+                        tick_interval_s=3600.0)
+    fired = []
+
+    def on_tick(ev):
+        if not fired:
+            fired.append(ev.t)
+            rt.inject(Resize(ev.t, "svc0", n_max=2))
+
+    rt.bus.subscribe(Tick, on_tick)
+    seen = []
+    rt.bus.subscribe(Resize, lambda e: seen.append(e.t))
+    rt.run([_serve_app(0, nmax=8, work=100 * 3600.0)])
+    assert fired and seen == [fired[0]]
+    assert master.specs["svc0"].n_max == 2
+
+
+def test_pre_run_injection_order_is_stable():
+    rt = ClusterRuntime(_dorm(_cluster()), horizon_s=3600.0)
+    rt.inject(Resize(100.0, "a", n_max=2), Resize(100.0, "b", n_max=3),
+              Resize(50.0, "c", n_max=4))
+    import heapq
+    heap = list(rt._inj_heap)
+    order = [heapq.heappop(heap)[2].app_id for _ in range(3)]
+    assert order == ["c", "a", "b"]              # by (t, injection seq)
+
+
+# ------------------------------------------------------------ control loop
+
+def test_autoscaler_scales_up_on_load_and_respects_cooldown():
+    cluster = _cluster()
+    master = _dorm(cluster)
+    sig = _signal(base=800.0)                    # needs ~7 at setpoint 0.65
+    acfg = AutoscaleConfig(qps_per_container=100.0, setpoint=0.65,
+                           band=0.15, cooldown_s=600.0, max_step=3,
+                           hard_max_factor=4.0, forward_ticks=False)
+    pol = AutoscalePolicy(master, {"svc0": sig}, acfg)
+    spec = _serve_app(0, nmax=4, work=100 * 3600.0).spec
+    pol.on_arrival((spec,))
+    assert master.containers_of("svc0") == 4     # optimizer grants n_max
+    res = pol.on_tick(100.0)                     # util = 2.0 > 0.8
+    assert res is not None                       # runtime-less: applied
+    assert len(pol.decisions) == 1
+    d = pol.decisions[0]
+    assert d.reason == "scale-up"
+    # step-limited: 4 + 3 = 7; ceiling extended past the app's request
+    assert d.n_min_new == 7 and d.n_max_new >= 7
+    assert master.containers_of("svc0") == master.specs["svc0"].n_max
+    assert pol.on_tick(200.0) is None            # cooldown holds
+    assert len(pol.decisions) == 1
+    pol.on_tick(800.0)                           # cooldown expired
+    assert len(pol.decisions) == 2
+
+
+def test_autoscaler_releases_guarantee_after_sustained_low():
+    cluster = _cluster()
+    master = _dorm(cluster)
+    sig = _signal(base=100.0)                    # needs ~2 at setpoint
+    acfg = AutoscaleConfig(qps_per_container=100.0, cooldown_s=0.0,
+                           scale_down_delay_s=1200.0, max_step=8,
+                           forward_ticks=False)
+    pol = AutoscalePolicy(master, {"svc0": sig}, acfg)
+    spec = ApplicationSpec("svc0", "S", ResourceVector.of(2, 0, 4), 1, 8, 6,
+                           serial_work=1e9)
+    pol.on_arrival((spec,))
+    assert master.containers_of("svc0") == 8
+    assert pol.on_tick(100.0) is None            # low, but not sustained
+    assert pol.on_tick(600.0) is None            # still inside the delay
+    res = pol.on_tick(1400.0)                    # sustained low
+    assert len(pol.decisions) == 1
+    d = pol.decisions[0]
+    assert d.reason == "scale-down"
+    # guarantee released toward desired=2 (paced by max_step), ceiling kept
+    # at the app's own request -- the autoscaler never cuts it below that.
+    assert d.n_min_new < 6 and d.n_max_new == 8
+    # with an idle cluster the optimizer keeps the app at its ceiling
+    assert master.containers_of("svc0") == 8
+
+
+def test_autoscaler_never_raises_guarantee_on_scale_down():
+    """A wide-open app (n_min=1) under low load must NOT get its n_min
+    ratcheted up by a scale-down (regression of the first control law)."""
+    cluster = _cluster()
+    master = _dorm(cluster)
+    sig = _signal(base=100.0)
+    acfg = AutoscaleConfig(cooldown_s=0.0, scale_down_delay_s=600.0)
+    pol = AutoscalePolicy(master, {"svc0": sig}, acfg)
+    pol.on_arrival((_serve_app(0, nmax=8, work=1e9).spec,))
+    pol.on_tick(100.0)
+    pol.on_tick(900.0)
+    assert master.specs["svc0"].n_min == 1       # nothing to release
+    assert all(d.reason != "scale-down" or d.n_min_new <= d.n_min_old
+               for d in pol.decisions)
+
+
+def test_infeasible_scale_up_is_rejected_and_tracker_stays_honest():
+    """n_min beyond cluster capacity: the master reverts the bounds and the
+    wrapper's tracker must keep the OLD bounds so the next tick retries."""
+    cluster = ClusterSpec.homogeneous(1, ResourceVector.of(8, 0, 32))
+    master = _dorm(cluster)
+    sig = _signal(base=5000.0)                   # wants ~77 containers
+    acfg = AutoscaleConfig(cooldown_s=0.0, max_step=50, hard_max_factor=20)
+    pol = AutoscalePolicy(master, {"svc0": sig}, acfg)
+    pol.on_arrival((_serve_app(0, nmax=4, work=1e9).spec,))
+    assert master.containers_of("svc0") == 4     # slave fits exactly 4
+    pol.on_tick(100.0)
+    assert len(pol.decisions) == 1               # decision recorded...
+    spec = master.specs["svc0"]
+    assert (spec.n_min, spec.n_max) == (1, 4)    # ...but rejected: reverted
+    assert pol._specs["svc0"].n_min == 1         # tracker saw the rejection
+    pol.on_tick(200.0)
+    assert len(pol.decisions) == 2               # and it retries
+
+
+def test_external_resize_resets_reference_ceiling():
+    """A user widening n_max mid-flight must become the new request the
+    controller never cuts below (regression: ceiling0/hard_max were pinned
+    at arrival, so the next decision silently undid the user's resize)."""
+    cluster = _cluster()
+    master = _dorm(cluster)
+    sig = _signal(base=100.0)
+    acfg = AutoscaleConfig(cooldown_s=0.0, scale_down_delay_s=600.0,
+                           forward_ticks=False)
+    pol = AutoscalePolicy(master, {"svc0": sig}, acfg)
+    pol.on_arrival((_serve_app(0, nmax=4, work=1e9).spec,))
+    res = pol.on_resize("svc0", None, 12)        # external widening
+    assert res is not None
+    assert pol._ceiling0["svc0"] == 12
+    assert pol._hard_max["svc0"] == 24
+    pol.on_tick(100.0)
+    pol.on_tick(900.0)                           # sustained low -> decision
+    # whatever the decisions did, the ceiling never fell below the user's 12
+    assert master.specs["svc0"].n_max >= 12
+
+
+def test_relaxing_resize_applies_even_when_cluster_infeasible():
+    """Livelock regression: while the solve is infeasible for UNRELATED
+    reasons (a pending app's n_min cannot fit), a guarantee release must
+    still walk n_min down -- only TIGHTENING resizes are rejected."""
+    cluster = ClusterSpec.homogeneous(1, ResourceVector.of(20, 0, 80))
+    master = _dorm(cluster)
+    a = ApplicationSpec("a", "x", ResourceVector.of(2, 0, 4), 1, 9, 9,
+                        serial_work=1e9)
+    master.submit(a)
+    assert master.containers_of("a") == 9
+    # b's n_min can never fit alongside a's guarantee: all solves infeasible
+    b = ApplicationSpec("b", "x", ResourceVector.of(2, 0, 4), 1, 5, 5,
+                        serial_work=1e9)
+    master.submit(b)
+    assert master.pending == ["b"]
+    # tightening while infeasible: still rejected
+    assert master.on_resize("a", 10, None) is None
+    assert master.specs["a"].n_min == 9
+    # relaxing while infeasible: applied (keep-allocations fallback)
+    res = master.on_resize("a", 7, None)
+    assert res is not None
+    assert master.specs["a"].n_min == 7
+    # walking down far enough frees b's admission
+    res = master.on_resize("a", 5, None)
+    assert master.containers_of("b") == 5
+    assert master.pending == []
+
+
+def test_noop_resize_short_circuits_without_solving():
+    cluster = _cluster()
+    master = _dorm(cluster)
+    master.submit(_serve_app(0, nmax=4, work=1e9).spec)
+    solves = master.optimizer.full_solves + master.optimizer.delta_solves
+    assert master.on_resize("svc0", 1, 4) is None     # identical bounds
+    assert master.optimizer.full_solves + master.optimizer.delta_solves \
+        == solves
+
+
+def test_autoscaler_end_to_end_emits_bus_decisions():
+    cluster = _cluster(8)
+    wl = [_serve_app(0, nmax=4, service_s=4 * 3600.0)]
+    sig = {"svc0": _signal(base=900.0, horizon=6 * 3600.0)}
+    master = _dorm(cluster)
+    acfg = AutoscaleConfig(cooldown_s=600.0)
+    pol = AutoscalePolicy(master, sig, acfg)
+    rt = ClusterRuntime(pol, horizon_s=12 * 3600.0, tick_interval_s=300.0)
+    pol.attach(rt)
+    seen = []
+    rt.bus.subscribe(ScaleDecision, seen.append)
+    mon = SLOMonitor(sig, acfg).attach(rt)
+    res = rt.run(wl)
+    assert seen and seen[0].reason == "scale-up"
+    assert res.completions["svc0"].finished_at is not None
+    # the injected Resize was applied by the optimizer: supply grew
+    tl = mon.timelines["svc0"]
+    assert max(c for _, c in tl) > 4
+    summary = mon.summary(res.horizon_s, pol.decisions)
+    assert summary["churn_by_trigger"].get("Resize", 0) >= 1
+    assert summary["overload_seconds_total"] >= 0.0
+
+
+# ------------------------------------------------------------- SLO metrics
+
+def test_overload_seconds_step_integral():
+    t = np.array([0.0, 10.0, 20.0, 30.0])
+    supply = np.array([100.0, 100.0, 300.0, 300.0])
+    demand = np.array([150.0, 90.0, 250.0, 400.0])
+    # over at [0,10) only; the last sample has no following interval
+    assert overload_seconds(t, supply, demand) == pytest.approx(10.0)
+    assert overload_seconds(t[:1], supply[:1], demand[:1]) == 0.0
+
+
+def test_slo_monitor_tracks_supply_and_lag():
+    sig = {"svc0": _signal(base=400.0, horizon=1000.0)}
+    acfg = AutoscaleConfig(qps_per_container=100.0)
+    mon = SLOMonitor(sig, acfg, sample_dt_s=10.0)
+    rt = ClusterRuntime(_dorm(_cluster()), horizon_s=10.0)
+    mon.attach(rt)
+    # synthesize a timeline: 2 containers at t=0, 4 at t=500
+    mon.timelines["svc0"] = [(0.0, 2), (500.0, 4)]
+    ts = np.array([0.0, 499.0, 500.0, 999.0])
+    np.testing.assert_allclose(mon.supply_at("svc0", ts),
+                               [200.0, 200.0, 400.0, 400.0])
+    # demand 400 vs supply 200 for the first 500 s
+    assert mon.overload_seconds_of("svc0", 1000.0) == pytest.approx(
+        500.0, rel=0.05)
+    d = ScaleDecision(t=100.0, app_id="svc0", qps=400.0, utilization=2.0,
+                      containers=2, n_min_old=1, n_max_old=4, n_min_new=4,
+                      n_max_new=5, reason="scale-up")
+    lag, unresolved = mon.scaling_lag_s([d], 1000.0)
+    assert lag == pytest.approx(400.0) and unresolved == 0
+    lag2, unresolved2 = mon.scaling_lag_s(
+        [d, ScaleDecision(t=600.0, app_id="svc0", qps=900.0,
+                          utilization=2.25, containers=4, n_min_old=4,
+                          n_max_old=5, n_min_new=9, n_max_new=10,
+                          reason="scale-up")], 1000.0)
+    assert unresolved2 == 1

@@ -156,6 +156,103 @@ def test_incremental_bit_exact_property():
     check()
 
 
+# ------------------------------------------ shrink-resize guard (directed)
+# PR 2 added the guard (a shrunk bound can push a target below the previous
+# count, so the prev-rows warm start must decline); these exercise it
+# directly instead of hoping a generator trace hits it.
+
+def _mk(i, nmax=8, nmin=1, cpus=2, ram=8, work=200 * 3600.0, t=0.0):
+    from repro.core import ApplicationSpec, WorkloadApp
+    spec = ApplicationSpec(f"s{i}", "x", ResourceVector.of(cpus, 0, ram),
+                           1, nmax, nmin, serial_work=work, submit_time=t)
+    return WorkloadApp(spec=spec, class_index=0, base_duration_s=work)
+
+
+def test_shrink_below_current_count_declines_delta_and_trims():
+    """Abundant cluster, app sitting at n_max via the delta fast path; a
+    Resize shrinking n_max below the current count must route through the
+    FULL solve (the warm start would keep an illegal row) and trim."""
+    cluster = ClusterSpec.homogeneous(4, ResourceVector.of(8, 0, 32))
+    m_inc, m_full = _masters(cluster, theta=(1.0, 1.0))
+    for m in (m_inc, m_full):
+        m.on_arrival((_mk(0).spec,))
+        m.on_arrival((_mk(1).spec,))
+    assert m_inc.containers_of("s0") == 8          # fast path grew to n_max
+    delta_before = m_inc.optimizer.delta_solves
+    full_before = m_inc.optimizer.full_solves
+    res_i = m_inc.on_resize("s0", None, 3)
+    res_f = m_full.on_resize("s0", None, 3)
+    assert m_inc.optimizer.full_solves == full_before + 1   # guard fired
+    assert m_inc.optimizer.delta_solves == delta_before
+    assert m_inc.containers_of("s0") == 3
+    assert res_i.allocation.app_ids == res_f.allocation.app_ids
+    np.testing.assert_array_equal(res_i.allocation.x, res_f.allocation.x)
+    # the trim is an adjustment (save -> kill -> resume)
+    assert "s0" in res_i.adjusted_app_ids
+
+
+def test_shrink_then_grow_in_one_tick_window_bit_exact():
+    """Two injected resizes at the SAME timestamp (shrink, then grow back):
+    both must apply in injection order, and the incremental master's
+    timeline must match the full re-solve master's bit-for-bit."""
+    from repro.core import ClusterRuntime, Reallocated, Resize
+    cluster = ClusterSpec.homogeneous(4, ResourceVector.of(8, 0, 32))
+    wl = [_mk(0), _mk(1)]
+
+    def drive(master):
+        rt = ClusterRuntime(master, horizon_s=12 * 3600.0)
+        rt.inject(Resize(3600.0, "s0", n_max=2),
+                  Resize(3600.0, "s0", 4, 6))
+        allocs = []
+        rt.bus.subscribe(Reallocated,
+                         lambda e: allocs.append(
+                             (e.t, e.result.allocation.app_ids,
+                              e.result.allocation.x.copy())))
+        res = rt.run(wl)
+        return res, allocs
+
+    m_inc, m_full = _masters(cluster, theta=(1.0, 1.0))
+    res_i, al_i = drive(m_inc)
+    res_f, al_f = drive(m_full)
+    assert m_inc.specs["s0"].n_max == 6            # the grow won (last)
+    assert 4 <= m_inc.containers_of("s0") <= 6
+    assert len(al_i) == len(al_f)
+    for (ti, ids_i, x_i), (tf, ids_f, x_f) in zip(al_i, al_f):
+        assert ti == tf and ids_i == ids_f
+        np.testing.assert_array_equal(x_i, x_f)
+    assert res_i.durations() == res_f.durations()
+
+
+def test_shrink_during_futile_topup_memo_hit():
+    """ClusterState.epoch interaction: a futile top-up memo entry must not
+    survive a Resize (update_spec/rebound bumps the epoch), or the freed
+    capacity of the shrunk app could never reach the memoized app.
+
+    Setup: 2 slaves x 8 cpus, 3-cpu containers. s0 takes 3 (2+1), s1 gets
+    1 and records a futile top-up to 2 (free is 2 cpus per slave). Then s0
+    shrinks to n_max=2: one container's capacity returns, and s1's next
+    solve MUST claim it -- which only happens if the memo was invalidated."""
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    m_inc, m_full = _masters(cluster, theta=(1.0, 1.0))
+    a0 = _mk(0, nmax=3, cpus=3, ram=1).spec
+    a1 = _mk(1, nmax=2, cpus=3, ram=1).spec
+    for m in (m_inc, m_full):
+        m.on_arrival((a0,))
+        m.on_arrival((a1,))
+    assert m_inc.containers_of("s0") == 3
+    assert m_inc.containers_of("s1") == 1          # top-up to 2 was futile
+    memo = m_inc.optimizer._futile
+    assert memo.get("s1") is not None              # the memo actually hit
+    epoch_before = m_inc.state.epoch
+    res_i = m_inc.on_resize("s0", None, 2)
+    res_f = m_full.on_resize("s0", None, 2)
+    assert m_inc.state.epoch > epoch_before        # rebound bumped epoch
+    assert m_inc.containers_of("s0") == 2
+    assert m_inc.containers_of("s1") == 2          # freed slot claimed
+    np.testing.assert_array_equal(res_i.allocation.x, res_f.allocation.x)
+    assert res_i.allocation.app_ids == res_f.allocation.app_ids
+
+
 def test_master_reports_eq4_adjustment_overhead():
     """Satellite: ReallocationResult.adjustment_overhead is the literal Eq-4
     count vs prev_alloc (== the number of adjusted running apps)."""

@@ -1,0 +1,95 @@
+"""Replay-driven XL benchmark smoke (the test half of the ROADMAP's
+"replay-driven XL benchmarks" item).
+
+Generates a synthetic Philly-schema CSV in-test, replays it at 500 slaves
+x 200 jobs through `bench_scale`-style timing (auto optimizer, SoA engine,
+event batching, PolicyTimer, churn subscriber). The jobs carry FRACTIONAL
+per-container demands (num_cpus not divisible by num_gpus), so the delta
+fast path must decline on every event and the non-delta solve carries the
+whole run. Asserts every app completes and the churn/latency metrics are
+finite.
+
+CI runs a scaled-down version of the same test: the size is overridable
+via REPLAY_SMOKE_SLAVES / REPLAY_SMOKE_APPS (see .github/workflows/ci.yml).
+"""
+import math
+import os
+
+import numpy as np
+
+from repro.core import (ClusterSimulator, DormMaster, OptimizerConfig,
+                        PolicyTimer, Reallocated, RecordingProtocol,
+                        container_churn, heterogeneous_cluster, replay_trace)
+
+N_SLAVES = int(os.environ.get("REPLAY_SMOKE_SLAVES", "500"))
+N_APPS = int(os.environ.get("REPLAY_SMOKE_APPS", "200"))
+
+
+def _synthetic_philly_csv(n_jobs: int, seed: int = 0) -> str:
+    """Philly-schema rows (jobid,submitted_time,run_time,num_gpus,
+    num_cpus,mem_gb) with deliberately fractional per-container demands:
+    num_cpus/mem_gb are NOT multiples of num_gpus, so replay's
+    demand-per-container split produces non-integral vectors."""
+    rng = np.random.default_rng(seed)
+    lines = ["jobid,submitted_time,run_time,num_gpus,num_cpus,mem_gb"]
+    t = 0.0
+    for j in range(n_jobs):
+        t += float(rng.exponential(90.0))
+        n_gpus = int(rng.integers(1, 9))
+        run_time = float(rng.uniform(600.0, 7200.0))
+        n_cpus = n_gpus * 3 + 1          # 3 + 1/n_gpus cpus per container
+        mem = n_gpus * 20 + 5            # 20 + 5/n_gpus GB per container
+        lines.append(f"job-{j:04d},{t:.1f},{run_time:.1f},"
+                     f"{n_gpus},{n_cpus},{mem}")
+    return "\n".join(lines) + "\n"
+
+
+def test_replay_xl_smoke_fractional_demands_complete():
+    wl = replay_trace(_synthetic_philly_csv(N_APPS), fmt="philly")
+    assert len(wl) == N_APPS
+    # Fractional demands actually materialized (the point of the scenario).
+    assert any((w.spec.demand.as_array()
+                != np.floor(w.spec.demand.as_array())).any() for w in wl)
+
+    cluster = heterogeneous_cluster(N_SLAVES, seed=0)
+    cfg = OptimizerConfig(0.2, 0.2, warm_start=True, incremental=True,
+                          soa=True)
+    # Pinned to the greedy solver (not "auto"): the test's point is the
+    # NON-DELTA greedy path under fractional demands, and it must keep
+    # making that point at any REPLAY_SMOKE_* size -- "auto" would switch
+    # to MILP below auto_switch_vars and void the assertions.
+    master = DormMaster(cluster, "greedy", cfg,
+                        protocol=RecordingProtocol())
+    timer = PolicyTimer(master)
+    sim = ClusterSimulator(timer, wl, adjustment_cost_s=60.0,
+                           horizon_s=48 * 3600.0, batch_window_s=60.0)
+    churn = {"total": 0, "last": None}
+
+    def on_realloc(ev):
+        churn["total"] += container_churn(churn["last"],
+                                          ev.result.allocation)
+        churn["last"] = ev.result.allocation
+
+    sim.runtime.bus.subscribe(Reallocated, on_realloc)
+    res = sim.run()
+
+    # Every replayed job finishes inside the horizon.
+    unfinished = [a for a, rt in res.completions.items()
+                  if rt.finished_at is None]
+    assert not unfinished, f"{len(unfinished)} jobs unfinished: " \
+                           f"{unfinished[:5]}"
+    # The fractional-demand guard keeps the delta path off whenever any
+    # admitted app has a non-integral demand; 1-GPU jobs are integral
+    # (3 + 1/1 cpus), so a few early all-integral events may legally take
+    # the delta path -- the non-delta solve must carry the run.
+    greedy = master.optimizer
+    assert greedy.full_solves > 0
+    assert greedy.full_solves > greedy.delta_solves
+
+    # Churn and timing metrics are finite and sane.
+    assert math.isfinite(churn["total"]) and churn["total"] >= 0
+    assert math.isfinite(res.time_averaged_utilization())
+    assert math.isfinite(res.mean_fairness_loss())
+    assert math.isfinite(timer.total_s()) and timer.n_calls > 0
+    assert math.isfinite(timer.median_ms())
+    assert res.total_adjustments >= 0

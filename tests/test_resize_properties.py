@@ -1,0 +1,273 @@
+"""Property-based resize-storm suite.
+
+Random interleavings of Arrival / Completion / Resize events -- grows,
+shrinks, explicit n_min > n_max rejections, resizes of already-finished
+apps -- driven through FOUR DormMaster configurations simultaneously
+(SoA/legacy engine x incremental/full re-solve). Invariants, after every
+single event:
+
+  * per-slave capacity is never exceeded,
+  * every placed app holds n_min <= count <= n_max (unconditional, thanks
+    to the reject-infeasible-resize semantics: bounds and allocations can
+    never diverge),
+  * the four engines are bit-exact event-for-event: same allocation
+    matrices, same adjusted/started/pending sets, metrics to 1e-9 (the
+    engines sum Eq-2 in different float orders),
+  * an invalid resize raises identically everywhere and mutates nothing.
+
+Runs under hypothesis when available (CI installs it; 200+ examples);
+falls back to a seeded-random sweep of the same check otherwise, so the
+suite executes even on bare images."""
+import numpy as np
+import pytest
+
+from repro.core import (ApplicationSpec, ClusterRuntime, ClusterSpec,
+                        DormMaster, OptimizerConfig, Reallocated,
+                        RecordingProtocol, Resize, ResourceVector,
+                        TraceConfig, WorkloadApp, generate_trace,
+                        heterogeneous_cluster)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+N_EXAMPLES = 220          # acceptance floor is 200+
+
+THETAS = ((0.2, 0.2), (1.0, 1.0), (0.1, 0.3))
+
+
+def _masters(cluster, theta):
+    """(soa, incremental) x {True, False}^2 behind identical configs."""
+    out = {}
+    for soa in (True, False):
+        for inc in (True, False):
+            cfg = OptimizerConfig(*theta, incremental=inc, soa=soa)
+            out[(soa, inc)] = DormMaster(cluster, "greedy", cfg,
+                                         protocol=RecordingProtocol())
+    return out
+
+
+def _gen_ops(rng):
+    """A random event script over a small cluster: (cluster, theta, ops).
+
+    Ops reference sensible app ids (completions of running apps, resizes
+    of running AND finished apps, occasional invalid bounds)."""
+    b = int(rng.integers(2, 5))
+    cap = ResourceVector.of(int(rng.integers(6, 14)),
+                            int(rng.integers(0, 3)),
+                            int(rng.integers(16, 49)))
+    cluster = ClusterSpec.homogeneous(b, cap)
+    theta = THETAS[int(rng.integers(len(THETAS)))]
+
+    ops = []
+    alive, finished = [], []
+    next_id = 0
+    for _ in range(int(rng.integers(8, 17))):
+        choices = ["arrive"]
+        if alive:
+            choices += ["complete", "resize", "resize", "shrink"]
+        if finished:
+            choices.append("resize_finished")
+        if alive and rng.random() < 0.15:
+            choices.append("bad_resize")
+        op = choices[int(rng.integers(len(choices)))]
+        if op == "arrive":
+            n_min = int(rng.integers(1, 3))
+            n_max = n_min + int(rng.integers(0, 7))
+            spec = ApplicationSpec(
+                f"a{next_id}", "x",
+                ResourceVector.of(int(rng.integers(1, 4)),
+                                  int(rng.integers(0, 2)),
+                                  int(rng.integers(1, 13))),
+                int(rng.integers(1, 4)), n_max, n_min)
+            next_id += 1
+            alive.append(spec.app_id)
+            ops.append(("arrive", spec))
+        elif op == "complete":
+            app = alive.pop(int(rng.integers(len(alive))))
+            finished.append(app)
+            ops.append(("complete", app))
+        elif op in ("resize", "shrink"):
+            app = alive[int(rng.integers(len(alive)))]
+            if op == "shrink":
+                lo = 1
+                hi = int(rng.integers(1, 4))            # often below count
+            else:
+                lo = int(rng.integers(1, 5))
+                hi = lo + int(rng.integers(0, 9))
+            # Exercise the None-keeps-a-bound paths too.
+            which = rng.random()
+            if which < 0.25:
+                ops.append(("resize", app, lo, None))
+            elif which < 0.5:
+                ops.append(("resize", app, None, hi))
+            else:
+                ops.append(("resize", app, lo, hi))
+        elif op == "resize_finished":
+            app = finished[int(rng.integers(len(finished)))]
+            ops.append(("resize", app, 1, int(rng.integers(1, 9))))
+        else:  # bad_resize: explicit inconsistent pair
+            app = alive[int(rng.integers(len(alive)))]
+            hi = int(rng.integers(1, 4))
+            ops.append(("bad_resize", app, hi + int(rng.integers(1, 5)), hi))
+    return cluster, theta, ops
+
+
+def _apply(master, op):
+    kind = op[0]
+    if kind == "arrive":
+        return master.on_arrival((op[1],))
+    if kind == "complete":
+        return master.on_completion(op[1])
+    return master.on_resize(op[1], op[2], op[3])
+
+
+def _check_invariants(master, cluster):
+    """Capacity + bounds invariants from the master's own view."""
+    cap = cluster.capacity_matrix()
+    used = np.zeros_like(cap, dtype=np.float64)
+    for app_id in list(master.partitions):
+        spec = master.specs[app_id]
+        if master.state is not None:
+            row = master.state.placement(app_id)
+        else:
+            row = master._placements[app_id]
+        count = int(row.sum())
+        assert spec.n_min <= count <= spec.n_max, \
+            f"{app_id}: count {count} outside [{spec.n_min}, {spec.n_max}]"
+        used += row[:, None] * spec.demand.as_array()[None, :]
+    assert np.all(used <= cap + 1e-6), "per-slave capacity exceeded"
+
+
+def _check_storm(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    cluster, theta, ops = _gen_ops(rng)
+    masters = _masters(cluster, theta)
+    ref_key = (True, True)
+    for op in ops:
+        results = {}
+        if op[0] == "bad_resize":
+            for key, m in masters.items():
+                before = {a: (s.n_min, s.n_max, m.containers_of(a))
+                          for a, s in m.specs.items()}
+                with pytest.raises(ValueError):
+                    m.on_resize(op[1], op[2], op[3])
+                after = {a: (s.n_min, s.n_max, m.containers_of(a))
+                         for a, s in m.specs.items()}
+                assert before == after, "failed resize mutated state"
+            continue
+        for key, m in masters.items():
+            results[key] = _apply(m, op)
+            _check_invariants(m, cluster)
+        ref = results[ref_key]
+        for key, res in results.items():
+            if key == ref_key:
+                continue
+            assert (res is None) == (ref is None), (op, key)
+            if ref is None:
+                continue
+            assert res.allocation.app_ids == ref.allocation.app_ids, (op, key)
+            np.testing.assert_array_equal(res.allocation.x, ref.allocation.x,
+                                          err_msg=f"{op} {key}")
+            assert res.adjusted_app_ids == ref.adjusted_app_ids, (op, key)
+            assert res.started_app_ids == ref.started_app_ids, (op, key)
+            assert res.pending_app_ids == ref.pending_app_ids, (op, key)
+            assert res.adjustment_overhead == ref.adjustment_overhead
+            assert res.utilization == pytest.approx(ref.utilization,
+                                                    abs=1e-9)
+            assert res.fairness_loss == pytest.approx(ref.fairness_loss,
+                                                      abs=1e-9)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=N_EXAMPLES, deadline=None)
+    def test_resize_storm_engines_bit_exact(seed):
+        _check_storm(seed)
+else:
+    @pytest.mark.parametrize("chunk", range(11))
+    def test_resize_storm_engines_bit_exact(chunk):
+        # Seeded fallback: same check, 11 chunks x 20 seeds = 220 examples.
+        for k in range(20):
+            _check_storm(chunk * 20 + k)
+
+
+# ------------------------------------------- runtime-level resize storms
+
+def _run_timeline(cluster, wl, resizes, soa, incremental):
+    cfg = OptimizerConfig(0.2, 0.2, incremental=incremental, soa=soa)
+    m = DormMaster(cluster, "greedy", cfg, protocol=RecordingProtocol())
+    rt = ClusterRuntime(m, horizon_s=24 * 3600.0)
+    rt.inject(*resizes)
+    allocs = []
+    rt.bus.subscribe(Reallocated,
+                     lambda e: allocs.append((e.t,
+                                              e.result.allocation.app_ids,
+                                              e.result.allocation.x.copy())))
+    res = rt.run(wl)
+    return res, allocs
+
+
+def _check_runtime_storm(seed: int) -> None:
+    """Full-timeline variant: generator trace + injected Resize storm; the
+    incremental/full and SoA/legacy timelines stay identical event-for-
+    event, including completions racing resizes."""
+    rng = np.random.default_rng(seed)
+    cluster = heterogeneous_cluster(int(rng.integers(8, 25)),
+                                    seed=int(seed) % 13)
+    wl = generate_trace(TraceConfig(n_apps=int(rng.integers(10, 26)),
+                                    seed=seed,
+                                    mean_interarrival_s=300.0))
+    resizes = []
+    for _ in range(int(rng.integers(3, 9))):
+        w = wl[int(rng.integers(len(wl)))]
+        t = w.spec.submit_time + float(rng.uniform(0, 2 * 3600.0))
+        if rng.random() < 0.5:
+            resizes.append(Resize(t, w.spec.app_id,
+                                  n_max=int(rng.integers(1, 5))))   # shrink
+        else:
+            lo = int(rng.integers(1, 5))
+            resizes.append(Resize(t, w.spec.app_id, lo,
+                                  lo + int(rng.integers(0, 9))))
+    runs = {
+        (soa, inc): _run_timeline(cluster, wl, resizes, soa, inc)
+        for soa in (True, False) for inc in (True, False)}
+    res_ref, al_ref = runs[(True, True)]
+    for key, (res, al) in runs.items():
+        if key == (True, True):
+            continue
+        assert len(al) == len(al_ref), key
+        for (t1, ids1, x1), (t2, ids2, x2) in zip(al, al_ref):
+            assert t1 == t2 and ids1 == ids2, key
+            np.testing.assert_array_equal(x1, x2, err_msg=str(key))
+        assert res.durations() == res_ref.durations(), key
+        assert len(res.samples) == len(res_ref.samples)
+        for sa, sb in zip(res.samples, res_ref.samples):
+            assert sa.t == sb.t
+            assert sa.running == sb.running and sa.pending == sb.pending
+            assert sa.adjustment_overhead == sb.adjustment_overhead
+            assert sa.utilization == pytest.approx(sb.utilization, abs=1e-9)
+            assert sa.fairness_loss == pytest.approx(sb.fairness_loss,
+                                                     abs=1e-9)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_runtime_resize_storm_timelines_identical(seed):
+        _check_runtime_storm(seed)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_runtime_resize_storm_timelines_identical(seed):
+        _check_runtime_storm(seed)
+
+
+def test_resize_of_finished_app_returns_none_everywhere():
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    for key, m in _masters(cluster, (0.2, 0.2)).items():
+        spec = ApplicationSpec("a", "x", ResourceVector.of(2, 0, 8), 1, 4, 1)
+        m.on_arrival((spec,))
+        m.on_completion("a")
+        assert m.on_resize("a", 1, 8) is None, key

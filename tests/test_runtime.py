@@ -141,11 +141,11 @@ def test_resize_below_n_min_clamps_bounds():
     assert master.containers_of("app1") == 1
 
 
-def test_resize_with_zero_adjust_budget_does_not_crash():
-    """A shrink-resize under a zero Eq-16 budget used to make the greedy
-    revert restore a row violating the NEW bounds, blowing up inside
-    validate_allocation; now the revert skips bound-incompatible rows and
-    the event either applies or reports infeasible."""
+def test_resize_with_zero_adjust_budget_is_rejected():
+    """A shrink-resize under a zero Eq-16 budget cannot be enforced (the
+    shrink IS an adjustment); the resize must be REJECTED -- bounds revert,
+    allocation untouched -- rather than crash or stick as an unenforceable
+    bound that would wedge every later solve."""
     cluster = _cluster(8)
     specs = [_app(i, nmax=4, work=200 * 3600.0, t=10.0 * i)
              for i in range(3)]
@@ -156,7 +156,9 @@ def test_resize_with_zero_adjust_budget_does_not_crash():
     rt = ClusterRuntime(master, horizon_s=3600.0)
     rt.inject(Resize(100.0, "app0", n_max=1))
     rt.run(_wl(*specs))                          # must not raise
-    assert master.specs["app0"].n_max == 1
+    spec = master.specs["app0"]
+    assert (spec.n_min, spec.n_max) == (1, 4)    # rejected: bounds reverted
+    assert spec.n_min <= master.containers_of("app0") <= spec.n_max
 
 
 def test_runtime_rejects_batching_for_legacy_scheduler():
