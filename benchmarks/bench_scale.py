@@ -36,10 +36,11 @@ import argparse
 import json
 import time
 
-from repro.core import (ClusterSimulator, DormMaster, OptimizerConfig,
-                        PolicyTimer, Reallocated, RecordingProtocol,
-                        TraceConfig, container_churn, generate_trace,
-                        heterogeneous_cluster)
+from repro.core import (ClusterSimulator, DormMaster, MilpOptimizer,
+                        OptimizerConfig, PolicyTimer, Reallocated,
+                        RecordingProtocol, TraceConfig, container_churn,
+                        generate_trace, heterogeneous_cluster,
+                        resource_utilization)
 
 from .common import emit
 
@@ -89,6 +90,49 @@ def _run_once(cluster, wl, incremental: bool, horizon_s: float,
         "drf_fast_hits": greedy.drf.fast_hits,
         "drf_full_refills": greedy.drf.full_refills,
     }, res
+
+
+def exact_head_to_head(n_slaves: int, n_apps: int, seed: int,
+                       theta1: float, theta2: float,
+                       time_limit_s: float = 60.0) -> dict:
+    """ONE static instance solved by the three exact routes: monolithic
+    MILP (certified via HiGHS's dual bound), rolling horizon (block-exact,
+    no global certificate) and column generation (certified via the master
+    LP bound). Sized so the monolithic grid stays tractable; the solvers
+    run in THIS process back to back, so the solve-second columns are
+    comparable to each other (never across machines)."""
+    cluster = heterogeneous_cluster(n_slaves, seed=seed)
+    apps = [w.spec for w in
+            generate_trace(TraceConfig(n_apps=n_apps, seed=seed))]
+    n, b = len(apps), cluster.b
+    variants = {
+        "monolithic": OptimizerConfig(theta1, theta2, rolling_horizon_vars=0,
+                                      time_limit_s=time_limit_s),
+        "rolling": OptimizerConfig(theta1, theta2,
+                                   rolling_horizon_vars=max(b + 1,
+                                                            n * b // 4),
+                                   time_limit_s=time_limit_s),
+        "colgen": OptimizerConfig(theta1, theta2, column_generation=True,
+                                  time_limit_s=time_limit_s),
+    }
+    out: dict = {"slaves": n_slaves, "apps": n_apps, "vars": n * b}
+    for name, cfg in variants.items():
+        opt = MilpOptimizer(cfg)
+        t0 = time.perf_counter()
+        alloc = opt.solve(apps, cluster, None)
+        out[name] = {
+            "solve_s": time.perf_counter() - t0,
+            "utilization": resource_utilization(alloc, apps, cluster)
+            if alloc is not None else None,
+            "certified_gap": opt.last_gap,
+            "bound": opt.last_bound,
+        }
+    mono_u = out["monolithic"]["utilization"]
+    for name in ("rolling", "colgen"):
+        u = out[name]["utilization"]
+        out[name]["util_vs_monolithic"] = \
+            (u / mono_u) if (u and mono_u) else None
+    return out
 
 
 def _same_timeline(a, b, exact_metrics: bool = True) -> bool:
@@ -170,6 +214,26 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
          "containers created+destroyed"),
     ]
 
+    # Exact-solver head-to-head (monolithic vs rolling vs colgen) on ONE
+    # static instance small enough for the monolithic grid: the certified
+    # gaps and solve-time columns land in the JSON report and the colgen
+    # gap is gated by `scripts/check.sh --bench` / the CI bench smoke.
+    exact = exact_head_to_head(min(n_slaves, 60), min(n_apps, 40),
+                               seed, theta1, theta2)
+    rows += [
+        ("scale.exact_vars", exact["vars"], "count",
+         f"{exact['slaves']}x{exact['apps']} head-to-head instance"),
+        ("scale.exact_mono_solve_s", exact["monolithic"]["solve_s"], "s",
+         f"certified gap {exact['monolithic']['certified_gap']}"),
+        ("scale.exact_rolling_solve_s", exact["rolling"]["solve_s"], "s",
+         f"util vs mono {exact['rolling']['util_vs_monolithic']}; no "
+         f"global certificate"),
+        ("scale.exact_colgen_solve_s", exact["colgen"]["solve_s"], "s",
+         f"util vs mono {exact['colgen']['util_vs_monolithic']}"),
+        ("scale.exact_colgen_gap", exact["colgen"]["certified_gap"], "frac",
+         "certified global optimality gap"),
+    ]
+
     payload = {
         "config": {
             "slaves": n_slaves, "apps": n_apps, "seed": seed,
@@ -185,6 +249,7 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         "soa_speedup": soa_speedup,
         "timeline_bit_exact": bit_exact,
         "timeline_bit_exact_vs_legacy_engine": bit_exact_engines,
+        "exact_solvers": exact,
     }
 
     if xl:

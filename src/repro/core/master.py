@@ -204,12 +204,15 @@ class DormMaster:
 
     def phase_breakdown(self) -> Dict[str, float]:
         """Cumulative per-phase scheduling seconds: optimizer solve (split
-        into the DRF-refill share and the rest), enforcement (container
-        create/destroy + protocol calls), and Eq-1/2/4 metric evaluation."""
+        into the DRF-refill share, the column-generation pricing share and
+        the rest), enforcement (container create/destroy + protocol calls),
+        and Eq-1/2/4 metric evaluation."""
         refill = float(getattr(self.optimizer, "refill_s", 0.0))
+        pricing = float(getattr(self.optimizer, "pricing_s", 0.0))
         return {
             "drf_refill": refill,
-            "solve": max(self.phase_s["solve"] - refill, 0.0),
+            "colgen_pricing": pricing,
+            "solve": max(self.phase_s["solve"] - refill - pricing, 0.0),
             "enforce": self.phase_s["enforce"],
             "metrics": self.phase_s["metrics"],
         }
@@ -460,6 +463,9 @@ class DormMaster:
             # the previous allocation, summed over A^t ∩ A^{t-1}.
             adjustment_overhead=overhead,
             changed_counts=counts_changed,
+            # Certified gap of the solve (colgen LP bound / monolithic MILP
+            # dual bound); None when the path proves nothing.
+            optimality_gap=getattr(self.optimizer, "last_gap", None),
         )
         self.phase_s["metrics"] += _time.perf_counter() - t0
         return result

@@ -17,6 +17,13 @@ Hence Eqs 11-12 are linear in x.
 
 Three solvers behind one interface:
   * `MilpOptimizer`  -- exact, scipy.optimize.milp (HiGHS; stands in for CPLEX).
+    Two exact-at-scale routes live behind it: the rolling-horizon block
+    decomposition (`OptimizerConfig.rolling_horizon_vars`; block-exact but
+    greedy across blocks, so no global bound) and column generation
+    (`OptimizerConfig.column_generation` / `make_optimizer("colgen")`),
+    which prices per-app container-count columns against the LP duals of an
+    aggregate restricted master and certifies a GLOBAL optimality gap
+    (`last_gap`/`last_bound`) on every solve.
     Constraints are assembled as `scipy.sparse` matrices by default (the dense
     matrix has (b*m + 2*n*b) rows x n*b columns and collapses beyond a few
     hundred slaves); set `OptimizerConfig.sparse=False` for the loop-built
@@ -51,7 +58,7 @@ from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
 
 try:  # scipy is available in this environment; keep the import soft anyway.
     from scipy import sparse as _sp
-    from scipy.optimize import LinearConstraint, milp
+    from scipy.optimize import LinearConstraint, linprog, milp
     from scipy.optimize import Bounds as _Bounds
     _HAVE_SCIPY = True
 except Exception:  # pragma: no cover
@@ -93,6 +100,36 @@ class OptimizerConfig:
     # against residual capacity, consuming the remaining global Eq-15/16
     # budgets. 0 disables the decomposition (always monolithic).
     rolling_horizon_vars: int = 4_000
+    # Column-generation exact solve (MilpOptimizer; also via
+    # make_optimizer("colgen")). True routes EVERY solve through a
+    # Dantzig-Wolfe restricted master LP over per-app container-count
+    # columns: pricing against the duals on the m aggregate capacity rows
+    # (+ the Eq-15 fairness and Eq-16 adjustment rows) generates improving
+    # columns in closed form, the greedy solution seeds the pool, and a
+    # final integer solve over the pool yields the allocation. Unlike the
+    # rolling horizon (block-exact, greedy across blocks, unbounded global
+    # gap) the LP bound certifies a GLOBAL optimality gap, reported as
+    # `MilpOptimizer.last_gap` / `ReallocationResult.optimality_gap`.
+    column_generation: bool = False
+    # Pricing-iteration cap: each iteration re-solves the restricted master
+    # LP and adds at most one improving column per app. The Lagrangian
+    # bound stays certified when the cap bites (the gap merely widens).
+    colgen_max_iters: int = 60
+    # Column-pool ceiling (seed + generated): pricing stops growing the
+    # pool past this and the final integer solve runs on what exists.
+    colgen_pool_max: int = 100_000
+    # Packing repair: the aggregate master ignores per-slave fragmentation,
+    # so the selected counts may not pack heuristically. Identical demand
+    # rows are interchangeable, so the packer works on DISTINCT demand
+    # types (T << n on real clusters): while T * b <= this, an exact
+    # row-sum-fixed packing MILP (a cheap feasibility problem, NOT the
+    # full P2 grid) realizes the counts; within 10x this, a packing LP +
+    # round-down + best-fit repair approximates them; a selection that
+    # provably cannot pack is excluded with a no-good cut and re-selected,
+    # up to `colgen_pack_rounds` times. 0 disables the repair (heuristic
+    # placement only; the certified gap simply widens).
+    colgen_pack_vars: int = 20_000
+    colgen_pack_rounds: int = 3
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -163,8 +200,20 @@ class MilpOptimizer:
         self.last_shares_vec: Optional[np.ndarray] = None  # solve app order
         self.last_changed: Optional[Tuple[str, ...]] = None  # never proven
         self.refill_s = 0.0        # cumulative DRF-refill time (phase stat)
+        self.pricing_s = 0.0       # cumulative colgen pricing time
         self.monolithic_solves = 0
         self.rolling_solves = 0
+        self.colgen_solves = 0
+        self.colgen_iters = 0      # cumulative pricing iterations
+        self.colgen_columns = 0    # pool size of the last colgen solve
+        # Certified optimality-gap report of the last solve (None when the
+        # path taken cannot certify one -- rolling horizon, or a failed
+        # solve). `last_bound` is a PROVEN upper bound on the P2 utilization
+        # objective; `last_objective` the achieved objective; `last_gap`
+        # their relative gap in [0, inf).
+        self.last_gap: Optional[float] = None
+        self.last_bound: Optional[float] = None
+        self.last_objective: Optional[float] = None
 
     # ------------------------------------------------------ dense assembly
 
@@ -365,9 +414,15 @@ class MilpOptimizer:
         `state` is accepted for SchedulerPolicy-interface parity and passed
         to the greedy incumbent."""
         self.last_changed = None
+        self.last_gap = None
+        self.last_bound = None
+        self.last_objective = None
         if not apps:
             self.last_shares = {}
             self.last_shares_vec = np.zeros(0)
+            self.last_gap = 0.0
+            self.last_bound = 0.0
+            self.last_objective = 0.0
             return Allocation.empty((), cluster.b)
         app_ids = tuple(a.app_id for a in apps)
         t_refill = _time.perf_counter()
@@ -375,6 +430,10 @@ class MilpOptimizer:
         self.refill_s += _time.perf_counter() - t_refill
         self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
         self.last_shares_vec = s_hat_vec
+        if self.cfg.column_generation:
+            self.colgen_solves += 1
+            return self._solve_colgen(apps, cluster, prev, drf_counts,
+                                      s_hat_vec, state)
         rh = self.cfg.rolling_horizon_vars
         if rh and len(apps) > 1 and len(apps) * cluster.b > rh:
             self.rolling_solves += 1
@@ -485,7 +544,28 @@ class MilpOptimizer:
             # Monolithic solves validate here; rolling blocks are checked
             # once, on the combined allocation.
             validate_allocation(alloc, apps, cluster, d=d)
+            # HiGHS's dual bound certifies the monolithic solve too: milp
+            # minimizes -utilization, so -mip_dual_bound is a proven upper
+            # bound on the P2 utilization objective (the warm-start cutoff
+            # plane never excludes the optimum, so the bound stays valid).
+            dual = getattr(res, "mip_dual_bound", None)
+            self._record_gap(
+                float(-dual) if dual is not None and np.isfinite(dual)
+                else None,
+                float(util_w @ x.sum(axis=1)))
         return alloc
+
+    def _record_gap(self, bound: Optional[float], objective: float) -> None:
+        """Set the certified-gap report (`last_bound`/`last_objective`/
+        `last_gap`) from a proven utilization upper bound and the achieved
+        objective -- the ONE formula both the monolithic dual-bound path
+        and the colgen path report through (check.sh/CI gate on it)."""
+        self.last_objective = objective
+        if bound is None:
+            return
+        self.last_bound = max(bound, objective)
+        self.last_gap = max(0.0, self.last_bound - objective) / \
+            max(abs(self.last_bound), 1e-12)
 
     def _solve_rolling(self, apps: Sequence[ApplicationSpec],
                        cluster: ClusterSpec, prev: Optional[Allocation],
@@ -603,6 +683,543 @@ class MilpOptimizer:
 
         alloc = Allocation(app_ids, x)
         validate_allocation(alloc, apps, cluster, d=d)
+        return alloc
+
+    # ------------------------------------------------- column generation
+
+    def _solve_colgen(self, apps: Sequence[ApplicationSpec],
+                      cluster: ClusterSpec, prev: Optional[Allocation],
+                      drf_counts: Dict[str, int], s_hat_vec: np.ndarray,
+                      state=None) -> Optional[Allocation]:
+        """Dantzig-Wolfe column generation over per-app count columns (the
+        second exact-at-scale route; the one with a certified GLOBAL gap).
+
+        A column = app i running N containers, N in [n_min_i, n_max_i],
+        carrying its exact objective contribution (Eq-13 utilization
+        w_i * N), its exact Eq-11/15 fairness loss |g_i N - s_hat_i| (no
+        linearization needed: N is fixed per column), and an Eq-16 change
+        flag [N != N^{t-1}_i]. The restricted master LP picks a convex
+        combination per app subject to eligibility-CLASS capacity rows
+        (the per-slave Eq-6 system aggregated per distinct eligible-slave
+        set -- see the class-row construction below), the Eq-15 budget row
+        and the Eq-16 budget row -- every row is valid for P2, so the LP
+        value bounds the P2 optimum from above. Pricing: the reduced cost
+        of column (i, N) is convex piecewise linear + a point discount at
+        N^{t-1}_i, so its exact integer minimizer lies in {n_min, n_max,
+        floor/ceil of s_hat/g, N^{t-1}} -- one vectorized evaluation
+        prices every app per iteration. The Lagrangian bound
+        z_RMP + sum_i min_rc_i certifies the LP bound even when
+        `colgen_max_iters` stops pricing early.
+
+        The greedy solution seeds the pool (RMP feasibility + the fallback
+        incumbent, though greedy infeasibility does NOT end the solve), a
+        pool MILP picks one column per app (unpackable selections get
+        no-good cuts), and `_colgen_place` realizes the counts on slaves:
+        count-unchanged apps keep their previous rows verbatim (making the
+        Eq-16 count flag exact), changed/new apps go through stickiness,
+        FFD best-fit and the type-grouped exact packer. The certified gap
+        (upper bound - achieved objective) / upper bound is exposed as
+        `last_gap`; placement shortfalls fall back toward the greedy
+        incumbent and only widen the reported gap, never invalidate it."""
+        cfg = self.cfg
+        n, b, m = len(apps), cluster.b, cluster.m
+        app_ids = tuple(a.app_id for a in apps)
+        d = demand_matrix(apps)                       # (n, m)
+        cap = cluster.capacity_matrix().astype(np.float64)
+        g = _dominant_coeff(apps, cluster, d)
+        util_w = _util_coeff(apps, cluster, d)
+        nmin_v = np.fromiter((a.n_min for a in apps), np.int64, n)
+        nmax_v = np.fromiter((a.n_max for a in apps), np.int64, n)
+
+        prev_map = prev.as_dict() if prev is not None else {}
+        prev_n = np.full(n, -1, np.int64)             # -1 = not in prev
+        for i, a in enumerate(app_ids):
+            pr = prev_map.get(a)
+            if pr is not None:
+                prev_n[i] = int(pr.sum())
+        n_r = int((prev_n >= 0).sum())
+        budget_l = fairness_budget(cfg, m)
+        budget_r = adjust_budget(cfg, n_r) if n_r else 0
+
+        # -- capacity rows: one row per (eligibility class, resource).
+        # A container of app i can only live on slaves carrying every
+        # resource it demands; on heterogeneous clusters the cluster-wide
+        # aggregate wildly overestimates what e.g. GPU apps can draw (their
+        # CPU/RAM must come from GPU slaves too). For each distinct
+        # eligible-slave set E: every app whose own eligible set is a
+        # SUBSET of E places all containers inside E, so
+        # sum_members N_i d_{i,k} <= sum_{j in E} c_{j,k} is valid for P2
+        # -- the bound stays certified and tightens. The full-cluster
+        # class reproduces the plain aggregate rows; distinct classes are
+        # few (one per slave-flavor support combination).
+        pos_d = d > 0
+        cap_pos = cap > 0
+        elig = (pos_d.astype(np.int64)
+                @ (~cap_pos).astype(np.int64).T) == 0      # (n, b)
+        uniq_e, inv_e = np.unique(elig, axis=0, return_inverse=True)
+        row_mask_l: List[np.ndarray] = []
+        row_k_l: List[int] = []
+        row_rhs_l: List[float] = []
+        for u in range(uniq_e.shape[0]):
+            E = uniq_e[u]
+            subset_of_E = ~((uniq_e & ~E[None, :]).any(axis=1))
+            members = subset_of_E[inv_e]                   # (n,)
+            rhs_vec = cap[E].sum(axis=0) if E.any() else np.zeros(m)
+            for k in range(m):
+                if pos_d[members, k].any():
+                    row_mask_l.append(members)
+                    row_k_l.append(k)
+                    row_rhs_l.append(float(rhs_vec[k]))
+        if row_mask_l:
+            cap_mask = np.stack(row_mask_l)                # (R, n) bool
+            cap_k = np.array(row_k_l)
+            cap_rhs = np.array(row_rhs_l)
+        else:                                              # zero-demand apps
+            cap_mask = np.zeros((0, n), bool)
+            cap_k = np.zeros(0, np.int64)
+            cap_rhs = np.zeros(0)
+        n_cap = cap_mask.shape[0]
+
+        # Greedy seed: a P2-feasible point (hence feasible for the
+        # aggregate master) that seeds the pool and backs the placement
+        # fallbacks. Unlike the rolling path, a greedy infeasibility does
+        # NOT end the solve -- the exact machinery itself decides (the
+        # greedy's two-pass packer can give up on saturated clusters where
+        # a feasible point exists; an aggregate-infeasible RMP or an
+        # unrealizable pool selection still returns None below).
+        guide = GreedyOptimizer(cfg).solve(
+            apps, cluster, prev, _targets=(drf_counts, s_hat_vec),
+            state=state)
+        guide_counts = guide.x.sum(axis=1) if guide is not None else None
+
+        # -- column pool (parallel arrays; one entry = one (app, N) pair).
+        # The previous-count columns are load-bearing: without an
+        # "unchanged" column per running app the Eq-16 change row can make
+        # even the INITIAL restricted master infeasible (every pool column
+        # of a running app would count as changed).
+        seed = {(i, int(nmin_v[i])) for i in range(n)}
+        seed |= {(i, int(nmax_v[i])) for i in range(n)}
+        seed |= {(i, int(drf_counts[a])) for i, a in enumerate(app_ids)}
+        seed |= {(i, int(prev_n[i])) for i in np.flatnonzero(
+            (prev_n >= nmin_v) & (prev_n <= nmax_v))}
+        if guide_counts is not None:
+            seed |= {(i, int(c)) for i, c in enumerate(guide_counts)}
+        pool = sorted(seed)                # deterministic column order
+        seen = set(pool)
+        col_app = np.fromiter((i for i, _ in pool), np.int64, len(pool))
+        col_n = np.fromiter((c for _, c in pool), np.int64, len(pool))
+
+        def _col_rows(ca: np.ndarray, cn: np.ndarray) -> np.ndarray:
+            """Dense (n_cap + 1 [+ 1], P) A_ub block: the class capacity
+            rows, the Eq-15 loss row and (with a previous allocation) the
+            Eq-16 change row."""
+            rows = [cap_mask[:, ca] * (d[ca][:, cap_k].T * cn[None, :]),
+                    np.abs(g[ca] * cn - s_hat_vec[ca])[None, :]]
+            if n_r:
+                rows.append(((prev_n[ca] >= 0) & (cn != prev_n[ca]))
+                            .astype(np.float64)[None, :])
+            return np.concatenate(rows, axis=0)
+
+        ub_rhs = np.concatenate([cap_rhs, [budget_l]]
+                                + ([[float(budget_r)]] if n_r else []))
+        util_bound = None                  # tightest certified upper bound
+        iters = 0
+        for _ in range(max(1, cfg.colgen_max_iters)):
+            iters += 1
+            P = col_n.size
+            c_lp = -(util_w[col_app] * col_n)
+            A_ub = _col_rows(col_app, col_n)
+            A_eq = _sp.coo_array(
+                (np.ones(P), (col_app, np.arange(P))), shape=(n, P)).tocsr()
+            res = linprog(c_lp, A_ub=A_ub, b_ub=ub_rhs, A_eq=A_eq,
+                          b_eq=np.ones(n), bounds=(0, None), method="highs")
+            if not res.success or res.x is None:
+                # Infeasible RMP. With a (P2-feasible) guide in the pool
+                # that means a degenerate instance (e.g. the greedy blew
+                # the Eq-15 budget because even the DRF point does) -- keep
+                # the guide, certify nothing. Without one the aggregate
+                # relaxation itself is infeasible, so P2 is too: keep
+                # previous allocations (paper semantics).
+                self.colgen_iters += iters
+                self.colgen_columns = int(col_n.size)
+                if guide is None:
+                    return None
+                return self._colgen_finish(apps, cluster, guide, None,
+                                           util_w, d)
+            z_rmp = float(res.fun)
+            y_ub = np.asarray(res.ineqlin.marginals, np.float64)
+            sigma = np.asarray(res.eqlin.marginals, np.float64)
+            pi_cap, pi_f = y_ub[:n_cap], float(y_ub[n_cap])
+            pi_r = float(y_ub[n_cap + 1]) if n_r else 0.0
+
+            # -- pricing (timed: the phase breakdown's colgen_pricing).
+            t0 = _time.perf_counter()
+            a_lin = -util_w - (cap_mask * d[:, cap_k].T
+                               * pi_cap[:, None]).sum(axis=0)  # slope in N
+            with np.errstate(divide="ignore", invalid="ignore"):
+                bp = np.where(g > 0, s_hat_vec / np.maximum(g, 1e-300),
+                              nmin_v.astype(np.float64))
+            # pre-clip keeps floor/ceil inside int64 range for tiny g
+            bp = np.clip(bp, 0.0, nmax_v.astype(np.float64) + 1.0)
+            cand = np.stack([
+                nmin_v, nmax_v,
+                np.floor(bp).astype(np.int64), np.ceil(bp).astype(np.int64),
+                np.where(prev_n >= 0, prev_n, nmin_v)], axis=1)
+            cand = np.clip(cand, nmin_v[:, None], nmax_v[:, None])
+            loss_c = np.abs(g[:, None] * cand - s_hat_vec[:, None])
+            chg_c = (prev_n[:, None] >= 0) & (cand != prev_n[:, None])
+            rc = (a_lin[:, None] * cand - pi_f * loss_c
+                  - pi_r * chg_c - sigma[:, None])
+            best = np.argmin(rc, axis=1)
+            min_rc = rc[np.arange(n), best]
+            # Lagrangian bound: z_LP >= z_RMP + sum_i min(0, min_rc_i)
+            # (each convexity block contributes exactly one unit of weight;
+            # the candidate set provably contains the true minimizer).
+            bound = -(z_rmp + float(np.minimum(min_rc, 0.0).sum()))
+            util_bound = bound if util_bound is None \
+                else min(util_bound, bound)
+            improving = np.flatnonzero(min_rc < -1e-7)
+            self.pricing_s += _time.perf_counter() - t0
+            if not improving.size:
+                # Converged: `bound` (with its tiny within-tolerance
+                # Lagrangian correction) is already the rigorous value.
+                break
+            new = [(int(i), int(cand[i, best[i]])) for i in improving
+                   if (int(i), int(cand[i, best[i]])) not in seen]
+            if not new or col_n.size + len(new) > cfg.colgen_pool_max:
+                break
+            seen.update(new)
+            col_app = np.concatenate(
+                [col_app, np.fromiter((i for i, _ in new), np.int64,
+                                      len(new))])
+            col_n = np.concatenate(
+                [col_n, np.fromiter((c for _, c in new), np.int64,
+                                    len(new))])
+        self.colgen_iters += iters
+
+        # -- enrich the pool for the integer solve. Pricing generates only
+        # the columns the LP needs; the integer optimum may sit at
+        # intermediate counts the LP never priced. When the FULL level
+        # enumeration fits the pool cap (bounded n_max ranges -- the
+        # common cluster case) the integer solve runs over every column
+        # and is exact for the aggregate master; otherwise widen a +-2
+        # neighborhood around every generated column. Either way the
+        # certified bound comes from the pricing loop above and is
+        # unaffected.
+        levels = nmax_v - nmin_v + 1
+        if int(levels.sum()) <= cfg.colgen_pool_max:
+            col_app = np.repeat(np.arange(n), levels)
+            offs = np.arange(int(levels.sum())) \
+                - np.repeat(np.cumsum(levels) - levels, levels)
+            col_n = nmin_v[col_app] + offs
+        else:
+            nb_app = np.repeat(col_app, 4)
+            nb_n = (col_n[:, None]
+                    + np.array([-2, -1, 1, 2])[None, :]).ravel()
+            ok = (nb_n >= nmin_v[nb_app]) & (nb_n <= nmax_v[nb_app])
+            extra = sorted({(int(i), int(c)) for i, c in
+                            zip(nb_app[ok], nb_n[ok])} - seen)
+            # Never truncate the generated pool itself -- the guide's
+            # columns keep the integer solve feasible.
+            pool = sorted(seen) \
+                + extra[:max(0, cfg.colgen_pool_max - len(seen))]
+            col_app = np.fromiter((i for i, _ in pool), np.int64, len(pool))
+            col_n = np.fromiter((c for _, c in pool), np.int64, len(pool))
+        self.colgen_columns = int(col_n.size)
+
+        # -- final integer solve over the generated pool: pick exactly one
+        # column per app (multiple-choice knapsack over the master rows).
+        # A selection whose counts provably cannot pack per-slave is cut
+        # off (no-good cut on its exact column set) and re-selected.
+        P = col_n.size
+        c_ip = -(util_w[col_app] * col_n)
+        A_ub = _col_rows(col_app, col_n)
+        A_eq = _sp.coo_array(
+            (np.ones(P), (col_app, np.arange(P))), shape=(n, P)).tocsc()
+        A_eq.indices = A_eq.indices.astype(np.int32)
+        A_eq.indptr = A_eq.indptr.astype(np.int32)
+        cons = [LinearConstraint(A_ub, -np.inf, ub_rhs),
+                LinearConstraint(A_eq, 1.0, 1.0)]
+        best: Optional[Tuple[float, Allocation]] = None
+        for _ in range(max(1, cfg.colgen_pack_rounds)):
+            res = milp(c=c_ip, constraints=cons,
+                       bounds=_Bounds(np.zeros(P), np.ones(P)),
+                       integrality=np.ones(P),
+                       options={"time_limit": cfg.time_limit_s,
+                                "mip_rel_gap": cfg.mip_rel_gap})
+            if res.x is not None:
+                # One column per app = the app's highest-weight pool entry
+                # (robust to HiGHS's integrality tolerance).
+                order = np.argsort(res.x, kind="stable")
+                choice = np.empty(n, np.int64)
+                choice[col_app[order]] = order  # last write = max weight
+                counts = col_n[choice]
+            elif guide_counts is not None:
+                counts, choice = guide_counts, None
+            else:
+                break                   # pool IP infeasible, no incumbent
+
+            alloc, realized = self._colgen_place(
+                apps, app_ids, d, cap, counts, prev_map, prev_n,
+                nmin_v, nmax_v, g, s_hat_vec, budget_l, util_w, guide)
+            if alloc is not None:
+                obj = float(util_w @ alloc.x.sum(axis=1))
+                if best is None or obj > best[0] + 1e-12:
+                    best = (obj, alloc)
+            if realized or choice is None:
+                break
+            cut = np.zeros((1, P))
+            cut[0, choice] = 1.0
+            cons = cons + [LinearConstraint(cut, -np.inf, float(n - 1))]
+        if best is None:
+            # No realizable selection and no greedy incumbent: keep
+            # previous allocations (paper semantics).
+            return None
+        return self._colgen_finish(apps, cluster, best[1], util_bound,
+                                   util_w, d)
+
+    def _colgen_place(self, apps, app_ids, d, cap, counts, prev_map, prev_n,
+                      nmin_v, nmax_v, g, s_hat_vec, budget_l, util_w,
+                      guide: Optional[Allocation],
+                      ) -> Tuple[Optional[Allocation], bool]:
+        """Aggregate counts -> per-slave placement; returns (allocation,
+        realized) with realized=True iff every app got exactly its selected
+        count (allocation may be None when the counts are unusable and no
+        greedy incumbent exists). Count-unchanged apps keep their previous
+        rows VERBATIM
+        (jointly feasible: they are a subset of the previous allocation;
+        this is what makes the master's count-change flag equal P2's
+        row-change r_i). Changed and new apps keep as much of their
+        previous row as fits (stickiness), then two-pass best-fit in
+        first-fit-decreasing order (everyone to n_min before anyone tops
+        up; big per-container items first -- a CPU-saturated selection
+        needs exact fills). If the heuristic falls short, the type-grouped
+        packer (`_pack_changed`) realizes the counts exactly where its
+        size limits allow. Falling below n_min or past the Eq-15 budget
+        falls back to the greedy incumbent (the achieved objective drops;
+        the certified bound stays valid)."""
+        n, b = d.shape[0], cap.shape[0]
+        x = np.zeros((n, b), np.int64)
+        free = cap.copy()
+        inv_cap = 1.0 / np.maximum(cap, 1e-9)
+        unchanged_mask = (prev_n >= 0) & (counts == prev_n)
+        for i in np.flatnonzero(unchanged_mask):
+            row = np.asarray(prev_map[app_ids[int(i)]], np.int64)
+            x[i] = row
+            free -= row[:, None].astype(np.float64) * d[i][None, :]
+        free_unchanged = free.copy()       # residual for the exact packer
+        for i in np.flatnonzero(~unchanged_mask):
+            pr = prev_map.get(app_ids[int(i)])
+            if pr is None or counts[i] <= 0:
+                continue
+            di = d[i]
+            pos = di > 0
+            if pos.any():
+                fit = np.floor((free[:, pos] + 1e-9) / di[pos]).min(axis=1)
+                fit = np.maximum(fit, 0.0).astype(np.int64)
+            else:
+                fit = np.full(b, int(counts[i]), np.int64)
+            keep = np.minimum(np.asarray(pr, np.int64), fit)
+            csum = np.minimum(np.cumsum(keep), int(counts[i]))
+            keep = np.diff(np.concatenate(([0], csum)))
+            if keep.any():
+                x[i] = keep
+                free -= keep[:, None] * di[None, :]
+        sums = x.sum(axis=1)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            dom = np.where(cap.max(axis=0) > 0,
+                           d / np.maximum(cap.max(axis=0), 1e-300),
+                           0.0).max(axis=1)
+        ffd = np.lexsort((np.arange(n), -dom))
+        for i in ffd[sums[ffd] < nmin_v[ffd]]:
+            i = int(i)
+            _best_fit_place_batch(x, free, d, inv_cap, i, int(nmin_v[i]))
+            sums[i] = int(x[i].sum())
+        for i in ffd[sums[ffd] < counts[ffd]]:
+            i = int(i)
+            _best_fit_place_batch(x, free, d, inv_cap, i, int(counts[i]))
+            sums[i] = int(x[i].sum())
+        realized = bool((sums == counts).all())
+        if not realized and self.cfg.colgen_pack_vars:
+            c_idx = np.flatnonzero(~unchanged_mask)
+            if c_idx.size:
+                xr, packed = self._pack_changed(
+                    d[c_idx], np.maximum(free_unchanged, 0.0),
+                    counts[c_idx], nmin_v[c_idx])
+                if xr is not None and (
+                        packed
+                        or float(util_w[c_idx] @ xr.sum(axis=1))
+                        > float(util_w[c_idx] @ x[c_idx].sum(axis=1))):
+                    x[c_idx] = xr
+                    sums = x.sum(axis=1)
+                    realized = packed
+        if (sums < nmin_v).any():
+            # Fragmentation below a floor: only the guide (None without
+            # one -- the caller then reports infeasible) remains usable.
+            return guide, False
+        if float(np.abs(g * sums - s_hat_vec).sum()) > budget_l + 1e-6:
+            # A shortfall blew Eq-15 (a realized selection cannot: the
+            # pool IP enforced the loss row). The guide keeps its greedy
+            # semantics even on degenerate instances where it too violates.
+            return guide, False
+        return Allocation(tuple(app_ids), x), realized
+
+    def _pack_changed(self, d_c: np.ndarray, cap_res: np.ndarray,
+                      counts_c: np.ndarray, nmin_c: np.ndarray,
+                      ) -> Tuple[Optional[np.ndarray], bool]:
+        """Type-grouped packing of the changed apps' counts into the
+        residual capacity. Apps with IDENTICAL demand vectors are
+        interchangeable at placement time, so the hard packing runs over
+        the T distinct demand types (T << n on real clusters: a 2000-app
+        instance typically has a few dozen types) and each type's
+        per-slave placement is split back over its members. Exact
+        feasibility MILP while T * b <= colgen_pack_vars; packing LP +
+        round-down + best-fit repair within 10x that (may fall short);
+        (None, False) beyond. Returns (x_changed, realized)."""
+        nc, _ = d_c.shape
+        b = cap_res.shape[0]
+        uniq, inv = np.unique(d_c, axis=0, return_inverse=True)
+        T = uniq.shape[0]
+        tcounts = np.rint(np.bincount(
+            inv, weights=counts_c.astype(np.float64))).astype(np.int64)
+        xt = None
+        if T * b <= self.cfg.colgen_pack_vars:
+            xt = self._exact_pack(uniq, cap_res, tcounts)
+        if xt is None and T * b <= 10 * self.cfg.colgen_pack_vars:
+            xt = self._lp_pack(uniq, cap_res, tcounts)
+        if xt is None:
+            return None, False
+        ach_t = xt.sum(axis=1)
+        realized = bool((ach_t == tcounts).all())
+
+        # Split each type's placements over its member apps; a type-level
+        # shortfall lands on the members with the most slack above n_min.
+        x_c = np.zeros((nc, b), np.int64)
+        for t in range(T):
+            members = np.flatnonzero(inv == t)
+            targets = counts_c[members].astype(np.int64).copy()
+            short = int(tcounts[t] - ach_t[t])
+            if short > 0:
+                slack = targets - nmin_c[members]
+                order = np.argsort(-slack, kind="stable")
+                for mi in order:
+                    if short <= 0:
+                        break
+                    cut = int(min(short, max(int(slack[mi]), 0)))
+                    targets[mi] -= cut
+                    short -= cut
+                for mi in order[::-1]:
+                    if short <= 0:
+                        break
+                    cut = int(min(short, int(targets[mi])))
+                    targets[mi] -= cut
+                    short -= cut
+            mi = 0
+            for j in np.flatnonzero(xt[t]):
+                q = int(xt[t, j])
+                while q > 0 and mi < members.size:
+                    take = min(q, int(targets[mi]))
+                    if take > 0:
+                        x_c[members[mi], j] += take
+                        targets[mi] -= take
+                        q -= take
+                    if targets[mi] == 0:
+                        mi += 1
+        return x_c, realized
+
+    @staticmethod
+    def _pack_matrix(d_c: np.ndarray, b: int):
+        """COO pieces of the packing system: per-(slave, used-resource)
+        capacity rows over the nc * b placement grid, then nc row-sum
+        rows. Shared by the exact and LP packers."""
+        nc = d_c.shape[0]
+        nx = nc * b
+        ks = np.flatnonzero((d_c > 0).any(axis=0))
+        nk = ks.size
+        rows_l: List[np.ndarray] = []
+        cols_l: List[np.ndarray] = []
+        vals_l: List[np.ndarray] = []
+        if nk:
+            jj, qq, ii = np.meshgrid(np.arange(b), np.arange(nk),
+                                     np.arange(nc), indexing="ij")
+            v = d_c[ii.ravel(), ks[qq.ravel()]]
+            nz = v != 0
+            rows_l.append((jj.ravel() * nk + qq.ravel())[nz])
+            cols_l.append((ii.ravel() * b + jj.ravel())[nz])
+            vals_l.append(v[nz])
+        rows_l.append(b * nk + np.repeat(np.arange(nc), b))
+        cols_l.append(np.arange(nx))
+        vals_l.append(np.ones(nx))
+        A = _sp.coo_array(
+            (np.concatenate(vals_l),
+             (np.concatenate(rows_l), np.concatenate(cols_l))),
+            shape=(b * nk + nc, nx)).tocsc()
+        A.indices = A.indices.astype(np.int32)
+        A.indptr = A.indptr.astype(np.int32)
+        return A, ks, nk
+
+    def _exact_pack(self, d_c: np.ndarray, cap_res: np.ndarray,
+                    counts_c: np.ndarray) -> Optional[np.ndarray]:
+        """Row-sum-fixed packing feasibility MILP: place exactly
+        `counts_c[i]` containers of each demand type onto slaves with
+        residual capacity `cap_res`. Far cheaper than the P2 grid (no
+        fairness/adjustment machinery, zero objective); returns the
+        (n_c, b) placement or None when the counts provably cannot pack
+        (or the time limit bites)."""
+        nc = d_c.shape[0]
+        b = cap_res.shape[0]
+        nx = nc * b
+        A, ks, nk = self._pack_matrix(d_c, b)
+        cc = counts_c.astype(np.float64)
+        lb = np.concatenate([np.full(b * nk, -np.inf), cc])
+        ub = np.concatenate([cap_res[:, ks].ravel(), cc])
+        res = milp(c=np.zeros(nx),
+                   constraints=LinearConstraint(A, lb, ub),
+                   bounds=_Bounds(np.zeros(nx), np.repeat(cc, b)),
+                   integrality=np.ones(nx),
+                   options={"time_limit": self.cfg.time_limit_s})
+        if not res.success or res.x is None:
+            return None
+        return np.rint(res.x).astype(np.int64).reshape(nc, b)
+
+    def _lp_pack(self, d_c: np.ndarray, cap_res: np.ndarray,
+                 counts_c: np.ndarray) -> Optional[np.ndarray]:
+        """Packing LP + round-down + best-fit repair: the at-scale tier of
+        the packer (continuous relaxation of `_exact_pack`, so it scales
+        an order of magnitude further). The repaired placement may fall
+        short of the counts; the caller treats that as unrealized."""
+        nc = d_c.shape[0]
+        b = cap_res.shape[0]
+        A, ks, nk = self._pack_matrix(d_c, b)
+        cc = counts_c.astype(np.float64)
+        lb = np.concatenate([np.full(b * nk, -np.inf), cc])
+        ub = np.concatenate([cap_res[:, ks].ravel(), cc])
+        res = linprog(np.zeros(nc * b),
+                      A_ub=A[:b * nk], b_ub=ub[:b * nk],
+                      A_eq=A[b * nk:], b_eq=cc,
+                      bounds=(0, None), method="highs")
+        if not res.success or res.x is None:
+            return None
+        x = np.floor(res.x.reshape(nc, b) + 1e-9).astype(np.int64)
+        free = cap_res - x.T.astype(np.float64) @ d_c
+        inv_cap = 1.0 / np.maximum(cap_res, 1e-9)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            dom = np.where(cap_res.max(axis=0) > 0,
+                           d_c / np.maximum(cap_res.max(axis=0), 1e-300),
+                           0.0).max(axis=1)
+        for t in np.lexsort((np.arange(nc), -dom)):
+            t = int(t)
+            if int(x[t].sum()) < int(counts_c[t]):
+                _best_fit_place_batch(x, free, d_c, inv_cap, t,
+                                      int(counts_c[t]))
+        return x
+
+    def _colgen_finish(self, apps, cluster, alloc: Allocation,
+                       util_bound: Optional[float], util_w: np.ndarray,
+                       d: np.ndarray) -> Allocation:
+        """Validate + record the certified-gap report of a colgen solve."""
+        validate_allocation(alloc, apps, cluster, d=d)
+        self._record_gap(util_bound, float(util_w @ alloc.x.sum(axis=1)))
         return alloc
 
 
@@ -1162,6 +1779,18 @@ class AutoOptimizer:
         return self._greedy.refill_s + \
             (self._milp.refill_s if self._milp is not None else 0.0)
 
+    @property
+    def pricing_s(self) -> float:
+        return self._milp.pricing_s if self._milp is not None else 0.0
+
+    @property
+    def last_gap(self) -> Optional[float]:
+        return getattr(self._last_solver, "last_gap", None)
+
+    @property
+    def last_bound(self) -> Optional[float]:
+        return getattr(self._last_solver, "last_bound", None)
+
     def select(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec):
         """The solver that `solve` would dispatch to for this instance."""
         if self._milp is not None and \
@@ -1181,6 +1810,11 @@ class AutoOptimizer:
 def make_optimizer(kind: str, cfg: OptimizerConfig = OptimizerConfig()):
     if kind == "milp":
         return MilpOptimizer(cfg)
+    if kind == "colgen":
+        # The column-generation exact route: a MilpOptimizer with the
+        # colgen path forced on (certified global gap on every solve).
+        return MilpOptimizer(dataclasses.replace(cfg,
+                                                 column_generation=True))
     if kind == "greedy":
         return GreedyOptimizer(cfg)
     if kind == "auto":

@@ -185,8 +185,16 @@ def _parse_philly(rows: List[List[str]], cfg: ReplayConfig,
         n_gpus = int(_f(row, cols["num_gpus"]))
         if duration <= 0 or n_gpus <= 0:
             continue                       # failed / zero-GPU rows
-        n_cpus = _f(row, cols.get("num_cpus"), n_gpus * cfg.cpus_per_gpu)
-        mem = _f(row, cols.get("mem_gb"), n_gpus * cfg.ram_per_gpu_gb)
+        # Explicit zero (or negative) num_cpus/mem_gb cells fall back to
+        # the per-GPU defaults exactly like missing/empty cells: a
+        # zero-CPU/zero-RAM container demand would replay apps that
+        # consume only GPU capacity and skew utilization.
+        n_cpus = _f(row, cols.get("num_cpus"), 0.0)
+        if n_cpus <= 0:
+            n_cpus = n_gpus * cfg.cpus_per_gpu
+        mem = _f(row, cols.get("mem_gb"), 0.0)
+        if mem <= 0:
+            mem = n_gpus * cfg.ram_per_gpu_gb
         demand = ResourceVector.of(n_cpus / n_gpus, 1.0, mem / n_gpus)
         n_min, n_max = _bounds(n_gpus, cfg)
         out.append(_mk_app(
@@ -210,8 +218,10 @@ def _parse_alibaba(rows: List[List[str]], cfg: ReplayConfig,
     for row in data:
         if len(row) < len(ALIBABA_COLUMNS):
             continue
+        # Only `Terminated` tasks replay (docstring contract): an EMPTY
+        # status field is unknown-outcome, not terminated, so it skips too.
         status = row[idx["status"]].strip().lower()
-        if status and status != "terminated":
+        if status != "terminated":
             continue
         start = _f(row, idx["start_time"])
         end = _f(row, idx["end_time"])
@@ -237,20 +247,35 @@ def _parse_generic(rows: List[List[str]], cfg: ReplayConfig,
                    ) -> List[WorkloadApp]:
     cols = _header_map(rows, GENERIC_COLUMNS, "generic")
     out: List[WorkloadApp] = []
-    for row in rows[1:]:
-        duration = _f(row, cols["duration_s"])
-        if duration <= 0:
-            continue
-        n_min = int(_f(row, cols["n_min"], 1))
-        n_max = int(_f(row, cols["n_max"], 1))
-        out.append(_mk_app(
-            app_id=row[cols["app_id"]].strip(),
-            executor="replay",
-            demand=ResourceVector.of(_f(row, cols["cpus"]),
-                                     _f(row, cols["gpus"]),
-                                     _f(row, cols["ram_gb"])),
-            weight=max(1, int(_f(row, cols["weight"], cfg.weight))),
-            n_min=max(1, n_min), n_max=max(1, n_max),
-            duration_s=duration,
-            submit_time=_f(row, cols["submit_time"])))
+    for rownum, row in enumerate(rows[1:], start=2):
+        try:
+            duration = _f(row, cols["duration_s"])
+            if duration <= 0:
+                continue
+            # Clamp a malformed n_min > n_max pair the same way `_bounds`
+            # does for the philly/alibaba request mapping, instead of
+            # letting ApplicationSpec blow up the whole trace on one row.
+            n_min = max(1, int(_f(row, cols["n_min"], 1)))
+            n_max = max(1, int(_f(row, cols["n_max"], 1)))
+            out.append(_mk_app(
+                app_id=row[cols["app_id"]].strip(),
+                executor="replay",
+                demand=ResourceVector.of(_f(row, cols["cpus"]),
+                                         _f(row, cols["gpus"]),
+                                         _f(row, cols["ram_gb"])),
+                weight=max(1, int(_f(row, cols["weight"], cfg.weight))),
+                n_min=min(n_min, n_max), n_max=n_max,
+                duration_s=duration,
+                submit_time=_f(row, cols["submit_time"])))
+        except (ValueError, IndexError) as err:
+            # A row that is still invalid after clamping (negative demand,
+            # unparsable cell, truncated row) names itself instead of
+            # surfacing a context-free error from deep inside the spec
+            # constructor or a bare IndexError from the column lookup.
+            # The row number counts NON-BLANK rows (header = row 1):
+            # `_read_rows` drops blank lines, so the echoed contents are
+            # the ground truth when a trace mixes in empty lines.
+            raise ValueError(
+                f"generic: row {rownum} (non-blank): {err} "
+                f"(row={row!r})") from err
     return out

@@ -144,6 +144,12 @@ class ReallocationResult:
     # the runtime must rebuild every app's count from `allocation` (the
     # unbounded-churn baselines leave it None on reallocation events).
     changed_counts: Optional[Dict[str, int]] = None
+    # Certified optimality gap of the solve that produced this allocation
+    # (exact solver paths that can prove a bound: column generation's LP
+    # bound, the monolithic MILP's dual bound). None = the path taken
+    # certifies nothing (greedy heuristic, rolling horizon, keep-previous
+    # fallbacks). 0.0 = proven optimal for P2's utilization objective.
+    optimality_gap: Optional[float] = None
 
 
 @runtime_checkable

@@ -60,8 +60,8 @@ class MetricsLogger:
     def log_phase_breakdown(self, breakdown: Dict[str, float],
                             t: Optional[float] = None, **extra: Any) -> None:
         """Record a scheduler per-phase timing breakdown (DormMaster.
-        phase_breakdown(): cumulative solve / drf_refill / enforce /
-        metrics seconds) as a kind="phase" row."""
+        phase_breakdown(): cumulative solve / drf_refill / colgen_pricing /
+        enforce / metrics seconds) as a kind="phase" row."""
         row: Dict[str, Any] = dict(breakdown)
         if t is not None:
             row["t"] = t

@@ -106,6 +106,73 @@ def test_alibaba_empty_trace_raises_value_error():
         replay_trace([], fmt="philly")
 
 
+# ------------------------------------------------- parser-hardening fixes
+
+def test_generic_nmin_above_nmax_clamps_instead_of_crashing():
+    """Regression: one malformed n_min > n_max row used to crash the WHOLE
+    trace with a context-free ValueError from ApplicationSpec; it now
+    clamps via the same min(n_min, n_max) rule as the philly/alibaba
+    `_bounds` mapping and the rest of the trace replays."""
+    trace = ("app_id,submit_time,duration_s,cpus,gpus,ram_gb,n_min,n_max,"
+             "weight\n"
+             "bad,0,100,2,0,4,5,2,1\n"       # n_min=5 > n_max=2
+             "good,10,100,2,0,4,1,4,1\n")
+    apps = replay_trace(trace, fmt="generic")
+    assert sorted(w.spec.app_id for w in apps) == ["bad", "good"]
+    (bad,) = [w.spec for w in apps if w.spec.app_id == "bad"]
+    assert (bad.n_min, bad.n_max) == (2, 2)
+
+
+def test_generic_still_invalid_row_raises_with_row_context():
+    """A row that is invalid even after clamping (negative demand) must
+    name itself -- row number and contents -- not surface a bare spec
+    error."""
+    trace = ("app_id,submit_time,duration_s,cpus,gpus,ram_gb,n_min,n_max,"
+             "weight\n"
+             "ok,0,100,2,0,4,1,2,1\n"
+             "neg,5,100,-3,0,4,1,2,1\n")
+    with pytest.raises(ValueError, match=r"generic: row 3.*neg"):
+        replay_trace(trace, fmt="generic")
+
+
+def test_generic_truncated_row_raises_with_row_context():
+    """A truncated row (fewer cells than the header) must raise the same
+    contextual ValueError, not a bare IndexError from the column lookup
+    (app_id mapped to the last column makes the lookup fall off the row)."""
+    trace = ("submit_time,duration_s,cpus,gpus,ram_gb,n_min,n_max,weight,"
+             "app_id\n"
+             "5,100,2,0,4,1,2\n")
+    with pytest.raises(ValueError, match=r"generic: row 2"):
+        replay_trace(trace, fmt="generic")
+
+
+def test_alibaba_empty_status_rows_skip():
+    """Regression: rows with an EMPTY status field used to replay even
+    though the docstring promises only `Terminated` tasks do."""
+    trace = ("t1,2,j1,1,Terminated,100,200,100,0.5\n"
+             "t2,2,j1,1,,100,200,100,0.5\n"          # empty status
+             "t3,2,j1,1,  ,100,200,100,0.5\n")       # whitespace status
+    apps = replay_trace(trace, fmt="alibaba")
+    assert [w.spec.app_id for w in apps] == ["j1/t1"]
+
+
+def test_philly_explicit_zero_cpu_mem_cells_fall_back_to_defaults():
+    """Regression: explicit num_cpus=0 / mem_gb=0 cells used to produce
+    zero-CPU/zero-RAM container demands (the `_f` default only covered
+    missing or empty cells), so replayed apps consumed only GPU capacity;
+    they now fall back to the per-GPU defaults exactly like empty cells."""
+    cfg = ReplayConfig(cpus_per_gpu=4.0, ram_per_gpu_gb=32.0)
+    trace = ("jobid,submitted_time,run_time,num_gpus,num_cpus,mem_gb\n"
+             "zero,0,3600,2,0,0\n"
+             "empty,10,3600,2,,\n"
+             "real,20,3600,2,6,50\n")
+    apps = {w.spec.app_id: w.spec
+            for w in replay_trace(trace, fmt="philly", cfg=cfg)}
+    assert apps["zero"].demand.values == (4.0, 1.0, 32.0)
+    assert apps["zero"].demand.values == apps["empty"].demand.values
+    assert apps["real"].demand.values == (3.0, 1.0, 25.0)
+
+
 def test_alibaba_demand_mapping_and_elasticity_bounds():
     cfg = ReplayConfig(min_fraction=0.5, ram_unit_gb=64.0)
     trace = "t1,8,j1,1,Terminated,0,1000,250,0.25\n"
