@@ -3,9 +3,10 @@ x 2000 jobs (closes the measured-bench half of the ROADMAP's "replay-driven
 XL benchmarks" item).
 
 Two measurements over ONE replayed Philly-schema trace (synthetic by
-default -- fractional per-container demands, so the delta fast path
-declines and the non-delta solve carries the run, exactly like
-tests/test_replay_xl.py -- or a real log via --trace):
+default -- fractional per-container demands, served by the delta fast
+path since the free-capacity vector is canonicalized on every solve
+path, exactly like tests/test_replay_xl.py -- or a real log via
+--trace):
 
   * runtime replay -- the full event-driven simulation through
     `ClusterRuntime` with bench_scale-style timing (PolicyTimer medians,
@@ -148,7 +149,9 @@ def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
         ("replay.completed", replay_stats["completed"], "count",
          f"of {len(wl)}"),
         ("replay.full_solves", replay_stats["full_solves"], "count",
-         "fractional demands keep the delta path off"),
+         "first event + churny events re-solve in full"),
+        ("replay.delta_solves", replay_stats["delta_solves"], "count",
+         "fractional demands ride the canonicalized delta path"),
         ("replay.container_churn", replay_stats["container_churn"],
          "count", ""),
         ("replay.colgen_solve_s", colgen_stats["solve_s"], "s",

@@ -1,24 +1,33 @@
 """Large-scale simulation benchmark: Dorm on heterogeneous clusters under
 diurnal/bursty traces, driven through the shared `repro.core.runtime` loop.
 
-THREE measured runs of the SAME trace, all in ONE process (never compare
+FOUR measured runs of the SAME trace, all in ONE process (never compare
 absolute milliseconds across runs/machines -- only in-process ratios):
 
   * soa incremental    -- PR-3 structure-of-arrays engine + delta solve
   * legacy incremental -- PR-2 dict-of-objects engine (the golden baseline
                           kept behind `OptimizerConfig(soa=False)`)
   * soa full re-solve  -- the seed's full per-event re-solve semantics
+  * jax incremental    -- the SoA engine on `OptimizerConfig(backend=
+                          "jax")` (jit/lax scheduler kernels; skipped when
+                          jax is not importable)
 
-The three allocation timelines must be bit-exact (the SoA engine and the
-delta path are pure optimizations); the per-event policy-time ratios are:
+All allocation timelines must be bit-exact (the SoA engine, the delta
+path and the jax backend are pure optimizations); the per-event
+policy-time ratios are:
 
   * `incremental_speedup` = full / soa-incremental
   * `soa_speedup`         = legacy-incremental / soa-incremental
+  * `jax_median_ratio`    = jax-incremental / soa-incremental (<= 1 means
+                            jax wins; first-touch jit compiles are booked
+                            under `backend_compile` and excluded from the
+                            per-event numbers by `PolicyTimer`)
 
-Both are reported from per-event MEDIANS (robust to OS jitter; means are
-recorded too). Results go to stdout as CSV rows and to `BENCH_scale.json`
-(machine-readable perf trajectory across PRs), including the per-phase
-breakdown (DRF refill vs solve vs enforce vs metrics).
+Ratios are reported from per-event MEDIANS (robust to OS jitter; means
+are recorded too). Results go to stdout as CSV rows and to
+`BENCH_scale.json` (machine-readable perf trajectory across PRs),
+including the per-phase breakdown (DRF refill vs solve vs enforce vs
+metrics vs backend compile).
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_scale \
           [--slaves 1000 --apps 500 --seed 0 --horizon-h 24 \
@@ -27,8 +36,10 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_scale \
 or as part of the harness:  PYTHONPATH=src python -m benchmarks.run scale
 
 `--xl` additionally runs the 5000 slaves x 2000 apps configuration
-(SoA incremental only -- the point is that it completes end-to-end on CPU)
-and records it under the "xl" key of the JSON report.
+(SoA incremental, on the numpy AND jax backends -- the point is that both
+complete end-to-end on CPU) and records them under the "xl" / "xl_jax"
+keys of the JSON report, with the post-compile median ratio under
+"xl_jax_median_ratio".
 """
 from __future__ import annotations
 
@@ -38,19 +49,21 @@ import time
 
 from repro.core import (ClusterSimulator, DormMaster, MilpOptimizer,
                         OptimizerConfig, PolicyTimer, Reallocated,
-                        RecordingProtocol, TraceConfig, container_churn,
-                        generate_trace, heterogeneous_cluster,
-                        resource_utilization)
+                        RecordingProtocol, TraceConfig, backend_available,
+                        container_churn, generate_trace,
+                        heterogeneous_cluster, resource_utilization)
 
 from .common import emit
 
 
 def _run_once(cluster, wl, incremental: bool, horizon_s: float,
               batch_window_s: float, theta1: float, theta2: float,
-              auto_switch_vars: int, soa: bool = True):
+              auto_switch_vars: int, soa: bool = True,
+              backend: str = "numpy"):
     cfg = OptimizerConfig(theta1, theta2, warm_start=True,
                           auto_switch_vars=auto_switch_vars,
-                          incremental=incremental, soa=soa)
+                          incremental=incremental, soa=soa,
+                          backend=backend)
     master = DormMaster(cluster, "auto", cfg, protocol=RecordingProtocol())
     timer = PolicyTimer(master)
     sim = ClusterSimulator(timer, wl, adjustment_cost_s=60.0,
@@ -70,7 +83,9 @@ def _run_once(cluster, wl, incremental: bool, horizon_s: float,
     greedy = master.optimizer._greedy
     return {
         "engine": "soa" if soa else "legacy",
+        "backend": backend,
         "incremental": incremental,
+        "backend_compile_s": timer.compile_s,
         "wall_s": wall,
         "events": len(res.samples),
         "events_per_s": len(res.samples) / max(wall, 1e-9),
@@ -168,13 +183,23 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
     inc, res_inc = _run_once(cluster, wl, True, *args, soa=True)
     leg, res_leg = _run_once(cluster, wl, True, *args, soa=False)
     full, res_full = _run_once(cluster, wl, False, *args, soa=True)
+    have_jax = backend_available("jax")
+    jx = res_jx = None
+    if have_jax:
+        jx, res_jx = _run_once(cluster, wl, True, *args, soa=True,
+                               backend="jax")
     bit_exact = _same_timeline(res_inc, res_full)
     bit_exact_engines = _same_timeline(res_inc, res_leg,
                                        exact_metrics=False)
+    bit_exact_jax = (_same_timeline(res_inc, res_jx)
+                     if res_jx is not None else None)
     speedup = full["per_event_policy_ms_median"] / max(
         inc["per_event_policy_ms_median"], 1e-9)
     soa_speedup = leg["per_event_policy_ms_median"] / max(
         inc["per_event_policy_ms_median"], 1e-9)
+    jax_ratio = (jx["per_event_policy_ms_median"]
+                 / max(inc["per_event_policy_ms_median"], 1e-9)
+                 if jx is not None else None)
 
     # NOTE: notes must stay comma-free -- common.emit writes unquoted CSV.
     phases = inc["phases_s"]
@@ -201,6 +226,8 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         ("scale.phase_solve", phases["solve"], "s", "cumulative"),
         ("scale.phase_enforce", phases["enforce"], "s", "cumulative"),
         ("scale.phase_metrics", phases["metrics"], "s", "cumulative"),
+        ("scale.phase_backend_compile", phases["backend_compile"], "s",
+         "cumulative; 0 on the numpy backend"),
         ("scale.delta_solves", inc["delta_solves"], "count",
          f"of {inc['delta_solves'] + inc['full_solves']} greedy solves"),
         ("scale.drf_fast_hits", inc["drf_fast_hits"], "count",
@@ -213,6 +240,18 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         ("scale.container_churn", inc["container_churn"], "count",
          "containers created+destroyed"),
     ]
+    if jx is not None:
+        rows += [
+            ("scale.policy_ms_jax_median",
+             jx["per_event_policy_ms_median"], "ms",
+             "median per-event; jax backend; compiles excluded"),
+            ("scale.jax_median_ratio", jax_ratio, "x",
+             f"jax/numpy per-event medians; bit_exact={bit_exact_jax}"),
+            ("scale.jax_compile_s", jx["backend_compile_s"], "s",
+             "cumulative first-touch jit compile time"),
+        ]
+    else:
+        rows += [("scale.jax_median_ratio", "", "x", "jax unavailable")]
 
     # Exact-solver head-to-head (monolithic vs rolling vs colgen) on ONE
     # static instance small enough for the monolithic grid: the certified
@@ -245,10 +284,13 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         "incremental": inc,
         "legacy_incremental": leg,
         "full_resolve": full,
+        "jax_incremental": jx,
         "incremental_speedup": speedup,
         "soa_speedup": soa_speedup,
+        "jax_median_ratio": jax_ratio,
         "timeline_bit_exact": bit_exact,
         "timeline_bit_exact_vs_legacy_engine": bit_exact_engines,
+        "timeline_bit_exact_vs_jax": bit_exact_jax,
         "exact_solvers": exact,
     }
 
@@ -276,6 +318,26 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
             ("scale.xl_completed", xl_res["completed"], "count",
              f"of {xl_apps}"),
         ]
+        if have_jax:
+            xl_jax, _ = _run_once(xl_cluster, xl_wl, True, horizon_s,
+                                  batch_window_s, theta1, theta2,
+                                  auto_switch_vars, soa=True,
+                                  backend="jax")
+            xl_ratio = (xl_jax["per_event_policy_ms_median"]
+                        / max(xl_res["per_event_policy_ms_median"], 1e-9))
+            payload["xl_jax"] = xl_jax
+            payload["xl_jax_median_ratio"] = xl_ratio
+            rows += [
+                ("scale.xl_jax_policy_ms_median",
+                 xl_jax["per_event_policy_ms_median"], "ms",
+                 f"{xl_slaves}x{xl_apps} per-event median; jax backend"),
+                ("scale.xl_jax_median_ratio", xl_ratio, "x",
+                 "jax/numpy per-event medians at xl; compiles excluded"),
+                ("scale.xl_jax_compile_s", xl_jax["backend_compile_s"],
+                 "s", "cumulative first-touch jit compile time"),
+                ("scale.xl_jax_completed", xl_jax["completed"], "count",
+                 f"of {xl_apps}"),
+            ]
 
     emit(rows)
     if json_path:

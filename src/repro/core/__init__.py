@@ -4,6 +4,8 @@ from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
                          RecordingProtocol)
 from .autoscale import (AutoscaleConfig, AutoscalePolicy, LoadSignal,
                         ReplayLoadSignal, SLOMonitor, signals_from_workload)
+from .backend import (Backend, JaxBackend, NumpyBackend, backend_available,
+                      get_backend)
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
@@ -38,6 +40,8 @@ from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
                        sample_app_duration_s, sample_task_duration_s)
 
 __all__ = [
+    "Backend", "JaxBackend", "NumpyBackend", "backend_available",
+    "get_backend",
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
     "RecordingProtocol", "AutoscaleConfig", "AutoscalePolicy", "LoadSignal",
     "ReplayLoadSignal", "SLOMonitor", "signals_from_workload",

@@ -1,0 +1,590 @@
+"""Array-backend seam for the scheduler's hot kernels (PR 6).
+
+The per-event allocation inner loops -- the ladder-DRF progressive fill
+(`drf.drf_container_counts`), the saturating probe (`drf.saturating_counts`)
+and the batched best-fit scatter (`optimizer._best_fit_place_batch`) -- are
+pure array programs over `ClusterState`'s SoA buffers. This module puts an
+explicit seam under them:
+
+  * `NumpyBackend`  -- the host implementation, EXTRACTED (not rewritten)
+    from the previous in-place code, so it is bit-identical with the seed
+    by construction. It stays the bit-exactness reference, exactly like
+    `ReferenceClusterSimulator` does for the simulator.
+  * `JaxBackend`    -- the same three kernels as `jax.jit` programs built
+    on `lax` (stable argsort + clipped-cumsum scatter, `lax.scan` for the
+    inherently sequential grant loop, `lax.while_loop` for the ladder's
+    exhaustion passes). On TPU the placement inner loop dispatches to the
+    Pallas kernel in `repro.kernels.placement`; everywhere else the lax
+    composition is the fallback.
+
+Static shapes + padding contract
+--------------------------------
+jit caches are keyed on shapes, so every entry point pads its inputs to the
+next power of two before dispatch and slices the result back:
+
+  * apps axis `n`    -> padded with zero-demand rows (`valid` mask False),
+  * slaves axis `b`  -> padded with `free = -1` sentinel rows (nothing fits)
+    and `inv_cap = 0`,
+  * ladder levels    -> padded to the max `n_max` (entries above an app's
+    bound are masked to +inf and never granted).
+
+A steady-state cluster therefore compiles each kernel ONCE per padded-shape
+bucket; subsequent events reuse the trace. First-call compilation time is
+accumulated in `Backend.compile_s` so `DormMaster.phase_breakdown()` /
+`PolicyTimer` can report it in a separate `backend_compile` bucket instead
+of polluting per-event medians.
+
+Exactness
+---------
+Integer outputs (container counts, placements) are compared bit-for-bit in
+the parity suite (tests/test_backend_parity.py). For integral demands every
+float intermediate is exact integer arithmetic, so numpy and jax agree
+bitwise unconditionally. For fractional demands the kernels keep numpy's
+float op ORDER wherever the op is sequential (scan = the python grant loop,
+unrolled per-resource sums = numpy's pairwise order for m <= 8) and rely on
+the 1e-9 decision epsilons dominating last-ulp reduction noise elsewhere
+(cumsum); the parity suite pins the resulting counts/placements equality
+empirically, fractional demands included.
+"""
+from __future__ import annotations
+
+import time as _time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+_EPS = 1e-9
+
+# --------------------------------------------------------------------------
+# numpy kernel bodies (extracted verbatim from drf.py / optimizer.py)
+# --------------------------------------------------------------------------
+
+
+def _probe_np(d: np.ndarray, n_max: np.ndarray, total: np.ndarray) -> bool:
+    """sum_i n_max_i * d_i <= total  (drf.saturating_counts' aggregate test)."""
+    return bool(np.all(n_max.astype(np.float64) @ d <= total + _EPS))
+
+
+def _ladder_counts_np(d: np.ndarray, n_min: np.ndarray, n_max: np.ndarray,
+                      w: np.ndarray, total: np.ndarray) -> np.ndarray:
+    """Vectorized weighted-DRF progressive filling over plain arrays.
+
+    The array core of `drf.drf_container_counts` (see its docstring for the
+    ladder argument); that function now builds the arrays from the specs and
+    delegates here."""
+    n = d.shape[0]
+    pos = total > 0
+
+    def shares_at(counts: np.ndarray) -> np.ndarray:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(pos[None, :],
+                              (counts[:, None] * d) / total[None, :], 0.0)
+        return (ratios.max(axis=1) if ratios.size else np.zeros(n)) / w
+
+    # Phase 1 -- guarantee n_min, in DRF (smallest weighted share) order.
+    cnt = np.zeros(n, np.int64)
+    remaining = total.copy()
+    need = n_min[:, None] * d                                   # (n, m)
+    if np.all(need.sum(axis=0) <= remaining + _EPS):
+        # Common case: every minimum fits in aggregate -- grant all at once.
+        cnt[:] = n_min
+        remaining -= need.sum(axis=0)
+    else:
+        for i in np.argsort(shares_at(n_min), kind="stable"):
+            if np.all(need[i] <= remaining + _EPS):
+                cnt[i] = n_min[i]
+                remaining -= need[i]
+
+    # Phase 2 -- progressive filling above n_min: sorted ladder of per-grant
+    # shares for every app that received its minimum.
+    active = np.flatnonzero(cnt > 0)
+    lengths = np.maximum(n_max[active] - cnt[active], 0)
+    total_e = int(lengths.sum())
+    if total_e:
+        i_arr = np.repeat(active, lengths)
+        offsets = np.concatenate(([0], np.cumsum(lengths[:-1])))
+        c_arr = (np.arange(total_e)
+                 - np.repeat(offsets, lengths)
+                 + np.repeat(cnt[active], lengths))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(pos[None, :],
+                              (c_arr[:, None] * d[i_arr]) / total[None, :],
+                              0.0)
+        keys = ratios.max(axis=1) / w[i_arr]
+        order_e = np.lexsort((i_arr, keys))
+        i_s = i_arr[order_e]
+        d_s = d[i_s]
+        dropped = np.zeros(n, bool)
+        while i_s.size:
+            cum = np.cumsum(d_s, axis=0)
+            ok = (cum <= remaining[None, :] + _EPS).all(axis=1)
+            k = int(i_s.size if ok.all() else np.argmin(ok))
+            if k:
+                cnt += np.bincount(i_s[:k], minlength=n)
+                remaining = remaining - cum[k - 1]
+            if k == i_s.size:
+                break
+            # Retire every app that can no longer fit one container (the
+            # blocked app among them); their remaining ladder entries drop.
+            dropped |= ~(d <= remaining[None, :] + _EPS).all(axis=1)
+            keep = ~dropped[i_s[k:]]
+            i_s = i_s[k:][keep]
+            d_s = d_s[k:][keep]
+    return cnt
+
+
+def _place_counts_np(free: np.ndarray, di: np.ndarray, inv_cap: np.ndarray,
+                     need: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    """Batched best-fit slave counts for one app (the compute half of
+    `optimizer._best_fit_place_batch`; the caller applies the mutation).
+
+    -> (slave indices, per-slave grant counts) with counts > 0, in placement
+    order, or None when no slave fits."""
+    fit_js = np.flatnonzero((di <= free + _EPS).all(axis=1))
+    if not fit_js.size:
+        return None
+    sub_free = free[fit_js]
+    pos = di > 0
+    if pos.any():
+        q = np.floor((sub_free[:, pos] + _EPS) / di[pos]).min(axis=1)
+        q = np.maximum(q, 1.0).astype(np.int64)     # max containers per slave
+    else:
+        q = np.full(fit_js.shape[0], need, np.int64)   # zero demand
+    score = ((sub_free - di) * inv_cap[fit_js]).sum(axis=1)
+    # Fast path: the best-fit slave hosts the whole batch (one argmin
+    # instead of a full argsort -- the sequential loop would fill the
+    # argmin slave first anyway).
+    jpos = int(np.argmin(score))
+    if q[jpos] >= need:
+        return (fit_js[jpos:jpos + 1],
+                np.array([need], dtype=np.int64))
+    order = np.argsort(score, kind="stable")        # ties -> lowest index
+    js = fit_js[order]
+    csum = np.minimum(np.cumsum(q[order]), need)
+    counts = np.diff(np.concatenate(([0], csum)))
+    nz = counts > 0
+    return js[nz], counts[nz]
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+
+class Backend:
+    """Ops protocol + the three scheduler kernels.
+
+    The small-ops layer (argsort/cumsum/segment-sum/masked-select/cumfill)
+    is what the kernels are composed from; it is exposed so future device-
+    resident passes (the sharded multi-master plane) can build on the same
+    seam without growing the kernel surface ad hoc."""
+
+    name: str = "abstract"
+    compile_s: float = 0.0       # cumulative jit compile time (jax only)
+
+    # ---- ops protocol (host-array in, host-array out)
+    def argsort(self, keys: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def cumsum(self, a: np.ndarray, axis: int = 0) -> np.ndarray:
+        raise NotImplementedError
+
+    def segment_sum(self, values: np.ndarray, segments: np.ndarray,
+                    n_segments: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def masked_select(self, mask: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def cumfill(self, q: np.ndarray, budget: int) -> np.ndarray:
+        """Greedy prefix fill: grant min(q_i, what's left of `budget`) in
+        order -- diff(min(cumsum(q), budget)). The placement scatter's
+        core op."""
+        raise NotImplementedError
+
+    # ---- scheduler kernels
+    def saturating_probe(self, d: np.ndarray, n_max: np.ndarray,
+                         total: np.ndarray) -> bool:
+        raise NotImplementedError
+
+    def ladder_counts(self, d: np.ndarray, n_min: np.ndarray,
+                      n_max: np.ndarray, weight: np.ndarray,
+                      total: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def place_counts(self, free: np.ndarray, di: np.ndarray,
+                     inv_cap: np.ndarray, need: int,
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """-> (slave indices, grant counts > 0) or None when nothing fits.
+
+        The PAIRING is the contract; the order of the pairs is not (numpy
+        yields fill order, jax ascending slave index -- the `place` update
+        is order-independent because indices are unique). Compare results
+        as the dense per-slave mapping."""
+        raise NotImplementedError
+
+    def place(self, x: np.ndarray, free: np.ndarray, d: np.ndarray,
+              inv_cap: np.ndarray, i: int, limit: int) -> bool:
+        """Mutating wrapper with `optimizer._best_fit_place_batch`'s exact
+        signature and update arithmetic; returns True iff a grant landed."""
+        di = d[i]
+        need = limit - int(x[i].sum())
+        if need <= 0:
+            return False
+        out = self.place_counts(free, di, inv_cap, need)
+        if out is None:
+            return False
+        js, counts = out
+        x[i, js] += counts
+        free[js] -= counts[:, None].astype(np.float64) * di[None, :]
+        return True
+
+
+class NumpyBackend(Backend):
+    """Host reference backend (the extracted seed implementation)."""
+
+    name = "numpy"
+
+    def argsort(self, keys):
+        return np.argsort(keys, kind="stable")
+
+    def cumsum(self, a, axis: int = 0):
+        return np.cumsum(a, axis=axis)
+
+    def segment_sum(self, values, segments, n_segments: int):
+        return np.bincount(segments, weights=values, minlength=n_segments)
+
+    def masked_select(self, mask):
+        return np.flatnonzero(mask)
+
+    def cumfill(self, q, budget: int):
+        csum = np.minimum(np.cumsum(q), budget)
+        return np.diff(np.concatenate(([0], csum)))
+
+    def saturating_probe(self, d, n_max, total) -> bool:
+        return _probe_np(d, n_max, total)
+
+    def ladder_counts(self, d, n_min, n_max, weight, total):
+        return _ladder_counts_np(d, n_min, n_max, weight, total)
+
+    def place_counts(self, free, di, inv_cap, need):
+        return _place_counts_np(free, di, inv_cap, int(need))
+
+
+# ---------------------------------------------------------------- jax side
+
+_JAX_MODS = None        # (jax, jnp, lax, enable_x64) or an exception
+
+
+def _jax_modules():
+    global _JAX_MODS
+    if _JAX_MODS is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax import lax
+            from jax.experimental import enable_x64
+            _JAX_MODS = (jax, jnp, lax, enable_x64)
+        except Exception as exc:               # pragma: no cover - no jax
+            _JAX_MODS = exc
+    if isinstance(_JAX_MODS, Exception):
+        raise RuntimeError(
+            f"jax backend requested but jax is unavailable: {_JAX_MODS}")
+    return _JAX_MODS
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(3, int(n - 1).bit_length()) if n > 1 else 8
+
+
+_JAX_FNS: Dict[bool, Dict[str, object]] = {}
+
+
+def _build_jax_fns(use_pallas: bool) -> Dict[str, object]:
+    """Build (once per process and pallas-flag) the jitted kernel programs.
+
+    All float work is f64 (callers wrap invocations in `enable_x64`); the
+    Pallas dispatch inside `place` runs f32 scores on real TPUs -- see
+    `repro.kernels.placement` for the precision note."""
+    if use_pallas in _JAX_FNS:
+        return _JAX_FNS[use_pallas]
+    jax, jnp, lax, _ = _jax_modules()
+
+    @jax.jit
+    def probe(d, n_max, total):
+        return jnp.all(n_max @ d <= total + _EPS)
+
+    @jax.jit
+    def place(free, di, inv_cap, need):
+        """-> dense (b,) int64 grant counts (0 on non-granted slaves).
+
+        Equals numpy's argsort/cumfill scatter: the argmin fast path needs
+        no separate branch (a slave whose q covers `need` and whose
+        (score, index) key sorts first receives the whole batch from the
+        clipped cumsum too), and clipping q at `need` before the cumsum
+        never changes diff(min(cumsum, need)) while keeping the int64 sums
+        small enough for the Pallas kernel's int32 accumulators."""
+        b, m = free.shape
+        need_i = need.astype(jnp.int64)
+        need_f = need.astype(free.dtype)
+        # Per-resource ops are unrolled over the static m (<= 8 in this
+        # repo), keeping numpy's left-to-right pairwise order bit-for-bit.
+        fit = di[0] <= free[:, 0] + _EPS
+        for k in range(1, m):
+            fit = fit & (di[k] <= free[:, k] + _EPS)
+        q = None
+        for k in range(m):
+            qk = jnp.where(di[k] > 0.0,
+                           jnp.floor((free[:, k] + _EPS)
+                                     / jnp.where(di[k] > 0.0, di[k], 1.0)),
+                           jnp.inf)
+            q = qk if q is None else jnp.minimum(q, qk)
+        q = jnp.where(jnp.isfinite(q), q, need_f)   # all-zero demand
+        q = jnp.maximum(q, 1.0)
+        q = jnp.minimum(q, need_f)
+        qn = jnp.where(fit, q, 0.0).astype(jnp.int64)
+        score = (free[:, 0] - di[0]) * inv_cap[:, 0]
+        for k in range(1, m):
+            score = score + (free[:, k] - di[k]) * inv_cap[:, k]
+        masked = jnp.where(fit, score, jnp.inf)
+        if use_pallas:
+            from ..kernels.placement import best_fit_counts
+            counts = best_fit_counts(masked.astype(jnp.float32),
+                                     qn.astype(jnp.int32),
+                                     need_i.astype(jnp.int32))
+            return counts.astype(jnp.int64)
+        order = jnp.argsort(masked, stable=True)    # ties -> lowest index
+        csum = jnp.minimum(jnp.cumsum(qn[order]), need_i)
+        counts = csum - jnp.concatenate([jnp.zeros(1, jnp.int64), csum[:-1]])
+        return jnp.zeros(b, jnp.int64).at[order].set(counts)
+
+    @jax.jit
+    def ladder(d, n_min, n_max, w, valid, total, levels):
+        """Vectorized weighted-DRF ladder fill, masked instead of compacted.
+
+        numpy compacts the ladder (drops granted/retired entries); here the
+        grid is static (n_pad, L) and dead entries carry zero demand in the
+        cumulative sums -- partial sums over the survivors are unchanged, so
+        every capacity decision matches the compacted version exactly."""
+        n_pad, m = d.shape
+        L = levels.shape[0]
+        E = n_pad * L
+        pos = total > 0.0
+        safe_total = jnp.where(pos, total, 1.0)
+
+        def shares_at(counts_f):
+            r = jnp.where(pos[None, :],
+                          (counts_f[:, None] * d) / safe_total[None, :], 0.0)
+            return r.max(axis=1) / w
+
+        n_min_f = n_min.astype(d.dtype)
+        need = n_min_f[:, None] * d                        # zero on pad rows
+        tot_need = need.sum(axis=0)
+        all_fit = jnp.all(tot_need <= total + _EPS)
+
+        # Sequential phase 1 (selected when all_fit is False): lax.scan
+        # replays numpy's python grant loop in the same DRF order, so the
+        # capacity subtractions happen in the same sequence bit-for-bit.
+        order1 = jnp.argsort(jnp.where(valid, shares_at(n_min_f), jnp.inf),
+                             stable=True)
+
+        def p1(rem, i):
+            ok = valid[i] & jnp.all(need[i] <= rem + _EPS)
+            return jnp.where(ok, rem - need[i], rem), ok
+
+        rem_seq, ok_seq = lax.scan(p1, total, order1)
+        granted = jnp.zeros(n_pad, bool).at[order1].set(ok_seq)
+        cnt = jnp.where(all_fit, jnp.where(valid, n_min, 0),
+                        jnp.where(granted, n_min, 0))
+        remaining = jnp.where(all_fit, total - tot_need, rem_seq)
+
+        # Phase 2: full (n_pad, L) grid of per-grant share keys, flattened
+        # i-major -- the same order numpy's lexsort((i_arr, keys)) yields.
+        active = cnt > 0
+        c_abs = cnt[:, None] + levels[None, :]             # (n_pad, L)
+        e_valid = (active[:, None] & valid[:, None]
+                   & (c_abs < n_max[:, None]))
+        keys_g = (jnp.where(pos[None, None, :],
+                            (c_abs[..., None].astype(d.dtype)
+                             * d[:, None, :]) / safe_total[None, None, :],
+                            0.0).max(axis=2) / w[:, None])
+        keys = jnp.where(e_valid, keys_g, jnp.inf).ravel()
+        order_e = jnp.argsort(keys, stable=True)
+        i_s = order_e // L
+        d_s = d[i_s]                                       # (E, m)
+        alive0 = e_valid.ravel()[order_e]
+        arange_e = jnp.arange(E)
+
+        def body(st):
+            cnt, rem, alive, _ = st
+            d_eff = jnp.where(alive[:, None], d_s, 0.0)
+            cum = jnp.cumsum(d_eff, axis=0)
+            ok = jnp.all(cum <= rem[None, :] + _EPS, axis=1)
+            bad = alive & ~ok
+            any_bad = bad.any()
+            kpos = jnp.where(any_bad, jnp.argmax(bad), E)
+            grant = alive & (arange_e < kpos)
+            ngrant = grant.sum()
+            sub = cum[jnp.maximum(kpos - 1, 0)]
+            rem2 = jnp.where(ngrant > 0, rem - sub, rem)
+            cnt2 = cnt + jnp.zeros_like(cnt).at[i_s].add(
+                grant.astype(cnt.dtype))
+            alive2 = alive & ~grant
+            # Retire apps that can no longer fit one container; when no
+            # entry was blocked everything was granted and the loop ends.
+            fits = jnp.all(d <= rem2[None, :] + _EPS, axis=1)
+            alive3 = jnp.where(any_bad, alive2 & fits[i_s], alive2)
+            done = (~any_bad) | (~alive3.any())
+            return (cnt2, rem2, alive3, done)
+
+        init = (cnt, remaining, alive0, ~alive0.any())
+        cnt_f, _, _, _ = lax.while_loop(lambda st: ~st[3], body, init)
+        return cnt_f
+
+    _JAX_FNS[use_pallas] = {"probe": probe, "place": place, "ladder": ladder}
+    return _JAX_FNS[use_pallas]
+
+
+class JaxBackend(Backend):
+    """jax.jit backend; see the module docstring for the padding contract.
+
+    `use_pallas=None` (default) engages the Pallas placement kernel only on
+    TPU backends (`jax.default_backend() == "tpu"`), mirroring the `auto`
+    impl of `repro.kernels.ops`; the lax composition is the CPU/GPU
+    fallback and the one the f64 bit-exactness guarantee applies to."""
+
+    name = "jax"
+
+    def __init__(self, use_pallas: Optional[bool] = None):
+        jax, jnp, _, enable_x64 = _jax_modules()
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        self._jax, self._jnp = jax, jnp
+        self._x64 = enable_x64
+        self._fns = _build_jax_fns(self.use_pallas)
+        self.compile_s = 0.0
+        self._seen: set = set()
+
+    # One compile per (kernel, padded shape signature): time the first call
+    # of each and book it under compile_s (the steady-state per-event cost
+    # is what the benchmarks should see).
+    def _run(self, tag: str, *args):
+        fn = self._fns[tag]
+        key = (tag,) + tuple(
+            (a.shape, str(a.dtype)) if hasattr(a, "shape") else type(a)
+            for a in args)
+        with self._x64():
+            if key in self._seen:
+                return fn(*args)
+            t0 = _time.perf_counter()
+            out = fn(*args)
+            out = self._jax.block_until_ready(out)
+            self.compile_s += _time.perf_counter() - t0
+            self._seen.add(key)
+            return out
+
+    # ---- ops protocol (jnp on host arrays; f64 via the x64 scope)
+    def argsort(self, keys):
+        with self._x64():
+            return np.asarray(self._jnp.argsort(self._jnp.asarray(keys),
+                                                stable=True))
+
+    def cumsum(self, a, axis: int = 0):
+        with self._x64():
+            return np.asarray(self._jnp.cumsum(self._jnp.asarray(a),
+                                               axis=axis))
+
+    def segment_sum(self, values, segments, n_segments: int):
+        jnp = self._jnp
+        with self._x64():
+            vals = jnp.asarray(values)
+            out = jnp.zeros(n_segments, vals.dtype
+                            ).at[jnp.asarray(segments)].add(vals)
+            return np.asarray(out)
+
+    def masked_select(self, mask):
+        with self._x64():
+            return np.asarray(self._jnp.flatnonzero(self._jnp.asarray(mask)))
+
+    def cumfill(self, q, budget: int):
+        jnp = self._jnp
+        with self._x64():
+            qa = jnp.asarray(q)
+            csum = jnp.minimum(jnp.cumsum(qa), budget)
+            return np.asarray(jnp.concatenate([csum[:1],
+                                               csum[1:] - csum[:-1]]))
+
+    # ---- scheduler kernels (padded dispatch)
+    def saturating_probe(self, d, n_max, total) -> bool:
+        n, m = d.shape
+        n_pad = _pow2(n)
+        d_p = np.zeros((n_pad, m), np.float64)
+        d_p[:n] = d
+        nm_p = np.zeros(n_pad, np.float64)
+        nm_p[:n] = n_max
+        return bool(self._run("probe", d_p, nm_p,
+                              total.astype(np.float64)))
+
+    def ladder_counts(self, d, n_min, n_max, weight, total):
+        n, m = d.shape
+        n_pad = _pow2(n)
+        L = _pow2(int(n_max.max()) if n else 1)
+        d_p = np.zeros((n_pad, m), np.float64)
+        d_p[:n] = d
+        nmin_p = np.zeros(n_pad, np.int64)
+        nmin_p[:n] = n_min
+        nmax_p = np.zeros(n_pad, np.int64)
+        nmax_p[:n] = n_max
+        w_p = np.ones(n_pad, np.float64)
+        w_p[:n] = weight
+        valid = np.zeros(n_pad, bool)
+        valid[:n] = True
+        levels = np.arange(L, dtype=np.int64)
+        out = self._run("ladder", d_p, nmin_p, nmax_p, w_p, valid,
+                        total.astype(np.float64), levels)
+        return np.asarray(out)[:n]
+
+    def place_counts(self, free, di, inv_cap, need):
+        b, m = free.shape
+        b_pad = _pow2(b)
+        if b_pad != b:
+            f_p = np.full((b_pad, m), -1.0)     # sentinel: nothing fits
+            f_p[:b] = free
+            ic_p = np.zeros((b_pad, m))
+            ic_p[:b] = inv_cap
+        else:
+            f_p, ic_p = free, inv_cap
+        counts = np.asarray(self._run("place", f_p, di, ic_p,
+                                      np.int64(need)))[:b]
+        js = np.flatnonzero(counts)
+        if not js.size:
+            return None
+        return js, counts[js]
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_BACKENDS = {"numpy": NumpyBackend, "jax": JaxBackend}
+
+
+def get_backend(name: str) -> Backend:
+    """-> a fresh backend instance (each optimizer owns its compile_s
+    accounting; the underlying jit caches are process-global either way)."""
+    try:
+        cls = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_BACKENDS)}")
+    return cls()
+
+
+def backend_available(name: str) -> bool:
+    if name == "jax":
+        try:
+            _jax_modules()
+        except RuntimeError:
+            return False
+    return name in _BACKENDS

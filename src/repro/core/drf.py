@@ -17,7 +17,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import Backend, NumpyBackend
 from .types import ApplicationSpec, ClusterSpec, demand_matrix
+
+_NUMPY_BACKEND = NumpyBackend()
 
 
 def dominant_share(n_containers: int, demand: np.ndarray,
@@ -131,7 +134,7 @@ def drf_container_counts_reference(apps: Sequence[ApplicationSpec],
 
 
 def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-                         ) -> Dict[str, int]:
+                         backend: Optional[Backend] = None) -> Dict[str, int]:
     """Vectorized weighted-DRF progressive filling.
 
     Produces the same counts as `drf_container_counts_reference` without the
@@ -143,6 +146,12 @@ def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     whose demand does not fit now can never fit later. That turns the filling
     into a few cumulative-sum passes over the sorted ladder (one extra pass
     per capacity-exhaustion point) instead of O(total grants) heap rounds.
+
+    The ladder core lives in `core.backend` (`Backend.ladder_counts`); this
+    function builds the spec arrays and adapts the dict API. `backend`
+    selects the array implementation (default: the extracted numpy one --
+    bit-identical with the pre-seam code; `JaxBackend` runs the same fill
+    as a jitted lax program).
 
     Exactness: share keys use the same multiply-then-divide float sequence as
     the reference; capacity bookkeeping batches per-grant subtractions into
@@ -156,69 +165,11 @@ def drf_container_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     n = len(apps)
     total = cluster.total_capacity().astype(np.float64)
     d = demand_matrix(apps).astype(np.float64)                  # (n, m)
-    pos = total > 0
     w = np.fromiter((a.weight for a in apps), np.float64, n)
     n_min = np.fromiter((a.n_min for a in apps), np.int64, n)
     n_max = np.fromiter((a.n_max for a in apps), np.int64, n)
-
-    def shares_at(counts: np.ndarray) -> np.ndarray:
-        """max_k (n_i * d_{i,k}) / C_k / w_i, 0 where C_k == 0 (same float
-        op order as the reference's `weighted_share`)."""
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ratios = np.where(pos[None, :],
-                              (counts[:, None] * d) / total[None, :], 0.0)
-        return (ratios.max(axis=1) if ratios.size else np.zeros(n)) / w
-
-    # Phase 1 -- guarantee n_min, in DRF (smallest weighted share) order.
-    cnt = np.zeros(n, np.int64)
-    remaining = total.copy()
-    need = n_min[:, None] * d                                   # (n, m)
-    if np.all(need.sum(axis=0) <= remaining + 1e-9):
-        # Common case: every minimum fits in aggregate -- grant all at once.
-        cnt[:] = n_min
-        remaining -= need.sum(axis=0)
-    else:
-        for i in np.argsort(shares_at(n_min), kind="stable"):
-            if np.all(need[i] <= remaining + 1e-9):
-                cnt[i] = n_min[i]
-                remaining -= need[i]
-
-    # Phase 2 -- progressive filling above n_min: sorted ladder of per-grant
-    # shares for every app that received its minimum.
-    active = np.flatnonzero(cnt > 0)
-    lengths = np.maximum(n_max[active] - cnt[active], 0)
-    total_e = int(lengths.sum())
-    if total_e:
-        i_arr = np.repeat(active, lengths)
-        offsets = np.concatenate(([0], np.cumsum(lengths[:-1])))
-        c_arr = (np.arange(total_e)
-                 - np.repeat(offsets, lengths)
-                 + np.repeat(cnt[active], lengths))
-        with np.errstate(divide="ignore", invalid="ignore"):
-            ratios = np.where(pos[None, :],
-                              (c_arr[:, None] * d[i_arr]) / total[None, :],
-                              0.0)
-        keys = ratios.max(axis=1) / w[i_arr]
-        order_e = np.lexsort((i_arr, keys))
-        i_s = i_arr[order_e]
-        d_s = d[i_s]
-        dropped = np.zeros(n, bool)
-        while i_s.size:
-            cum = np.cumsum(d_s, axis=0)
-            ok = (cum <= remaining[None, :] + 1e-9).all(axis=1)
-            k = int(i_s.size if ok.all() else np.argmin(ok))
-            if k:
-                cnt += np.bincount(i_s[:k], minlength=n)
-                remaining = remaining - cum[k - 1]
-            if k == i_s.size:
-                break
-            # Retire every app that can no longer fit one container (the
-            # blocked app among them); their remaining ladder entries drop.
-            dropped |= ~(d <= remaining[None, :] + 1e-9).all(axis=1)
-            keep = ~dropped[i_s[k:]]
-            i_s = i_s[k:][keep]
-            d_s = d_s[k:][keep]
-
+    be = backend if backend is not None else _NUMPY_BACKEND
+    cnt = be.ladder_counts(d, n_min, n_max, w, total)
     return {app.app_id: int(cnt[i]) for i, app in enumerate(apps)}
 
 
@@ -234,6 +185,7 @@ def fairness_loss(actual_shares: Dict[str, float],
 # ---------------------------------------------------------------------------
 
 def saturating_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
+                      backend: Optional[Backend] = None,
                       ) -> Optional[Dict[str, int]]:
     """All-n_max fast path of the progressive filling, O(n*m).
 
@@ -256,8 +208,9 @@ def saturating_counts(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     if not apps:
         return {}
     nmax = np.fromiter((a.n_max for a in apps), np.float64, len(apps))
-    demand = nmax @ demand_matrix(apps)                # (m,)
-    if np.all(demand <= cluster.total_capacity() + 1e-9):
+    be = backend if backend is not None else _NUMPY_BACKEND
+    if be.saturating_probe(demand_matrix(apps), nmax,
+                           cluster.total_capacity()):
         return {a.app_id: a.n_max for a in apps}
     return None
 
@@ -277,20 +230,22 @@ class IncrementalDRF:
         self.full_refills = 0
 
     def targets(self, apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
-                reference: bool = False,
+                reference: bool = False, backend: Optional[Backend] = None,
                 ) -> Tuple[Dict[str, int], Dict[str, float], bool]:
         """-> (counts, shares, fast): `fast` tells the caller whether the
         saturating fast path answered (delta reallocation keys off it).
         `reference=True` routes the fallback through the seed's
-        one-grant-at-a-time filling (legacy-engine cost model)."""
-        counts = saturating_counts(apps, cluster)
+        one-grant-at-a-time filling (legacy-engine cost model); `backend`
+        selects the array implementation of the probe + vectorized fill."""
+        counts = saturating_counts(apps, cluster, backend=backend)
         fast = counts is not None
         if fast:
             self.fast_hits += 1
         else:
             self.full_refills += 1
-            fill = drf_container_counts_reference if reference \
-                else drf_container_counts
-            counts = fill(apps, cluster)
+            if reference:
+                counts = drf_container_counts_reference(apps, cluster)
+            else:
+                counts = drf_container_counts(apps, cluster, backend=backend)
         shares = drf_shares(apps, cluster, counts=counts)
         return counts, shares, fast

@@ -202,17 +202,29 @@ class DormMaster:
         p = self.partitions.get(app_id)
         return p.n_containers if p else 0
 
+    @property
+    def backend_compile_s(self) -> float:
+        """Cumulative jit-compile seconds of the optimizer's array backend
+        (0.0 for the numpy backend). First-event compilation is a one-off
+        warm-up, so `phase_breakdown` and `PolicyTimer` book it in its own
+        `backend_compile` bucket instead of the per-event solve time."""
+        be = getattr(self.optimizer, "backend", None)
+        return float(be.compile_s) if be is not None else 0.0
+
     def phase_breakdown(self) -> Dict[str, float]:
         """Cumulative per-phase scheduling seconds: optimizer solve (split
-        into the DRF-refill share, the column-generation pricing share and
-        the rest), enforcement (container create/destroy + protocol calls),
-        and Eq-1/2/4 metric evaluation."""
+        into the DRF-refill share, the column-generation pricing share, the
+        backend jit-compile share and the rest), enforcement (container
+        create/destroy + protocol calls), and Eq-1/2/4 metric evaluation."""
         refill = float(getattr(self.optimizer, "refill_s", 0.0))
         pricing = float(getattr(self.optimizer, "pricing_s", 0.0))
+        compile_s = self.backend_compile_s
         return {
             "drf_refill": refill,
             "colgen_pricing": pricing,
-            "solve": max(self.phase_s["solve"] - refill - pricing, 0.0),
+            "backend_compile": compile_s,
+            "solve": max(self.phase_s["solve"] - refill - pricing
+                         - compile_s, 0.0),
             "enforce": self.phase_s["enforce"],
             "metrics": self.phase_s["metrics"],
         }

@@ -46,11 +46,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import _place_counts_np, get_backend
 from .drf import (IncrementalDRF, drf_container_counts,
                   drf_container_counts_reference, drf_shares)
 from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
@@ -130,6 +132,13 @@ class OptimizerConfig:
     # placement only; the certified gap simply widens).
     colgen_pack_vars: int = 20_000
     colgen_pack_rounds: int = 3
+    # Array backend for the greedy solver's hot kernels (PR 6): "numpy"
+    # (the bit-exactness reference) or "jax" (jit/lax programs, Pallas
+    # placement inner loop on TPU -- see core.backend). The env default
+    # lets CI run the whole tier-1 suite on the jax backend without code
+    # changes (REPRO_BACKEND=jax).
+    backend: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_BACKEND", "numpy"))
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -1278,35 +1287,12 @@ def _best_fit_place_batch(x: np.ndarray, free: np.ndarray, d: np.ndarray,
     need = limit - int(x[i].sum())
     if need <= 0:
         return False
-    # One (b, m) compare finds the feasible slaves; the max-count divide
-    # then runs only on those (clusters run mostly full, so the fit set is
-    # usually small).
-    fit_js = np.flatnonzero((di <= free + 1e-9).all(axis=1))
-    if not fit_js.size:
+    # The compute half lives in `core.backend._place_counts_np` (the seam
+    # the jax backend implements against); this wrapper applies the grants.
+    out = _place_counts_np(free, di, inv_cap, need)
+    if out is None:
         return False
-    sub_free = free[fit_js]
-    pos = di > 0
-    if pos.any():
-        q = np.floor((sub_free[:, pos] + 1e-9) / di[pos]).min(axis=1)
-        q = np.maximum(q, 1.0).astype(np.int64)     # max containers per slave
-    else:
-        q = np.full(fit_js.shape[0], need, np.int64)   # zero demand
-    score = ((sub_free - di) * inv_cap[fit_js]).sum(axis=1)
-    # Fast path: the best-fit slave hosts the whole batch (one argmin
-    # instead of a full argsort -- the sequential loop would fill the
-    # argmin slave first anyway).
-    jpos = int(np.argmin(score))
-    if q[jpos] >= need:
-        j = int(fit_js[jpos])
-        x[i, j] += need
-        free[j] -= float(need) * di
-        return True
-    order = np.argsort(score, kind="stable")        # ties -> lowest index
-    js = fit_js[order]
-    csum = np.minimum(np.cumsum(q[order]), need)
-    counts = np.diff(np.concatenate(([0], csum)))
-    nz = counts > 0
-    js, counts = js[nz], counts[nz]
+    js, counts = out
     x[i, js] += counts
     free[js] -= counts[:, None].astype(np.float64) * di[None, :]
     return True
@@ -1344,6 +1330,10 @@ class GreedyOptimizer:
     def __init__(self, cfg: OptimizerConfig = OptimizerConfig()):
         self.cfg = cfg
         self.drf = IncrementalDRF()
+        # Array backend for the hot kernels (core.backend); "numpy" is the
+        # bit-exactness reference, "jax" the jit/lax port. `compile_s` on it
+        # feeds the master's `backend_compile` phase bucket.
+        self.backend = get_backend(cfg.backend)
         self._last_shares: Optional[Dict[str, float]] = None
         self._last_share_ids: Optional[Tuple[str, ...]] = None
         self.last_shares_vec: Optional[np.ndarray] = None  # solve app order
@@ -1426,11 +1416,20 @@ class GreedyOptimizer:
             target = np.fromiter((drf_counts[a] for a in app_ids),
                                  np.int64, n)
         elif self.cfg.incremental:
-            if state is not None and integral:
-                # O(m) probe against the incrementally-maintained aggregate
-                # n_max demand (exact for integral demands) instead of the
-                # O(n*m) re-aggregation in `drf.saturating_counts`.
-                fast = state.saturates_at_nmax()
+            if state is not None:
+                if integral:
+                    # O(m) probe against the incrementally-maintained
+                    # aggregate n_max demand (exact for integral demands)
+                    # instead of the O(n*m) re-aggregation in
+                    # `drf.saturating_counts`.
+                    fast = state.saturates_at_nmax()
+                else:
+                    # Fractional demands: the running aggregate is not
+                    # ulp-exact, so probe against a fresh aggregation
+                    # (same arithmetic as `drf.saturating_counts`, on the
+                    # state's SoA arrays via the backend seam).
+                    fast = self.backend.saturating_probe(
+                        d, nmax_v.astype(np.float64), total_cap)
                 if fast:
                     self.drf.fast_hits += 1
                     target = nmax_v.astype(np.int64, copy=True)
@@ -1438,15 +1437,17 @@ class GreedyOptimizer:
                     self._last_shares = None          # built lazily
                     self._last_share_ids = app_ids
                 else:
+                    # Full ladder refill straight on the SoA arrays (the
+                    # backend seam: numpy = the reference fill, jax = the
+                    # jitted ladder program); shares follow in one
+                    # vectorized pass, dict built lazily.
                     self.drf.full_refills += 1
-                    drf_counts = drf_container_counts(apps, cluster)
-                    shares = drf_shares(apps, cluster, counts=drf_counts,
-                                        d=d)
-                    self.last_shares = shares
-                    s_hat_vec = np.fromiter((shares[a] for a in app_ids),
-                                            np.float64, n)
-                    target = np.fromiter((drf_counts[a] for a in app_ids),
-                                         np.int64, n)
+                    target = self.backend.ladder_counts(
+                        d, nmin_v, nmax_v,
+                        state.weight[idx].astype(np.float64), total_cap)
+                    s_hat_vec = _shares_vec(target, d, total_cap)
+                    self._last_shares = None          # built lazily
+                    self._last_share_ids = app_ids
             else:
                 # Incremental DRF refill: O(n*m) saturating fast path when
                 # it provably matches the full filling, full otherwise.
@@ -1519,13 +1520,16 @@ class GreedyOptimizer:
                 if any(int(row.sum()) > tgt_of[a]
                        for a, row in prev_map.items()):
                     delta = False
-        if delta and not integral:
-            # Guard: with fractional demands (e.g. Alibaba plan_cpu/100
-            # replays) the delta path's one-matmul free computation and the
-            # full path's sequential row subtraction can differ in the last
-            # ulp and flip a near-tied best-fit argmin. Integer-valued
-            # demands make both exact; otherwise keep the full path so the
-            # bit-exact guarantee holds unconditionally.
+        if delta and not integral and not soa:
+            # Legacy-engine guard: with fractional demands (e.g. Philly
+            # n_cpus/n_gpus or Alibaba plan_cpu/100 replays) the delta
+            # path's one-matmul free computation and the legacy full path's
+            # sequential row subtraction can differ in the last ulp and
+            # flip a near-tied best-fit argmin. The SoA engine closes that
+            # hole by CANONICALIZING free on both paths (one
+            # cap - x^T d matmul, order-independent -- see the warm-start
+            # block below), so fractional replays take the delta path
+            # there; the legacy engine stays the frozen reference.
             delta = False
 
         if not fast:
@@ -1563,8 +1567,15 @@ class GreedyOptimizer:
                         improved = True
             target = np.array(tgt, dtype=np.int64)
 
-        # -- step 2: placement with stickiness.
-        place_fn = _best_fit_place_batch if soa else _best_fit_place
+        # -- step 2: placement with stickiness. The backend seam covers the
+        # SoA state-backed solves (the master's hot path); spec-only solves
+        # (MILP warm starts, standalone calls) keep the host scatter.
+        if not soa:
+            place_fn = _best_fit_place
+        elif state is not None and self.backend.name != "numpy":
+            place_fn = self.backend.place
+        else:
+            place_fn = _best_fit_place_batch
         inv_cap = 1.0 / np.maximum(cap, 1e-9)
         changed_track: Optional[set] = None   # indices changed vs prev rows
         if delta:
@@ -1581,7 +1592,17 @@ class GreedyOptimizer:
                 # for x, one copy of the incrementally-maintained free
                 # matrix -- no per-app row loop, no (b, n) @ (n, m) matmul.
                 x = state.x[idx]                # fancy index -> fresh copy
-                free = state.free.copy()
+                if integral:
+                    free = state.free.copy()
+                else:
+                    # Fractional demands: derive free canonically from x
+                    # (one order-independent matmul). The full path below
+                    # canonicalizes its free the same way after the
+                    # stickiness loop, so both paths feed the best-fit
+                    # scatter bit-identical scores -- for integral demands
+                    # the incrementally-maintained matrix already IS that
+                    # value exactly, and the copy is cheaper.
+                    free = cap - x.T.astype(np.float64) @ d
                 sums = state.counts[idx].copy()
             else:
                 x = np.zeros((n, b), dtype=np.int64)
@@ -1622,6 +1643,16 @@ class GreedyOptimizer:
                     x[i] = keep
                     free -= keep[:, None] * di[None, :]
             sums = x.sum(axis=1)
+            if soa and not integral:
+                # Canonical free (fractional demands, SoA engine): replace
+                # the stickiness loop's sequentially-updated matrix with
+                # one order-independent  cap - x^T d  matmul. Exact no-op
+                # for integral demands (float64 integer products/sums are
+                # associativity-independent); for fractional demands it is
+                # what makes the delta warm start above bit-exact with this
+                # path -- both now derive free from x the same way before
+                # any best-fit score is computed.
+                free = cap - x.T.astype(np.float64) @ d
         # Best-fit the remainder. Two passes: every app is raised to its
         # n_min before anyone is topped up to the full target -- packing
         # early apps to their whole target first would starve the tail below
@@ -1738,13 +1769,21 @@ class GreedyOptimizer:
             self.last_changed = ()
 
         if delta:
-            # Provably feasible, skip the O(n*b) re-validation: rows start
-            # from the (validated) previous allocation, every grant stayed
-            # within the exactly-maintained free capacity (the delta path
-            # requires integral demands), and counts end in
-            # [n_min, target <= n_max]. The legacy engine still validates,
-            # so the engine bit-exactness tests cross-check this proof.
-            return Allocation.trusted(app_ids, x)
+            if integral:
+                # Provably feasible, skip the O(n*b) re-validation: rows
+                # start from the (validated) previous allocation, every
+                # grant stayed within the exactly-maintained free capacity
+                # (exact for integral demands), and counts end in
+                # [n_min, target <= n_max]. The legacy engine still
+                # validates, so the engine bit-exactness tests cross-check
+                # this proof.
+                return Allocation.trusted(app_ids, x)
+            # Fractional demands: the free matrix carries rounding, so the
+            # feasibility proof is only epsilon-exact -- keep the cheap
+            # trusted construction but run the full capacity/bounds check.
+            alloc = Allocation.trusted(app_ids, x)
+            validate_allocation(alloc, apps, cluster, d=d)
+            return alloc
         alloc = Allocation(app_ids, x)
         validate_allocation(alloc, apps, cluster, d=d)
         return alloc
@@ -1782,6 +1821,12 @@ class AutoOptimizer:
     @property
     def pricing_s(self) -> float:
         return self._milp.pricing_s if self._milp is not None else 0.0
+
+    @property
+    def backend(self):
+        """The greedy solver's array backend (compile_s feeds the master's
+        `backend_compile` phase bucket)."""
+        return self._greedy.backend
 
     @property
     def last_gap(self) -> Optional[float]:

@@ -223,13 +223,24 @@ class PolicyTimer:
     def __init__(self, policy: Any):
         self.policy = as_policy(policy)
         self.calls: List[Tuple[str, float]] = []     # (kind, seconds)
+        # jit-compile seconds excluded from `calls` (jax backend only):
+        # first-event compilation is a process-lifetime one-off, so booking
+        # it into that event's time would poison per-event medians/means.
+        # Reported separately (bench_scale's backend_compile_s).
+        self.compile_s = 0.0
 
     def _timed(self, kind: str, fn, *args):
+        c0 = getattr(self.policy, "backend_compile_s", 0.0)
         t0 = _time.perf_counter()
         try:
             return fn(*args)
         finally:
-            self.calls.append((kind, _time.perf_counter() - t0))
+            dt = _time.perf_counter() - t0
+            dc = getattr(self.policy, "backend_compile_s", 0.0) - c0
+            if dc > 0.0:
+                self.compile_s += dc
+                dt = max(dt - dc, 0.0)
+            self.calls.append((kind, dt))
 
     def on_arrival(self, specs):
         return self._timed("arrival", self.policy.on_arrival, specs)

@@ -27,9 +27,11 @@ Exactness note: all incremental float updates (free capacity, aggregate
 n_max demand) are add/subtract of products of integers stored in float64,
 which is exact while magnitudes stay far below 2**53 -- the same argument
 the optimizer's delta path already relies on. For fractional demands the
-callers fall back to freshly-computed quantities (see
-`GreedyOptimizer`'s integral-demand guard), so bit-exactness versus the
-object-engine reference never depends on float associativity.
+callers CANONICALIZE instead of trusting the running values: the optimizer
+probes saturation with a fresh aggregation and derives its free matrix
+from `x` with one order-independent  cap - x^T d  matmul on every solve
+path (see `GreedyOptimizer.solve`), so bit-exactness across solve paths
+never depends on float associativity of the incremental updates.
 """
 from __future__ import annotations
 

@@ -1,0 +1,113 @@
+"""Best-fit placement inner loop as a Pallas TPU kernel.
+
+The scheduler's batched best-fit scatter grants `need` containers of one
+app across slaves in ascending (score, slave index) order, each slave
+capped at its max feasible count q_j:
+
+    order = argsort(score)            # stable
+    counts[order] = diff(min(cumsum(q[order]), need))
+
+A sort is an awkward TPU primitive, but the same result has a sort-free
+closed form: slave j's position in the fill order is determined by the
+total q of slaves that strictly precede it,
+
+    before_j = sum_k q_k * [(score_k, k) < (score_j, j)]      (lexicographic)
+    counts_j = clip(need - before_j, 0, q_j)
+
+(b_j = min(cumsum) prefix available when j is reached; each slave takes
+min(q_j, what's left)). That is an O(b^2) masked reduction -- a natural
+(J, K) Pallas grid of rank-compare tiles with an accumulate-then-epilogue
+pattern (same shape as the moe_gemm kernel's K loop), and for the
+scheduler's b it is far below the flops the MXU wastes on a sort.
+
+Contract (enforced by the caller, `repro.core.backend.JaxBackend`):
+  * q int32, pre-clipped to [0, need]; infeasible slaves carry q = 0 (their
+    score may be +inf). int32 accumulation then never overflows for
+    b * need < 2^31.
+  * score f32 on real TPUs (f64 is unsupported there); the f64 bitwise
+    guarantee applies to the lax fallback, which is what non-TPU backends
+    use. In interpret mode the kernel accepts f64 too, which is how the
+    tests pin it against the oracle exactly.
+
+`best_fit_counts_ref` is the pure-jnp oracle (the argsort/cumfill
+composition itself).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _placement_kernel(score_j_ref, score_k_ref, q_k_ref, q_j_ref, need_ref,
+                      out_ref, *, block: int):
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sj = score_j_ref[...]                                  # (1, B)
+    sk = score_k_ref[...].reshape(block, 1)                # (B, 1)
+    qk = q_k_ref[...].reshape(block, 1)                    # (B, 1)
+    jidx = (pl.program_id(0) * block
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1))
+    kidx = (k * block
+            + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0))
+    # (B_k, B_j) strict-predecessor mask, ties broken by slave index.
+    precedes = (sk < sj) | ((sk == sj) & (kidx < jidx))
+    out_ref[...] += jnp.sum(
+        jnp.where(precedes, qk, 0), axis=0, dtype=jnp.int32,
+    ).reshape(1, block)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        need = need_ref[0, 0]
+        before = out_ref[...]
+        out_ref[...] = jnp.clip(need - before, 0, q_j_ref[...])
+
+
+def best_fit_counts(score: jnp.ndarray, q: jnp.ndarray, need: jnp.ndarray,
+                    *, block: int = 256,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """score (b,), q (b,) int32 in [0, need], need () int32 -> counts (b,).
+
+    `interpret=None` resolves like `repro.kernels.ops`: compiled on TPU,
+    interpreter elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = score.shape[0]
+    bb = min(block, b)
+    if b % bb:
+        raise ValueError(f"slaves {b} must divide block {bb}")
+    grid = (b // bb, b // bb)
+    s2 = score.reshape(1, b)
+    q2 = q.reshape(1, b)
+    need2 = need.reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_placement_kernel, block=bb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bb), lambda j, k: (0, j)),    # score, j tile
+            pl.BlockSpec((1, bb), lambda j, k: (0, k)),    # score, k tile
+            pl.BlockSpec((1, bb), lambda j, k: (0, k)),    # q, k tile
+            pl.BlockSpec((1, bb), lambda j, k: (0, j)),    # q, j tile
+            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),     # need
+        ],
+        out_specs=pl.BlockSpec((1, bb), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, b), jnp.int32),
+        interpret=interpret,
+    )(s2, s2, q2, q2, need2)
+    return out.reshape(b)
+
+
+def best_fit_counts_ref(score: jnp.ndarray, q: jnp.ndarray,
+                        need: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle: the argsort/cumfill composition itself."""
+    order = jnp.argsort(score, stable=True)
+    csum = jnp.minimum(jnp.cumsum(q[order]), need.astype(q.dtype))
+    counts = csum - jnp.concatenate([jnp.zeros(1, csum.dtype), csum[:-1]])
+    return jnp.zeros_like(q).at[order].set(counts.astype(q.dtype))

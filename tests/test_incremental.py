@@ -117,11 +117,12 @@ def test_greedy_delta_and_full_agree_on_solve_sequence():
     assert inc.delta_solves > 0
 
 
-def test_fractional_demands_fall_back_to_full_path():
-    """Non-integer demands (Alibaba plan_cpu/100 replays) could differ in
-    the last ulp between the delta path's matmul free computation and the
-    full path's sequential subtraction, so the delta path must decline --
-    and the streams stay bit-exact trivially."""
+def test_fractional_demands_take_delta_path_and_stay_bit_exact():
+    """Non-integer demands (Philly n_cpus/n_gpus, Alibaba plan_cpu/100
+    replays). PR 6 closed the replay delta-solve hole: the SoA engine now
+    canonicalizes the free matrix (one  cap - x^T d  matmul on both the
+    delta and full paths), so fractional streams take the incremental path
+    AND stay bit-exact with the full re-solve."""
     from repro.core import ApplicationSpec, WorkloadApp
     cluster = ClusterSpec.homogeneous(6, ResourceVector.of(10, 0, 64))
     wl = []
@@ -132,7 +133,15 @@ def test_fractional_demands_fall_back_to_full_path():
         wl.append(WorkloadApp(spec=spec, class_index=0,
                               base_duration_s=3600.0))
     m_inc = _assert_stream_bit_exact(cluster, wl)
-    assert m_inc.optimizer.delta_solves == 0     # declined, by design
+    assert m_inc.optimizer.delta_solves > 0      # the hole is closed
+    # The legacy engine keeps the old conservative guard (its full path
+    # subtracts rows sequentially, so the matmul warm start must decline).
+    m_leg = DormMaster(cluster, "greedy",
+                       OptimizerConfig(0.2, 0.2, incremental=True,
+                                       soa=False),
+                       protocol=RecordingProtocol())
+    _run_recording(m_leg, wl)
+    assert m_leg.optimizer.delta_solves == 0
 
 
 # ------------------------------------------------- hypothesis stream check

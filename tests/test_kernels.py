@@ -144,3 +144,40 @@ def test_ops_auto_falls_back_to_ref_on_cpu():
     o_auto = ops.flash_attention(q, k, v, impl="auto")
     o_ref = ops.flash_attention(q, k, v, impl="ref")
     assert float(jnp.abs(o_auto - o_ref).max()) == 0.0
+
+
+# -------------------------------------------------- placement (scheduler)
+
+PLACE_SIZES = [8, 32, 256, 512]
+
+
+@pytest.mark.parametrize("b", PLACE_SIZES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_best_fit_counts_vs_oracle(b, dtype):
+    from jax.experimental import enable_x64
+
+    from repro.kernels.placement import best_fit_counts, best_fit_counts_ref
+    with enable_x64():
+        rng = np.random.default_rng(b)
+        for trial in range(6):
+            score = rng.uniform(0.0, 4.0, size=b)
+            if trial % 2:                      # force ties + infeasibles
+                score = np.round(score, 1)
+                score[rng.integers(b, size=max(b // 4, 1))] = np.inf
+            q = rng.integers(0, 7, size=b).astype(np.int32)
+            q[~np.isfinite(score)] = 0         # contract: infeasible q=0
+            need = np.int32(rng.integers(1, int(q.sum()) + 2))
+            q = np.minimum(q, need).astype(np.int32)
+            s = jnp.asarray(score, dtype=dtype)
+            got = best_fit_counts(s, jnp.asarray(q), jnp.asarray(need),
+                                  block=256, interpret=True)
+            ref = best_fit_counts_ref(s, jnp.asarray(q), jnp.asarray(need))
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref),
+                                          err_msg=f"b={b} trial={trial}")
+
+
+def test_best_fit_counts_rejects_ragged_block():
+    from repro.kernels.placement import best_fit_counts
+    with pytest.raises(ValueError):
+        best_fit_counts(jnp.zeros(10), jnp.zeros(10, jnp.int32),
+                        jnp.int32(1), block=4, interpret=True)

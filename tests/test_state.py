@@ -286,8 +286,8 @@ def test_phase_breakdown_and_telemetry_row():
     m.submit(_app(2))
     m.complete("app1")
     phases = m.phase_breakdown()
-    assert set(phases) == {"drf_refill", "colgen_pricing", "solve",
-                           "enforce", "metrics"}
+    assert set(phases) == {"drf_refill", "colgen_pricing", "backend_compile",
+                           "solve", "enforce", "metrics"}
     assert all(v >= 0.0 for v in phases.values())
     assert phases["solve"] + phases["drf_refill"] > 0.0
     logger = MetricsLogger()
