@@ -2,15 +2,23 @@
 x 2000 jobs (closes the measured-bench half of the ROADMAP's "replay-driven
 XL benchmarks" item).
 
-Two measurements over ONE replayed Philly-schema trace (synthetic by
+Three measurements over ONE replayed Philly-schema trace (synthetic by
 default -- fractional per-container demands, served by the delta fast
 path since the free-capacity vector is canonicalized on every solve
 path, exactly like tests/test_replay_xl.py -- or a real log via
 --trace):
 
   * runtime replay -- the full event-driven simulation through
-    `ClusterRuntime` with bench_scale-style timing (PolicyTimer medians,
-    churn, completions),
+    `ClusterRuntime` with the event-storm absorber engaged
+    (`AbsorberConfig(window_s=--batch-window-s)`: mixed arrival +
+    completion + resize floods coalesce into one policy pass each) and
+    bench_scale-style timing (PolicyTimer medians amortize each absorbed
+    pass over its events; absorbed-event fraction and the batch-size
+    histogram are reported),
+  * matched-scale synthetic trace -- the same cluster and scheduler over
+    a `generate_trace` workload of the same size, closing the ROADMAP
+    gate "replay per-event median within ~2x of the synthetic-trace
+    median at matched scale",
   * exact static solve -- the column-generation optimizer driven from the
     replayed instance (every replayed job as one app), reporting its
     CERTIFIED optimality gap and solve seconds next to the greedy
@@ -34,9 +42,10 @@ import time
 
 import numpy as np
 
-from repro.core import (ClusterSimulator, DormMaster, GreedyOptimizer,
-                        OptimizerConfig, PolicyTimer, Reallocated,
-                        RecordingProtocol, container_churn,
+from repro.core import (AbsorberConfig, ClusterSimulator, DormMaster,
+                        GreedyOptimizer, OptimizerConfig, PolicyTimer,
+                        Reallocated, RecordingProtocol, TraceConfig,
+                        container_churn, generate_trace,
                         heterogeneous_cluster, make_optimizer, replay_trace,
                         resource_utilization)
 
@@ -61,22 +70,15 @@ def synthetic_philly_csv(n_jobs: int, seed: int = 0) -> str:
     return "\n".join(lines) + "\n"
 
 
-def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
-        trace: str = "", fmt: str = "philly",
-        horizon_s: float = 96 * 3600.0, batch_window_s: float = 60.0,
-        theta1: float = 0.2, theta2: float = 0.2,
-        colgen_apps: int = 0,
-        json_path: str = "BENCH_replay.json"):
-    wl = replay_trace(trace or synthetic_philly_csv(n_apps, seed), fmt=fmt)
-    cluster = heterogeneous_cluster(n_slaves, seed=seed)
-
-    # -- runtime replay (the measured 5000x2000 half of the ROADMAP item).
+def _drive(cluster, wl, horizon_s: float, window_s: float,
+           theta1: float, theta2: float):
+    """One absorber-engaged runtime drive; returns per-run stats."""
     cfg = OptimizerConfig(theta1, theta2, warm_start=True, incremental=True)
     master = DormMaster(cluster, "auto", cfg, protocol=RecordingProtocol())
     timer = PolicyTimer(master)
     sim = ClusterSimulator(timer, wl, adjustment_cost_s=60.0,
                            horizon_s=horizon_s,
-                           batch_window_s=batch_window_s)
+                           absorber=AbsorberConfig(window_s=window_s))
     churn = {"total": 0, "last": None}
 
     def on_realloc(ev):
@@ -89,10 +91,11 @@ def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
     res = sim.run()
     wall = time.perf_counter() - t0
     greedy = master.optimizer._greedy
-    replay_stats = {
+    ab = sim.runtime.absorber_stats
+    stats = {
         "wall_s": wall,
-        "events": len(res.samples),
-        "events_per_s": len(res.samples) / max(wall, 1e-9),
+        "events": ab["events"],
+        "events_per_s": ab["events"] / max(wall, 1e-9),
         "policy_time_s": timer.total_s(),
         "per_event_policy_ms": timer.mean_ms(),
         "per_event_policy_ms_median": timer.median_ms(),
@@ -104,7 +107,44 @@ def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
         "container_churn": churn["total"],
         "delta_solves": greedy.delta_solves,
         "full_solves": greedy.full_solves,
+        "absorber": {
+            "passes": ab["passes"],
+            "batches": ab["batches"],
+            "absorbed_events": ab["absorbed_events"],
+            "absorbed_fraction": (ab["absorbed_events"]
+                                  / max(ab["events"], 1)),
+            "batch_hist": {str(k): v for k, v
+                           in sorted(ab["batch_hist"].items())},
+        },
     }
+    return stats
+
+
+def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
+        trace: str = "", fmt: str = "philly",
+        horizon_s: float = 96 * 3600.0, batch_window_s: float = 60.0,
+        theta1: float = 0.2, theta2: float = 0.2,
+        colgen_apps: int = 0,
+        json_path: str = "BENCH_replay.json"):
+    wl = replay_trace(trace or synthetic_philly_csv(n_apps, seed), fmt=fmt)
+    cluster = heterogeneous_cluster(n_slaves, seed=seed)
+
+    # -- runtime replay (the measured 5000x2000 half of the ROADMAP item),
+    # with the storm absorber coalescing mixed event floods.
+    replay_stats = _drive(cluster, wl, horizon_s, batch_window_s,
+                          theta1, theta2)
+
+    # -- matched-scale synthetic trace: same cluster, same scheduler, same
+    # absorber window, `generate_trace` workload of the same size -- the
+    # denominator of the ROADMAP's replay-within-2x gate.
+    syn_wl = generate_trace(TraceConfig(n_apps=len(wl), seed=seed,
+                                        mean_interarrival_s=90.0))
+    synthetic_stats = _drive(cluster, syn_wl, horizon_s, batch_window_s,
+                             theta1, theta2)
+    median_ratio = (replay_stats["per_event_policy_ms_median"]
+                    / max(synthetic_stats["per_event_policy_ms_median"],
+                          1e-9))
+    replay_stats["vs_synthetic_median"] = median_ratio
 
     # -- exact static solve of the replayed instance: colgen's certified
     # gap vs the greedy heuristic, back to back in THIS process.
@@ -154,6 +194,15 @@ def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
          "fractional demands ride the canonicalized delta path"),
         ("replay.container_churn", replay_stats["container_churn"],
          "count", ""),
+        ("replay.absorbed_fraction",
+         replay_stats["absorber"]["absorbed_fraction"], "frac",
+         f"{replay_stats['absorber']['batches']} batches absorbed "
+         f"{replay_stats['absorber']['absorbed_events']} events"),
+        ("replay.synthetic_policy_ms_median",
+         synthetic_stats["per_event_policy_ms_median"], "ms",
+         f"matched-scale generate_trace ({len(syn_wl)} apps)"),
+        ("replay.vs_synthetic_median", median_ratio, "x",
+         "ROADMAP gate: <= 2x synthetic median at matched scale"),
         ("replay.colgen_solve_s", colgen_stats["solve_s"], "s",
          f"{colgen_stats['apps']} replayed apps; static instance"),
         ("replay.colgen_gap", colgen_stats["certified_gap"], "frac",
@@ -171,6 +220,7 @@ def run(n_slaves: int = 5000, n_apps: int = 2000, seed: int = 0,
                    "batch_window_s": batch_window_s,
                    "theta1": theta1, "theta2": theta2},
         "replay": replay_stats,
+        "synthetic": synthetic_stats,
         "colgen": colgen_stats,
         "greedy": greedy_stats,
     }

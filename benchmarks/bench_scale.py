@@ -47,10 +47,10 @@ import argparse
 import json
 import time
 
-from repro.core import (ClusterSimulator, DormMaster, MilpOptimizer,
-                        OptimizerConfig, PolicyTimer, Reallocated,
-                        RecordingProtocol, TraceConfig, backend_available,
-                        container_churn, generate_trace,
+from repro.core import (AutoBackend, ClusterSimulator, DormMaster,
+                        MilpOptimizer, OptimizerConfig, PolicyTimer,
+                        Reallocated, RecordingProtocol, TraceConfig,
+                        backend_available, container_churn, generate_trace,
                         heterogeneous_cluster, resource_utilization)
 
 from .common import emit
@@ -253,6 +253,26 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
     else:
         rows += [("scale.jax_median_ratio", "", "x", "jax unavailable")]
 
+    # backend="auto" crossover record: the dispatcher's live thresholds and
+    # which delegate it picks at this scale and at xl (5000x2000) -- the
+    # measured basis for AUTO_CROSSOVER_* lives in the jax/numpy median
+    # ratios above (and xl_jax_median_ratio below under --xl).
+    auto_be = AutoBackend()
+    backend_auto = {
+        "crossover_slaves": auto_be.crossover_slaves,
+        "crossover_apps": auto_be.crossover_apps,
+        "jax_available": have_jax,
+        "picks_at_bench_scale": auto_be._pick(
+            n_slaves, auto_be.crossover_slaves).name,
+        "picks_at_xl_scale": auto_be._pick(
+            5000, auto_be.crossover_slaves).name,
+    }
+    rows += [
+        ("scale.auto_crossover_slaves", auto_be.crossover_slaves, "count",
+         f"auto picks {backend_auto['picks_at_bench_scale']} at "
+         f"{n_slaves} slaves / {backend_auto['picks_at_xl_scale']} at xl"),
+    ]
+
     # Exact-solver head-to-head (monolithic vs rolling vs colgen) on ONE
     # static instance small enough for the monolithic grid: the certified
     # gaps and solve-time columns land in the JSON report and the colgen
@@ -291,6 +311,7 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
         "timeline_bit_exact": bit_exact,
         "timeline_bit_exact_vs_legacy_engine": bit_exact_engines,
         "timeline_bit_exact_vs_jax": bit_exact_jax,
+        "backend_auto": backend_auto,
         "exact_solvers": exact,
     }
 

@@ -91,7 +91,10 @@ total = rep["config"]["apps"]
 delta = rep["replay"]["delta_solves"]
 full = rep["replay"]["full_solves"]
 frac = delta / max(delta + full, 1)
-ok = (gap is not None and gap <= 0.01 and done == total and frac > 0.0)
+absorbed = rep["replay"]["absorber"]["absorbed_fraction"]
+ratio = rep["replay"]["vs_synthetic_median"]
+ok = (gap is not None and gap <= 0.01 and done == total and frac > 0.0
+      and absorbed > 0.0 and ratio <= 2.0)
 print(f"  replay completed: {done}/{total}"
       + ("" if done == total else "  FAIL"))
 # Regression gate for the fractional-demand delta hole (used to be
@@ -99,6 +102,15 @@ print(f"  replay completed: {done}/{total}"
 print(f"  replay delta_solve_fraction: {frac:.3f} "
       f"({delta} delta / {full} full; floor: > 0)"
       + ("" if frac > 0.0 else "  FAIL"))
+# Storm-absorber engagement: real traces are bursty, so a replay where no
+# mixed flood coalesced means the absorber silently disengaged.
+print(f"  replay absorbed_fraction: {absorbed:.3f} (floor: > 0; "
+      f"batch_hist {rep['replay']['absorber']['batch_hist']})"
+      + ("" if absorbed > 0.0 else "  FAIL"))
+# ROADMAP gate: replay per-event median within 2x of the synthetic-trace
+# median at matched scale (same cluster, scheduler and absorber window).
+print(f"  replay vs_synthetic_median: {ratio:.3f}x (ceiling: 2.0x)"
+      + ("" if ratio <= 2.0 else "  FAIL"))
 print(f"  replay colgen_certified_gap: {gap} (ceiling: 0.01)"
       + ("" if (gap is not None and gap <= 0.01) else "  FAIL"))
 sys.exit(0 if ok else 1)

@@ -4,8 +4,8 @@ from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
                          RecordingProtocol)
 from .autoscale import (AutoscaleConfig, AutoscalePolicy, LoadSignal,
                         ReplayLoadSignal, SLOMonitor, signals_from_workload)
-from .backend import (Backend, JaxBackend, NumpyBackend, backend_available,
-                      get_backend)
+from .backend import (AutoBackend, Backend, JaxBackend, NumpyBackend,
+                      backend_available, get_backend)
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
@@ -21,10 +21,10 @@ from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
                         make_optimizer)
 from .partition import Partition, TaskExecutor, TaskScheduler
 from .replay import REPLAY_CLASS_INDEX, ReplayConfig, replay_trace
-from .runtime import (AppRuntime, Arrival, ClusterRuntime, Completion, Event,
-                      EventBus, MetricSample, PolicyTimer, Reallocated,
-                      ReallocationResult, Resize, ScaleDecision,
-                      SchedulerPolicy, SimResult, Tick, as_policy)
+from .runtime import (AbsorberConfig, AppRuntime, Arrival, ClusterRuntime,
+                      Completion, Event, EventBus, MetricSample, PolicyTimer,
+                      Reallocated, ReallocationResult, Resize, ScaleDecision,
+                      SchedulerPolicy, SimResult, Storm, Tick, as_policy)
 from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
                         speedup_ratios)
 from .slave import Container, DormSlave
@@ -40,8 +40,8 @@ from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
                        sample_app_duration_s, sample_task_duration_s)
 
 __all__ = [
-    "Backend", "JaxBackend", "NumpyBackend", "backend_available",
-    "get_backend",
+    "AutoBackend", "Backend", "JaxBackend", "NumpyBackend",
+    "backend_available", "get_backend",
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
     "RecordingProtocol", "AutoscaleConfig", "AutoscalePolicy", "LoadSignal",
     "ReplayLoadSignal", "SLOMonitor", "signals_from_workload",
@@ -58,9 +58,9 @@ __all__ = [
     "OptimizerConfig", "adjust_budget", "fairness_budget", "make_optimizer",
     "Partition", "TaskExecutor", "TaskScheduler",
     "REPLAY_CLASS_INDEX", "ReplayConfig", "replay_trace",
-    "AppRuntime", "Arrival", "ClusterRuntime", "Completion", "Event",
-    "EventBus", "MetricSample", "PolicyTimer", "Reallocated", "Resize",
-    "SchedulerPolicy", "SimResult", "Tick", "as_policy",
+    "AbsorberConfig", "AppRuntime", "Arrival", "ClusterRuntime", "Completion",
+    "Event", "EventBus", "MetricSample", "PolicyTimer", "Reallocated",
+    "Resize", "SchedulerPolicy", "SimResult", "Storm", "Tick", "as_policy",
     "ClusterSimulator", "ReferenceClusterSimulator", "speedup_ratios",
     "Container", "DormSlave",
     "ClusterState", "LazyAppViews", "LazySlaveViews", "StateSlaveView",

@@ -16,6 +16,13 @@ explicit seam under them:
     exhaustion passes). On TPU the placement inner loop dispatches to the
     Pallas kernel in `repro.kernels.placement`; everywhere else the lax
     composition is the fallback.
+  * `AutoBackend`   -- `backend="auto"`: problem-size dispatch between the
+    two, numpy below the measured crossover (AUTO_CROSSOVER_*), jax above.
+
+PR 7 adds `place_run`: the whole multi-app placement loop of one solver
+pass as ONE backend program (one jit'd `lax.scan` over the batch schedule
+on jax, one fused pass on numpy), so a storm-absorbed event flood costs
+one device dispatch instead of one per app.
 
 Static shapes + padding contract
 --------------------------------
@@ -48,8 +55,9 @@ empirically, fractional demands included.
 """
 from __future__ import annotations
 
+import os
 import time as _time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -239,6 +247,39 @@ class Backend:
         free[js] -= counts[:, None].astype(np.float64) * di[None, :]
         return True
 
+    def place_run(self, x: np.ndarray, free: np.ndarray, d: np.ndarray,
+                  inv_cap: np.ndarray,
+                  items: Sequence[Tuple[int, int]]) -> List[int]:
+        """Fused multi-app placement: execute a whole placement SCHEDULE --
+        ordered (app row, count limit) pairs, exactly the visits the
+        optimizer's two best-fit passes would make -- in one backend call,
+        mutating `x`/`free` in place.
+
+        -> per-item granted container totals (0 = nothing placed), in
+        schedule order. Sequential semantics are the contract: item k sees
+        the free capacity left by items 0..k-1, and an app appearing twice
+        (n_min pass then target pass) sees its own earlier grants. The base
+        implementation is the literal sequential loop (bit-identical with
+        per-item `place` calls by construction); `JaxBackend` overrides it
+        with a single jitted program so the host dispatches once per SOLVE
+        instead of once per app."""
+        grants: List[int] = []
+        for i, limit in items:
+            di = d[i]
+            need = limit - int(x[i].sum())
+            if need <= 0:
+                grants.append(0)
+                continue
+            out = self.place_counts(free, di, inv_cap, need)
+            if out is None:
+                grants.append(0)
+                continue
+            js, counts = out
+            x[i, js] += counts
+            free[js] -= counts[:, None].astype(np.float64) * di[None, :]
+            grants.append(int(counts.sum()))
+        return grants
+
 
 class NumpyBackend(Backend):
     """Host reference backend (the extracted seed implementation)."""
@@ -314,8 +355,7 @@ def _build_jax_fns(use_pallas: bool) -> Dict[str, object]:
     def probe(d, n_max, total):
         return jnp.all(n_max @ d <= total + _EPS)
 
-    @jax.jit
-    def place(free, di, inv_cap, need):
+    def place_core(free, di, inv_cap, need_i):
         """-> dense (b,) int64 grant counts (0 on non-granted slaves).
 
         Equals numpy's argsort/cumfill scatter: the argmin fast path needs
@@ -323,10 +363,11 @@ def _build_jax_fns(use_pallas: bool) -> Dict[str, object]:
         (score, index) key sorts first receives the whole batch from the
         clipped cumsum too), and clipping q at `need` before the cumsum
         never changes diff(min(cumsum, need)) while keeping the int64 sums
-        small enough for the Pallas kernel's int32 accumulators."""
+        small enough for the Pallas kernel's int32 accumulators. `need_i`
+        may be 0 (a no-op schedule entry inside `place_run`): every q is
+        then clipped to 0 and no slave is granted."""
         b, m = free.shape
-        need_i = need.astype(jnp.int64)
-        need_f = need.astype(free.dtype)
+        need_f = need_i.astype(free.dtype)
         # Per-resource ops are unrolled over the static m (<= 8 in this
         # repo), keeping numpy's left-to-right pairwise order bit-for-bit.
         fit = di[0] <= free[:, 0] + _EPS
@@ -357,6 +398,45 @@ def _build_jax_fns(use_pallas: bool) -> Dict[str, object]:
         csum = jnp.minimum(jnp.cumsum(qn[order]), need_i)
         counts = csum - jnp.concatenate([jnp.zeros(1, jnp.int64), csum[:-1]])
         return jnp.zeros(b, jnp.int64).at[order].set(counts)
+
+    @jax.jit
+    def place(free, di, inv_cap, need):
+        return place_core(free, di, inv_cap, need.astype(jnp.int64))
+
+    @jax.jit
+    def place_run(free0, inv_cap, d_items, lims, bases, aslots):
+        """Fused multi-app placement: ONE device program executes a whole
+        (app, limit) placement schedule -- the per-app `place` body inside
+        a lax.scan carrying the free-capacity matrix -- so the host
+        dispatches once per SOLVE instead of once per app (and on TPUs the
+        Pallas placement kernel runs inside this single program).
+
+        Schedule entry k: demand row d_items[k], count limit lims[k], the
+        app's container total before this run bases[k], and aslots[k] = the
+        most recent earlier entry of the SAME app (-1 if none) -- totals
+        are chained through that link so need = lim - base - already
+        granted, exactly the sequential `x[i].sum()` recomputation.
+        Zero-padded entries (need 0) provably leave the carry unchanged
+        (0 * d subtracts exact zeros), preserving bit-exactness."""
+        K = d_items.shape[0]
+
+        def body(carry, inp):
+            free, totals = carry
+            di, lim, base, aslot, k = inp
+            prev = jnp.where(aslot >= 0,
+                             totals[jnp.maximum(aslot, 0)],
+                             jnp.int64(0))
+            need = jnp.maximum(lim - base - prev, 0)
+            counts = place_core(free, di, inv_cap, need)
+            free = free - counts[:, None].astype(free.dtype) * di[None, :]
+            totals = totals.at[k].set(prev + counts.sum())
+            return (free, totals), counts
+
+        totals0 = jnp.zeros(K, jnp.int64)
+        ks = jnp.arange(K, dtype=jnp.int64)
+        (_, _), grants = lax.scan(
+            body, (free0, totals0), (d_items, lims, bases, aslots, ks))
+        return grants
 
     @jax.jit
     def ladder(d, n_min, n_max, w, valid, total, levels):
@@ -441,7 +521,8 @@ def _build_jax_fns(use_pallas: bool) -> Dict[str, object]:
         cnt_f, _, _, _ = lax.while_loop(lambda st: ~st[3], body, init)
         return cnt_f
 
-    _JAX_FNS[use_pallas] = {"probe": probe, "place": place, "ladder": ladder}
+    _JAX_FNS[use_pallas] = {"probe": probe, "place": place,
+                            "place_run": place_run, "ladder": ladder}
     return _JAX_FNS[use_pallas]
 
 
@@ -547,14 +628,7 @@ class JaxBackend(Backend):
 
     def place_counts(self, free, di, inv_cap, need):
         b, m = free.shape
-        b_pad = _pow2(b)
-        if b_pad != b:
-            f_p = np.full((b_pad, m), -1.0)     # sentinel: nothing fits
-            f_p[:b] = free
-            ic_p = np.zeros((b_pad, m))
-            ic_p[:b] = inv_cap
-        else:
-            f_p, ic_p = free, inv_cap
+        f_p, ic_p = self._pad_slaves(free, inv_cap)
         counts = np.asarray(self._run("place", f_p, di, ic_p,
                                       np.int64(need)))[:b]
         js = np.flatnonzero(counts)
@@ -562,12 +636,160 @@ class JaxBackend(Backend):
             return None
         return js, counts[js]
 
+    def _pad_slaves(self, free, inv_cap):
+        b, m = free.shape
+        b_pad = _pow2(b)
+        if b_pad == b:
+            return free, inv_cap
+        f_p = np.full((b_pad, m), -1.0)         # sentinel: nothing fits
+        f_p[:b] = free
+        ic_p = np.zeros((b_pad, m))
+        ic_p[:b] = inv_cap
+        return f_p, ic_p
+
+    def place_run(self, x, free, d, inv_cap, items):
+        """One jitted program for the whole placement schedule (see the
+        jit body in `_build_jax_fns`); the host applies the resulting
+        grant matrix to `x`/`free` with the same sparse arithmetic the
+        numpy path uses."""
+        K = len(items)
+        if K == 0:
+            return []
+        b, m = free.shape
+        # Tight pow2 (floor 1), NOT `_pow2`: its floor-8 bucket is right for
+        # vectorized app axes, but the scan pays per STEP, so padding a
+        # K=1 flood to 8 steps would octuple the device work. Worst case
+        # this costs log2 extra one-time compiles (K_pad 1, 2, 4, ...).
+        K_pad = 1 << (K - 1).bit_length()
+        f_p, ic_p = self._pad_slaves(free, inv_cap)
+        idx = np.fromiter((i for i, _ in items), np.int64, K)
+        d_items = np.zeros((K_pad, m), np.float64)
+        d_items[:K] = d[idx]
+        lims = np.zeros(K_pad, np.int64)
+        lims[:K] = np.fromiter((lim for _, lim in items), np.int64, K)
+        bases = np.zeros(K_pad, np.int64)
+        bases[:K] = x[idx].sum(axis=1)
+        aslots = np.full(K_pad, -1, np.int64)
+        last: Dict[int, int] = {}
+        for k, i in enumerate(idx.tolist()):
+            j = last.get(i)
+            if j is not None:
+                aslots[k] = j
+            last[i] = k
+        grants = np.asarray(self._run("place_run", f_p, ic_p, d_items,
+                                      lims, bases, aslots))[:K, :b]
+        out: List[int] = []
+        for k in range(K):
+            counts = grants[k]
+            js = np.flatnonzero(counts)
+            if js.size:
+                i = int(idx[k])
+                cj = counts[js]
+                x[i, js] += cj
+                free[js] -= cj[:, None].astype(np.float64) * d[i][None, :]
+                out.append(int(cj.sum()))
+            else:
+                out.append(0)
+        return out
+
+
+# ------------------------------------------------------------------- auto
+
+
+# Measured problem-size crossover (BENCH_scale.json records the live
+# values): at 1000 slaves x 500 apps the jax per-event median loses to
+# numpy (host dispatch dominates ~1 ms events), at 5000 x 2000 it wins
+# (~0.9x). The default sits between the two measured points; override via
+# the env knobs for other hardware.
+AUTO_CROSSOVER_SLAVES = 2048
+AUTO_CROSSOVER_APPS = 1024
+
+
+class AutoBackend(Backend):
+    """Problem-size dispatcher (`backend="auto"` / REPRO_BACKEND=auto):
+    numpy below a measured crossover, jax above it.
+
+    Both delegates are pinned bit-exact against each other (the parity
+    suite + the bench `timeline_bit_exact_vs_jax` gate), so mixing them
+    per kernel call is safe: the placement kernels switch on the SLAVE
+    axis (their dominant dimension), the ladder/probe kernels on the app
+    axis. When jax is not importable the dispatcher degrades to pure
+    numpy instead of failing, so REPRO_BACKEND=auto is safe everywhere."""
+
+    name = "auto"
+
+    def __init__(self, crossover_slaves: Optional[int] = None,
+                 crossover_apps: Optional[int] = None):
+        self.crossover_slaves = int(
+            os.environ.get("REPRO_AUTO_CROSSOVER_SLAVES",
+                           AUTO_CROSSOVER_SLAVES)
+            if crossover_slaves is None else crossover_slaves)
+        self.crossover_apps = int(
+            os.environ.get("REPRO_AUTO_CROSSOVER_APPS", AUTO_CROSSOVER_APPS)
+            if crossover_apps is None else crossover_apps)
+        self._np = NumpyBackend()
+        self._jax: Optional[JaxBackend] = None
+        self._jax_ok = backend_available("jax")
+
+    def _pick(self, size: int, crossover: int) -> Backend:
+        if not self._jax_ok or size < crossover:
+            return self._np
+        if self._jax is None:                   # lazy: first large call
+            self._jax = JaxBackend()
+        return self._jax
+
+    @property
+    def compile_s(self) -> float:
+        return self._jax.compile_s if self._jax is not None else 0.0
+
+    @compile_s.setter
+    def compile_s(self, value: float) -> None:
+        if self._jax is not None:
+            self._jax.compile_s = value
+
+    # ---- ops protocol: host ops stay on numpy (never the bottleneck)
+    def argsort(self, keys):
+        return self._np.argsort(keys)
+
+    def cumsum(self, a, axis: int = 0):
+        return self._np.cumsum(a, axis=axis)
+
+    def segment_sum(self, values, segments, n_segments: int):
+        return self._np.segment_sum(values, segments, n_segments)
+
+    def masked_select(self, mask):
+        return self._np.masked_select(mask)
+
+    def cumfill(self, q, budget: int):
+        return self._np.cumfill(q, budget)
+
+    # ---- scheduler kernels: size-dispatched
+    def saturating_probe(self, d, n_max, total) -> bool:
+        return self._pick(d.shape[0],
+                          self.crossover_apps).saturating_probe(d, n_max,
+                                                                total)
+
+    def ladder_counts(self, d, n_min, n_max, weight, total):
+        return self._pick(d.shape[0],
+                          self.crossover_apps).ladder_counts(
+            d, n_min, n_max, weight, total)
+
+    def place_counts(self, free, di, inv_cap, need):
+        return self._pick(free.shape[0],
+                          self.crossover_slaves).place_counts(
+            free, di, inv_cap, need)
+
+    def place_run(self, x, free, d, inv_cap, items):
+        return self._pick(free.shape[0],
+                          self.crossover_slaves).place_run(
+            x, free, d, inv_cap, items)
+
 
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
 
-_BACKENDS = {"numpy": NumpyBackend, "jax": JaxBackend}
+_BACKENDS = {"numpy": NumpyBackend, "jax": JaxBackend, "auto": AutoBackend}
 
 
 def get_backend(name: str) -> Backend:

@@ -64,7 +64,7 @@ class DormMaster:
         # Per-phase wall time (solve vs enforce vs metrics; the optimizer
         # tracks the DRF-refill share of solve) -- see `phase_breakdown`.
         self.phase_s: Dict[str, float] = {
-            "solve": 0.0, "enforce": 0.0, "metrics": 0.0}
+            "solve": 0.0, "enforce": 0.0, "metrics": 0.0, "absorb": 0.0}
         if self._soa:
             self.state: Optional[ClusterState] = ClusterState(cluster)
             self.slaves = LazySlaveViews(self.state)
@@ -138,6 +138,111 @@ class DormMaster:
     def on_tick(self, t: float) -> Optional[ReallocationResult]:
         """Periodic rebalance (runtime `Tick` event)."""
         return self.reallocate()
+
+    def on_batch(self, completions: Sequence[str],
+                 resizes: Sequence[Tuple[str, Optional[int], Optional[int]]],
+                 arrivals: Sequence[ApplicationSpec],
+                 ) -> ReallocationResult:
+        """One policy pass absorbing a mixed event flood (runtime `Storm`):
+        the queue-based load-leveling endpoint of `AbsorberConfig`.
+
+        Merge semantics:
+          * an arrival whose app_id also appears in `completions` CANCELS
+            against it (both dropped) -- cannot arise from the runtime's
+            absorber (an unadmitted app cannot complete) but direct API
+            callers get the documented queue-merge behavior;
+          * completions fold into a single free-capacity update (every
+            finished partition torn down, its prev_alloc row dropped)
+            before the solve;
+          * resizes dedupe LAST-WINS per app; resizes targeting apps that
+            completed in the same flood (or were never admitted) drop;
+          * arrivals admit with `submit_batch`'s rollback-safe contract;
+          * ONE reallocation solves the merged state. If any surviving
+            resize TIGHTENED its bounds and the merged solve is
+            infeasible, the tightening resizes are rejected as a GROUP
+            (bounds revert, relaxing resizes stick -- they cannot have
+            caused the infeasibility) and the flood re-solves with the
+            keep-allocations fallback. Per-event processing rejects
+            tightening resizes individually; the absorber trades that
+            granularity for one solve per flood.
+
+        Merge bookkeeping is timed into the `absorb` phase bucket."""
+        t0 = _time.perf_counter()
+        comp_set = set(completions)
+        cancelled = {s.app_id for s in arrivals} & comp_set
+        arrivals = [s for s in arrivals if s.app_id not in cancelled]
+        # -- completions: one folded free-capacity update.
+        for app_id in completions:
+            if app_id in cancelled:
+                continue
+            if app_id in self.partitions and app_id in self.specs:
+                self.protocol.kill(self.specs[app_id])
+            self._teardown(app_id)
+            self.specs.pop(app_id, None)
+            if self.state is not None and app_id in self.state:
+                self.state.forget(app_id)
+            if app_id in self.pending:
+                self.pending.remove(app_id)
+        drop = comp_set - cancelled
+        if drop and self.prev_alloc is not None \
+                and drop & set(self.prev_alloc.app_ids):
+            keep = [i for i, a in enumerate(self.prev_alloc.app_ids)
+                    if a not in drop]
+            self.prev_alloc = Allocation.trusted(
+                tuple(self.prev_alloc.app_ids[i] for i in keep),
+                self.prev_alloc.x[keep])
+        # -- resizes: last-wins per app, dead targets dropped.
+        merged: Dict[str, Tuple[Optional[int], Optional[int]]] = {}
+        for app_id, n_min, n_max in resizes:
+            if app_id in self.specs:
+                merged[app_id] = (n_min, n_max)
+        reverts: List[ApplicationSpec] = []      # tightened old specs
+        tightening = False
+        for app_id, (n_min, n_max) in merged.items():
+            spec = self.specs[app_id]
+            new = spec.with_bounds(n_min=n_min, n_max=n_max)
+            if new.n_min == spec.n_min and new.n_max == spec.n_max:
+                continue
+            if (new.n_min > spec.n_min
+                    or new.n_max < self.containers_of(app_id)):
+                tightening = True
+                reverts.append(spec)
+            self.specs[app_id] = new
+            if self.state is not None:
+                self.state.rebound(new)
+        # -- arrivals: submit_batch's rollback-safe admission.
+        seen = set()
+        for spec in arrivals:
+            if spec.app_id in self.specs or spec.app_id in seen:
+                raise ValueError(f"duplicate app_id {spec.app_id}")
+            seen.add(spec.app_id)
+        if self.state is not None and arrivals:
+            admitted: List[str] = []
+            try:
+                for spec in arrivals:
+                    self.state.admit(spec)
+                    admitted.append(spec.app_id)
+            except Exception:
+                for app_id in admitted:
+                    self.state.forget(app_id)
+                raise
+        for spec in arrivals:
+            self.specs[spec.app_id] = spec
+            self.pending.append(spec.app_id)
+        self.phase_s["absorb"] += _time.perf_counter() - t0
+        # -- ONE solve for the whole flood.
+        res = self.reallocate(reject_infeasible=tightening)
+        if res is None:
+            # Group-reject the tightening resizes and solve once more with
+            # the keep-allocations fallback (always returns a result).
+            t1 = _time.perf_counter()
+            for spec in reverts:
+                self.specs[spec.app_id] = spec
+                if self.state is not None:
+                    self.state.rebound(spec)
+            self.phase_s["absorb"] += _time.perf_counter() - t1
+            res = self.reallocate()
+        return res
 
     # ------------------------------------------------------------------ API
 
@@ -215,7 +320,8 @@ class DormMaster:
         """Cumulative per-phase scheduling seconds: optimizer solve (split
         into the DRF-refill share, the column-generation pricing share, the
         backend jit-compile share and the rest), enforcement (container
-        create/destroy + protocol calls), and Eq-1/2/4 metric evaluation."""
+        create/destroy + protocol calls), Eq-1/2/4 metric evaluation, and
+        the absorber's flood-merge bookkeeping (`absorb`)."""
         refill = float(getattr(self.optimizer, "refill_s", 0.0))
         pricing = float(getattr(self.optimizer, "pricing_s", 0.0))
         compile_s = self.backend_compile_s
@@ -227,6 +333,7 @@ class DormMaster:
                          - compile_s, 0.0),
             "enforce": self.phase_s["enforce"],
             "metrics": self.phase_s["metrics"],
+            "absorb": self.phase_s["absorb"],
         }
 
     # --------------------------------------------------------- reallocation

@@ -52,7 +52,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import _place_counts_np, get_backend
+from .backend import NumpyBackend, _place_counts_np, get_backend
+
+# Host reference backend for spec-only SoA solves (no ClusterState): the
+# fused placement schedule then runs the sequential numpy loop regardless
+# of the configured device backend (it is the master's state-backed hot
+# path that the device fusion targets).
+_HOST_BACKEND = NumpyBackend()
 from .drf import (IncrementalDRF, drf_container_counts,
                   drf_container_counts_reference, drf_shares)
 from .types import (Allocation, ApplicationSpec, ClusterSpec, demand_matrix,
@@ -1572,10 +1578,14 @@ class GreedyOptimizer:
         # (MILP warm starts, standalone calls) keep the host scatter.
         if not soa:
             place_fn = _best_fit_place
-        elif state is not None and self.backend.name != "numpy":
-            place_fn = self.backend.place
+            place_be = None
         else:
-            place_fn = _best_fit_place_batch
+            # The whole two-pass placement schedule is executed by ONE
+            # backend call (`Backend.place_run`): numpy runs the reference
+            # sequential loop, jax fuses the schedule into a single device
+            # program. Spec-only SoA solves stay on the host backend.
+            place_fn = None
+            place_be = self.backend if state is not None else _HOST_BACKEND
         inv_cap = 1.0 / np.maximum(cap, 1e-9)
         changed_track: Optional[set] = None   # indices changed vs prev rows
         if delta:
@@ -1668,15 +1678,14 @@ class GreedyOptimizer:
                 if epoch != self._futile_epoch:
                     memo.clear()
                     self._futile_epoch = epoch
-            for i in np.flatnonzero(sums < nmin_v):
-                i = int(i)
-                if place_fn(x, free, d, inv_cap, i, int(nmin_v[i])):
-                    sums[i] = int(x[i].sum())
-                    if changed_track is not None and in_prev(i):
-                        changed_track.add(i)
+            # Build the full two-pass schedule up front, memo-skips excluded
+            # (decidable before any placement: a memoized app held >= n_min
+            # at the same epoch, so pass 1 never visits it and its target is
+            # unchanged), and execute it with ONE backend call.
+            pass1 = [int(i) for i in np.flatnonzero(sums < nmin_v)]
+            pass2: List[int] = []
             for i in np.flatnonzero(sums < target):
                 i = int(i)
-                tgt_i = int(target[i])
                 if memo is not None:
                     # Skip a top-up that already found no fitting slave at
                     # this capacity epoch (no capacity was freed since, so
@@ -1684,10 +1693,32 @@ class GreedyOptimizer:
                     # hold >= n_min from the previous allocation).
                     rec = memo.get(app_ids[i])
                     if rec is not None and rec[0] == epoch \
-                            and rec[1] == tgt_i:
+                            and rec[1] == int(target[i]):
                         continue
-                if place_fn(x, free, d, inv_cap, i, tgt_i):
-                    sums[i] = int(x[i].sum())
+                pass2.append(i)
+            schedule = [(i, int(nmin_v[i])) for i in pass1] \
+                + [(i, int(target[i])) for i in pass2]
+            grants = place_be.place_run(x, free, d, inv_cap, schedule) \
+                if schedule else []
+            # Replay the sequential bookkeeping over the fused results:
+            # per-app row sums, changed-row tracking, the below-n_min
+            # infeasibility abort and the futile-top-up memo updates stop
+            # exactly where the sequential loop would have stopped.
+            for k, i in enumerate(pass1):
+                if grants[k]:
+                    sums[i] += grants[k]
+                    if changed_track is not None and in_prev(i):
+                        changed_track.add(i)
+            for k, i in enumerate(pass2):
+                tgt_i = int(target[i])
+                if sums[i] >= tgt_i:
+                    # Raised to target by pass 1 already: the sequential
+                    # pass-2 scan (computed on post-pass-1 sums) never
+                    # visits this app; its fused grant is provably zero.
+                    continue
+                g = grants[len(pass1) + k]
+                if g:
+                    sums[i] += g
                     if changed_track is not None and in_prev(i):
                         changed_track.add(i)
                 if sums[i] < nmin_v[i]:

@@ -27,8 +27,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .runtime import (AppRuntime, ClusterRuntime, EventBus, MetricSample,
-                      ReallocationResult, SimResult, as_policy)
+from .runtime import (AbsorberConfig, AppRuntime, ClusterRuntime, EventBus,
+                      MetricSample, ReallocationResult, SimResult, as_policy)
 from .workload import WorkloadApp
 
 _EPS = 1e-9
@@ -113,7 +113,12 @@ class ClusterSimulator(_SimulatorBase):
                  logger=None,
                  batch_window_s: float = 0.0,
                  tick_interval_s: float = 0.0,
-                 bus: Optional[EventBus] = None):
+                 bus: Optional[EventBus] = None,
+                 absorber: Optional[AbsorberConfig] = None):
+        """`absorber` (runtime.AbsorberConfig) turns on the mixed-flood
+        event-storm absorber: arrivals + completions + resizes at the same
+        timestamp (or inside the configured window) coalesce into ONE
+        policy pass. Mutually exclusive with `batch_window_s`."""
         super().__init__(scheduler, workload,
                          adjustment_cost_s=adjustment_cost_s,
                          rate_multiplier=rate_multiplier,
@@ -125,7 +130,8 @@ class ClusterSimulator(_SimulatorBase):
             rate_multiplier=rate_multiplier,
             horizon_s=horizon_s, logger=logger,
             batch_window_s=batch_window_s,
-            tick_interval_s=tick_interval_s, bus=bus)
+            tick_interval_s=tick_interval_s, bus=bus,
+            absorber=absorber)
 
     # ------------------------------------------------------------------ run
 

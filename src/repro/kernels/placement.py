@@ -31,6 +31,14 @@ Contract (enforced by the caller, `repro.core.backend.JaxBackend`):
 
 `best_fit_counts_ref` is the pure-jnp oracle (the argsort/cumfill
 composition itself).
+
+Invocation context: `JaxBackend` calls this kernel both per item
+(`place_batch`) and from inside the fused multi-app placement program
+(`place_run`, one jit'd `lax.scan` over the whole batch's schedule).
+Inside the scan the kernel is traced ONCE per padded (b,) bucket and
+replayed for every scan step, so it must stay free of per-item host
+logic -- everything item-specific (need, scores, q) arrives as traced
+operands.
 """
 from __future__ import annotations
 

@@ -162,7 +162,8 @@ def test_colgen_gap_flows_through_master_and_phase_breakdown():
     assert 0.0 <= res.optimality_gap < 1.0
     phases = master.phase_breakdown()
     assert set(phases) == {"drf_refill", "colgen_pricing", "solve",
-                           "enforce", "metrics", "backend_compile"}
+                           "enforce", "metrics", "backend_compile",
+                           "absorb"}
     assert phases["colgen_pricing"] >= 0.0
     # greedy masters certify nothing
     g = DormMaster(cluster, "greedy", OptimizerConfig(0.2, 0.2),

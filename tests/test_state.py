@@ -287,7 +287,7 @@ def test_phase_breakdown_and_telemetry_row():
     m.complete("app1")
     phases = m.phase_breakdown()
     assert set(phases) == {"drf_refill", "colgen_pricing", "backend_compile",
-                           "solve", "enforce", "metrics"}
+                           "solve", "enforce", "metrics", "absorb"}
     assert all(v >= 0.0 for v in phases.values())
     assert phases["solve"] + phases["drf_refill"] > 0.0
     logger = MetricsLogger()
