@@ -12,8 +12,8 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (bench_autoscale, bench_kernels, bench_replay, bench_scale,
-               fig1_durations, fig6_utilization, fig7_fairness,
+from . import (bench_autoscale, bench_chaos, bench_kernels, bench_replay,
+               bench_scale, fig1_durations, fig6_utilization, fig7_fairness,
                fig8_adjustment, fig9a_speedup, fig9b_overhead)
 
 MODULES = {
@@ -27,6 +27,7 @@ MODULES = {
     "scale": bench_scale,
     "autoscale": bench_autoscale,
     "replay": bench_replay,
+    "chaos": bench_chaos,
 }
 
 

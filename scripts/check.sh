@@ -4,8 +4,9 @@
 # themselves) and run the tier-1 test command from ROADMAP.md.
 #
 #   scripts/check.sh                 # tier-1 tests
-#   scripts/check.sh --bench        # tests + scale benchmark -> BENCH_scale.json
-#                                   #   (includes the perf regression gate)
+#   scripts/check.sh --bench        # tests + benchmarks -> BENCH_scale.json,
+#                                   #   BENCH_replay.json, BENCH_chaos.json
+#                                   #   (perf + recovery regression gates)
 #   scripts/check.sh -k runtime     # extra args forwarded to pytest
 set -uo pipefail
 cd "$(dirname "$0")/.."
@@ -114,5 +115,36 @@ print(f"  replay vs_synthetic_median: {ratio:.3f}x (ceiling: 2.0x)"
 print(f"  replay colgen_certified_gap: {gap} (ceiling: 0.01)"
       + ("" if (gap is not None and gap <= 0.01) else "  FAIL"))
 sys.exit(0 if ok else 1)
+PY
+    echo "== chaos benchmark (writes BENCH_chaos.json) =="
+    # Fault-injection panel: Dorm + Static + DRF through the SAME seeded
+    # failure replay (benchmarks/bench_chaos.py).
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_chaos --json BENCH_chaos.json
+    python - <<'PY'
+import json, sys
+rep = json.load(open("BENCH_chaos.json"))
+total = rep["config"]["apps"]
+failed = False
+for name in ("dorm", "static", "drf"):
+    r = rep[name]
+    rec = r["recovery"]
+    med = rec["recovery_median_s"]
+    # Every baseline must survive the replay end to end (no crash, no
+    # wedged queue): every submitted app completes inside the horizon.
+    ok_done = r["completed"] == total
+    print(f"  chaos {name} completed: {r['completed']}/{total}"
+          + ("" if ok_done else "  FAIL"))
+    # Recovery must close: a None median means some failure's displaced
+    # apps never ran again (parked forever or lost).
+    ok_med = med is not None
+    print(f"  chaos {name} recovery_median_s: {med}"
+          + ("" if ok_med else "  FAIL (no closed recovery windows)"))
+    ok_repl = rec["replaced_fraction"] > 0.95
+    print(f"  chaos {name} replaced_fraction: "
+          f"{rec['replaced_fraction']:.3f} (floor: > 0.95)"
+          + ("" if ok_repl else "  FAIL"))
+    failed |= not (ok_done and ok_med and ok_repl)
+sys.exit(1 if failed else 0)
 PY
 fi

@@ -8,23 +8,29 @@ from .backend import (AutoBackend, Backend, JaxBackend, NumpyBackend,
                       backend_available, get_backend)
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
                         TaskLevelOverheadModel)
+from .chaos import (ChaosConfig, ChaosMonitor, chaos_config_hash,
+                    chaos_from_csv, chaos_schedule, chaos_to_csv,
+                    scale_cluster)
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
                   drf_container_counts_reference, drf_shares, fairness_loss,
                   saturating_counts)
 from .master import DormMaster
 from .metrics import (actual_shares, adjusted_apps, churn_attribution,
                       cluster_fairness_loss, container_churn,
-                      overload_seconds, per_resource_utilization,
-                      resource_adjustment_overhead, resource_utilization)
+                      forced_churn_attribution, overload_seconds,
+                      per_resource_utilization, resource_adjustment_overhead,
+                      resource_utilization)
 from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
                         OptimizerConfig, adjust_budget, fairness_budget,
                         make_optimizer)
 from .partition import Partition, TaskExecutor, TaskScheduler
 from .replay import REPLAY_CLASS_INDEX, ReplayConfig, replay_trace
-from .runtime import (AbsorberConfig, AppRuntime, Arrival, ClusterRuntime,
-                      Completion, Event, EventBus, MetricSample, PolicyTimer,
-                      Reallocated, ReallocationResult, Resize, ScaleDecision,
-                      SchedulerPolicy, SimResult, Storm, Tick, as_policy)
+from .runtime import (AbsorberConfig, AppRuntime, Arrival, ChaosEvent,
+                      ClusterRuntime, Completion, Event, EventBus,
+                      MetricSample, PolicyTimer, Reallocated,
+                      ReallocationResult, Resize, ScaleDecision,
+                      SchedulerPolicy, SimResult, SlaveDegraded, SlaveDrained,
+                      SlaveFailed, SlaveRestored, Storm, Tick, as_policy)
 from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
                         speedup_ratios)
 from .slave import Container, DormSlave
@@ -52,7 +58,8 @@ __all__ = [
     "drf_container_counts_reference", "drf_shares", "fairness_loss",
     "saturating_counts", "DormMaster", "ReallocationResult",
     "actual_shares", "adjusted_apps", "cluster_fairness_loss",
-    "container_churn", "per_resource_utilization",
+    "container_churn", "forced_churn_attribution",
+    "per_resource_utilization",
     "resource_adjustment_overhead", "resource_utilization", "AutoOptimizer",
     "GreedyOptimizer", "MilpOptimizer",
     "OptimizerConfig", "adjust_budget", "fairness_budget", "make_optimizer",
@@ -61,6 +68,9 @@ __all__ = [
     "AbsorberConfig", "AppRuntime", "Arrival", "ClusterRuntime", "Completion",
     "Event", "EventBus", "MetricSample", "PolicyTimer", "Reallocated",
     "Resize", "SchedulerPolicy", "SimResult", "Storm", "Tick", "as_policy",
+    "ChaosConfig", "ChaosEvent", "ChaosMonitor", "SlaveDegraded",
+    "SlaveDrained", "SlaveFailed", "SlaveRestored", "chaos_config_hash",
+    "chaos_from_csv", "chaos_schedule", "chaos_to_csv", "scale_cluster",
     "ClusterSimulator", "ReferenceClusterSimulator", "speedup_ratios",
     "Container", "DormSlave",
     "ClusterState", "LazyAppViews", "LazySlaveViews", "StateSlaveView",

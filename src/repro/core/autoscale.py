@@ -64,7 +64,8 @@ from typing import (Any, Dict, List, Mapping, Optional, Protocol, Sequence,
 
 import numpy as np
 
-from .metrics import churn_attribution, overload_seconds
+from .metrics import (churn_attribution, forced_churn_attribution,
+                      overload_seconds)
 from .runtime import (Completion, Reallocated, ReallocationResult, Resize,
                       ScaleDecision, as_policy)
 from .types import ApplicationSpec
@@ -501,4 +502,10 @@ class SLOMonitor:
             "scaling_lag_mean_s": lag,
             "scaleups_unresolved": unresolved,
             "churn_by_trigger": churn_attribution(self.reallocated),
+            # Eq-4 churn by compulsion: nonzero forced/displaced entries
+            # mean chaos events (slave failures) drove adjustments during
+            # the serving run -- the autoscaler's lag and overload numbers
+            # above should be read against that capacity loss.
+            "churn_by_compulsion":
+                forced_churn_attribution(self.reallocated),
         }

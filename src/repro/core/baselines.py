@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .chaos import scale_cluster
 from .drf import drf_container_counts, drf_shares
 from .metrics import (adjusted_apps, cluster_fairness_loss,
                       resource_adjustment_overhead, resource_utilization)
@@ -67,6 +68,17 @@ class StaticScheduler:
         self.placements: Dict[str, np.ndarray] = {}    # app_id -> (b,) counts
         self.specs: Dict[str, ApplicationSpec] = {}
         self.queue: List[str] = []
+        # Chaos capacity tracking (slave failure / degrade / restore):
+        # effective per-slave capacity, nominal baseline, and arrival
+        # sequence numbers so displaced apps re-queue in FCFS order.
+        self._base_cluster = cluster
+        self._base_cap = cluster.capacity_matrix().astype(np.float64)
+        self.slave_cap = self._base_cap.copy()
+        self._scale = np.ones(cluster.b)
+        self._slave_pos = {s.slave_id: j
+                           for j, s in enumerate(cluster.slaves)}
+        self._seq: Dict[str, int] = {}
+        self._seq_next = 0
 
     # ------------------------------------------- SchedulerPolicy interface
 
@@ -77,6 +89,8 @@ class StaticScheduler:
                 raise ValueError(f"duplicate app_id {spec.app_id}")
             self.specs[spec.app_id] = spec
             self.queue.append(spec.app_id)
+            self._seq[spec.app_id] = self._seq_next
+            self._seq_next += 1
         return self._result(started=tuple(self._admit()))
 
     def on_completion(self, app_id: str) -> ReallocationResult:
@@ -110,6 +124,71 @@ class StaticScheduler:
     def on_tick(self, t: float) -> Optional[ReallocationResult]:
         started = self._admit()
         return self._result(started=tuple(started)) if started else None
+
+    # ------------------------------------------------- chaos degradation
+    # A hosting slave disappearing must not crash the baseline or leave it
+    # double-counting freed capacity: orphaned placements are dropped
+    # whole (static apps cannot shrink), their full capacity released,
+    # and the victims re-queue FCFS by original arrival order.
+
+    def on_slave_failed(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 0.0)
+
+    def on_slave_drained(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 0.0)
+
+    def on_slave_degraded(self, slave_id: str, factor: float = 0.5,
+                          ) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, min(max(float(factor), 0.0), 1.0))
+
+    def on_slave_restored(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 1.0)
+
+    def _chaos(self, slave_id: str, factor: float,
+               ) -> Optional[ReallocationResult]:
+        j = self._slave_pos.get(slave_id)
+        if j is None or self._scale[j] == factor:
+            return None
+        self._scale[j] = factor
+        new_cap = self._base_cap[j] * factor
+        used_j = self.slave_cap[j] - self.slave_free[j]
+        displaced: List[str] = []
+        if (used_j > new_cap + 1e-9).any():
+            # Evict hosting apps newest-admission-first until the remaining
+            # usage fits; each eviction releases the app's WHOLE placement.
+            hosts = [a for a, row in self.placements.items() if row[j] > 0]
+            for app_id in sorted(hosts, key=lambda a: -self._seq[a]):
+                row = self.placements.pop(app_id)
+                d = self.specs[app_id].demand.as_array()
+                self.slave_free += row[:, None] * d[None, :]
+                used_j = used_j - row[j] * d
+                displaced.append(app_id)
+                if not (used_j > new_cap + 1e-9).any():
+                    break
+        self.slave_free[j] += new_cap - self.slave_cap[j]
+        self.slave_cap[j] = new_cap
+        # Swap the spec so Eq-1/Eq-2 denominators see effective capacity.
+        self.cluster = scale_cluster(self._base_cluster, self._scale)
+        if displaced:
+            dq = sorted(displaced, key=self._seq.get)
+            back = [q for q in self.queue if q not in set(dq)]
+            self.queue = dq + back
+        started = tuple(self._admit())
+        res = self._result(started=started)
+        forced = tuple(a for a in displaced if a in self.specs)
+        changed = dict(res.changed_counts or {})
+        for a in displaced:
+            changed.setdefault(a, 0)
+        started_set = set(started)
+        parked = tuple(a for a in forced if a not in started_set)
+        return dataclasses.replace(
+            res,
+            adjusted_app_ids=forced,
+            adjustment_overhead=len(forced),
+            changed_counts=changed,
+            forced_adjusted_app_ids=forced,
+            displaced_app_ids=tuple(displaced),
+            parked_app_ids=parked)
 
     # ------------------------------------------------------ legacy aliases
 
@@ -205,6 +284,11 @@ class DRFScheduler:
         self.specs: Dict[str, ApplicationSpec] = {}
         self.placements: Dict[str, np.ndarray] = {}    # app_id -> (b,) counts
         self.prev_alloc: Optional[Allocation] = None
+        # Chaos capacity tracking: effective per-slave scale factors.
+        self._base_cluster = cluster
+        self._scale = np.ones(cluster.b)
+        self._slave_pos = {s.slave_id: j
+                           for j, s in enumerate(cluster.slaves)}
 
     # ------------------------------------------- SchedulerPolicy interface
 
@@ -238,6 +322,50 @@ class DRFScheduler:
 
     def on_tick(self, t: float) -> Optional[ReallocationResult]:
         return None          # DRF refills on arrivals/completions only
+
+    # ------------------------------------------------- chaos degradation
+    # DRF repacks every placement from scratch on every event anyway, so a
+    # slave loss is just another full reallocation against the reduced
+    # capacity matrix -- but the apps it was hosting are FORCED churn, not
+    # the baseline's usual voluntary churn, and must be attributed as such.
+
+    def on_slave_failed(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 0.0)
+
+    def on_slave_drained(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 0.0)
+
+    def on_slave_degraded(self, slave_id: str, factor: float = 0.5,
+                          ) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, min(max(float(factor), 0.0), 1.0))
+
+    def on_slave_restored(self, slave_id: str) -> Optional[ReallocationResult]:
+        return self._chaos(slave_id, 1.0)
+
+    def _chaos(self, slave_id: str, factor: float,
+               ) -> Optional[ReallocationResult]:
+        j = self._slave_pos.get(slave_id)
+        if j is None or self._scale[j] == factor:
+            return None
+        self._scale[j] = factor
+        displaced = tuple(a for a, row in self.placements.items()
+                          if row[j] > 0)
+        self.cluster = scale_cluster(self._base_cluster, self._scale)
+        res = self._reallocate()
+        if not displaced:
+            return res
+        forced = tuple(a for a in displaced if a in self.specs)
+        adj = list(res.adjusted_app_ids)
+        seen = set(adj)
+        adj.extend(a for a in forced if a not in seen)
+        placed = set(res.allocation.app_ids)
+        return dataclasses.replace(
+            res,
+            adjusted_app_ids=tuple(adj),
+            adjustment_overhead=len(adj),
+            forced_adjusted_app_ids=forced,
+            displaced_app_ids=displaced,
+            parked_app_ids=tuple(a for a in forced if a not in placed))
 
     def submit(self, spec: ApplicationSpec) -> ReallocationResult:
         return self.on_arrival((spec,))

@@ -1,0 +1,398 @@
+"""Fault injection + recovery accounting (the chaos engine).
+
+Dorm's headline numbers are measured on healthy clusters; production is
+failure-shaped. This module supplies the three missing pieces:
+
+  * **Injection** -- `ChaosConfig` is a seeded schedule generator: Poisson
+    crash events (correlated rack loss: `rack_size` slaves at the SAME
+    timestamp, so the absorber sees a flood), graceful drain windows, and
+    straggler degradation (fractional capacity for a bounded duration).
+    `chaos_schedule` turns a config + cluster + horizon into runtime events
+    (`SlaveFailed` / `SlaveDrained` / `SlaveDegraded` / `SlaveRestored`);
+    `chaos_to_csv` / `chaos_from_csv` round-trip a schedule through the
+    same CSV shape the replay layer uses, so a real incident log replays
+    through the identical path.
+  * **Capacity mutation** -- `scale_cluster` builds a NEW `ClusterSpec`
+    with per-slave capacity multipliers. ClusterSpec is frozen with cached
+    capacity matrices, so a fresh instance (not in-place mutation) is what
+    keeps every consumer honest: solver paths, DRF shares and metrics all
+    read the swapped spec's fresh caches. Slave ids, order and count are
+    preserved, so interned slave indices and the delta-solve memo survive.
+  * **Accounting** -- `ChaosMonitor` subscribes to the bus and integrates
+    lost-capacity-seconds (Eq-1 units x seconds), counts displaced /
+    parked / re-placed apps, measures recovery time per failure (failure
+    instant -> every displaced app holds containers again or finished),
+    and splits Eq-4 churn into forced (capacity loss) vs voluntary
+    (optimizer choice) using `ReallocationResult.forced_adjusted_app_ids`.
+
+Reproducibility: `chaos_config_hash` fingerprints a config;
+`SimResult.chaos_seed` / `.chaos_config_hash` carry it into every JSON
+artifact so a failure replay can be re-run bit-exact from the artifact
+alone (the schedule is a pure function of config + cluster + horizon).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .runtime import (ChaosEvent, Completion, Reallocated, SlaveDegraded,
+                      SlaveDrained, SlaveFailed, SlaveRestored)
+from .types import ClusterSpec, SlaveSpec
+
+__all__ = ["ChaosConfig", "ChaosMonitor", "chaos_config_hash",
+           "chaos_from_csv", "chaos_schedule", "chaos_to_csv",
+           "scale_cluster"]
+
+
+# ---------------------------------------------------------------------------
+# Config + seeded schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded failure schedule parameters. All rates are expectations; the
+    realized schedule is a deterministic function of (config, cluster,
+    horizon) via `np.random.default_rng(seed)`."""
+    seed: int = 0
+    # Crash events per simulated day. Each event kills `rack_size` distinct
+    # healthy slaves at ONE timestamp (correlated rack loss -> the absorber
+    # coalesces the flood into one recovery solve).
+    crashes_per_day: float = 0.0
+    rack_size: int = 1
+    # 0 = the crashed slave never comes back; > 0 = a replacement arrives
+    # (SlaveRestored) this many seconds later.
+    crash_restore_s: float = 0.0
+    # Graceful decommissions per day (capacity fenced, apps migrated).
+    drains_per_day: float = 0.0
+    drain_restore_s: float = 0.0
+    # Straggler injection: this fraction of slaves degrades to
+    # `degrade_factor` capacity once, for `degrade_duration_s`.
+    straggler_frac: float = 0.0
+    degrade_factor: float = 0.5
+    degrade_duration_s: float = 3600.0
+    # Quiet lead-in: no chaos before this time (lets the cluster fill).
+    t_start_s: float = 0.0
+
+
+def chaos_config_hash(cfg: ChaosConfig) -> str:
+    """Stable 16-hex fingerprint of a ChaosConfig (field order is the
+    dataclass declaration order, so equal configs hash equal)."""
+    payload = ",".join(f"{f.name}={getattr(cfg, f.name)!r}"
+                       for f in dataclasses.fields(cfg))
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+def chaos_schedule(cfg: ChaosConfig, cluster: ClusterSpec,
+                   horizon_s: float) -> List[ChaosEvent]:
+    """Generate the seeded event schedule for `cluster` over `horizon_s`.
+
+    Victims are drawn without replacement from slaves that are healthy at
+    the event's instant (a crashed-and-not-yet-restored slave cannot crash
+    again); rack members share one timestamp. The returned list is sorted
+    by time with a stable tie-break, ready for `ClusterRuntime.inject`.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    ids = [s.slave_id for s in cluster.slaves]
+    b = len(ids)
+    days = max(horizon_s - cfg.t_start_s, 0.0) / 86400.0
+    raw: List[Tuple[float, int, ChaosEvent]] = []
+    seq = 0
+
+    def emit(ev: ChaosEvent) -> None:
+        nonlocal seq
+        raw.append((ev.t, seq, ev))
+        seq += 1
+
+    def draw_times(rate_per_day: float) -> np.ndarray:
+        n = int(rng.poisson(rate_per_day * days)) if rate_per_day > 0 else 0
+        if n == 0:
+            return np.empty(0)
+        ts = cfg.t_start_s + rng.uniform(0.0, max(horizon_s - cfg.t_start_s,
+                                                  0.0), size=n)
+        return np.sort(ts)
+
+    crash_ts = draw_times(cfg.crashes_per_day)
+    drain_ts = draw_times(cfg.drains_per_day)
+
+    # Merge crash + drain events in time order so the healthy-set
+    # bookkeeping (down_until per slave) is consistent across both kinds.
+    stream = ([(t, "crash") for t in crash_ts]
+              + [(t, "drain") for t in drain_ts])
+    stream.sort(key=lambda e: e[0])
+    down_until = np.zeros(b)                     # slave j healthy iff t >=
+    ever_down: set = set()
+    for t, kind in stream:
+        healthy = np.flatnonzero(down_until <= t)
+        if healthy.size == 0:
+            continue
+        k = min(cfg.rack_size if kind == "crash" else 1, healthy.size)
+        victims = rng.choice(healthy, size=k, replace=False)
+        restore = (cfg.crash_restore_s if kind == "crash"
+                   else cfg.drain_restore_s)
+        for j in sorted(int(v) for v in victims):
+            ever_down.add(j)
+            ev_cls = SlaveFailed if kind == "crash" else SlaveDrained
+            emit(ev_cls(float(t), ids[j]))
+            if restore > 0 and t + restore < horizon_s:
+                down_until[j] = t + restore
+                emit(SlaveRestored(float(t + restore), ids[j]))
+            else:
+                down_until[j] = np.inf
+
+    n_strag = int(round(cfg.straggler_frac * b))
+    if n_strag > 0:
+        # Stragglers only hit slaves the crash/drain stream never touches:
+        # overlapping a degrade window with a crash window would let the
+        # degrade's restore resurrect a dead slave's capacity early.
+        candidates = np.array(sorted(set(range(b)) - ever_down),
+                              dtype=np.int64)
+        n_strag = min(n_strag, candidates.size)
+        if n_strag:
+            strag = rng.choice(candidates, size=n_strag, replace=False)
+            for j in sorted(int(v) for v in strag):
+                t0 = float(cfg.t_start_s + rng.uniform(
+                    0.0, max(horizon_s - cfg.t_start_s, 0.0)))
+                emit(SlaveDegraded(t0, ids[j], cfg.degrade_factor))
+                t1 = t0 + cfg.degrade_duration_s
+                if t1 < horizon_s:
+                    emit(SlaveRestored(t1, ids[j]))
+
+    raw.sort(key=lambda e: (e[0], e[1]))
+    return [ev for _, _, ev in raw]
+
+
+# ---------------------------------------------------------------------------
+# CSV round-trip (incident-log replay)
+# ---------------------------------------------------------------------------
+
+_KIND_OF = {SlaveFailed: "failed", SlaveDrained: "drained",
+            SlaveDegraded: "degraded", SlaveRestored: "restored"}
+_CLS_OF = {v: k for k, v in _KIND_OF.items()}
+
+
+def chaos_to_csv(events: Sequence[ChaosEvent]) -> str:
+    """Serialize a schedule as `t_s,kind,slave_id,factor` rows."""
+    out = io.StringIO()
+    out.write("t_s,kind,slave_id,factor\n")
+    for ev in events:
+        factor = getattr(ev, "factor", "")
+        out.write(f"{ev.t!r},{_KIND_OF[type(ev)]},{ev.slave_id},{factor}\n")
+    return out.getvalue()
+
+
+def chaos_from_csv(source: Union[str, Sequence[str]]) -> List[ChaosEvent]:
+    """Parse a chaos schedule from CSV text, a path, or an iterable of
+    lines (same tolerant source handling as the replay parsers)."""
+    if isinstance(source, str):
+        if "\n" not in source and os.path.exists(source):
+            with open(source) as fh:
+                lines = fh.read().splitlines()
+        else:
+            lines = source.splitlines()
+    else:
+        lines = [str(ln) for ln in source]
+    events: List[ChaosEvent] = []
+    for ln in lines:
+        ln = ln.strip()
+        if not ln or ln.lower().startswith("t_s,"):
+            continue
+        parts = [p.strip() for p in ln.split(",")]
+        if len(parts) < 3:
+            raise ValueError(f"chaos CSV row needs t_s,kind,slave_id: {ln!r}")
+        t, kind, slave_id = float(parts[0]), parts[1].lower(), parts[2]
+        cls = _CLS_OF.get(kind)
+        if cls is None:
+            raise ValueError(f"unknown chaos kind {kind!r} in row {ln!r}")
+        if cls is SlaveDegraded:
+            factor = float(parts[3]) if len(parts) > 3 and parts[3] else 0.5
+            events.append(SlaveDegraded(t, slave_id, factor))
+        else:
+            events.append(cls(t, slave_id))
+    events.sort(key=lambda e: e.t)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Capacity scaling
+# ---------------------------------------------------------------------------
+
+def scale_cluster(base: ClusterSpec, scale: Sequence[float]) -> ClusterSpec:
+    """A new ClusterSpec whose slave j has `base` capacity times
+    `scale[j]`. Slaves at factor 1.0 keep their original SlaveSpec object
+    (and a fully-healthy scale returns specs comparing equal to `base`'s);
+    the new frozen spec recomputes its cached capacity matrix / totals on
+    first use, which is exactly what keeps solver, DRF and metrics paths
+    consistent after a failure."""
+    slaves = []
+    for j, s in enumerate(base.slaves):
+        f = float(scale[j])
+        slaves.append(s if f == 1.0
+                      else SlaveSpec(s.slave_id, s.capacity * f))
+    return ClusterSpec(resource_types=base.resource_types,
+                       slaves=tuple(slaves))
+
+
+# ---------------------------------------------------------------------------
+# Recovery accounting
+# ---------------------------------------------------------------------------
+
+class ChaosMonitor:
+    """Bus subscriber computing the recovery panel for one run.
+
+    * `lost_capacity_seconds` -- integral over time of the fenced capacity
+      fraction in Eq-1 units (sum over resources of lost/total, in [0, m]),
+      times seconds. A 10-minute full outage of 1% of a 3-resource cluster
+      books ~0.03 * 600 = 18 units.
+    * `recovery_times_s` -- one entry per failure/drain event: time from
+      the capacity loss until every app it displaced either holds
+      containers again or finished. Parked apps keep the clock running
+      until a later solve re-places them (parking is explicit surrender,
+      not recovery).
+    * `displaced` / `parked` / `replaced` -- app-level counters; the gate
+      `replaced_fraction` counts displaced apps that eventually ran again
+      (or finished) over all displaced.
+    * `forced_adjustments` vs `voluntary_adjustments` -- Eq-4 churn split.
+    """
+
+    def __init__(self, cluster: ClusterSpec):
+        self.cluster = cluster
+        self.total_cap = cluster.total_capacity().astype(np.float64)
+        b = cluster.b
+        self._scale = np.ones(b)
+        self._pos = {s.slave_id: j for j, s in enumerate(cluster.slaves)}
+        self._cap = cluster.capacity_matrix().astype(np.float64)
+        self._last_t = 0.0
+        self.lost_capacity_seconds = 0.0
+        self.counts: Dict[str, int] = {"failed": 0, "drained": 0,
+                                       "degraded": 0, "restored": 0}
+        self.forced_adjustments = 0
+        self.voluntary_adjustments = 0
+        self.displaced_total = 0
+        self.parked_total = 0
+        self._displaced_open: Dict[str, float] = {}   # app -> displaced at
+        self._replaced = 0
+        self._open: List[Dict] = []                   # recovery windows
+        self.recovery_times_s: List[float] = []
+        self._finalized_at: Optional[float] = None
+
+    # ------------------------------------------------------------ wiring
+
+    def attach(self, runtime) -> "ChaosMonitor":
+        bus = runtime.bus
+        for cls in (SlaveFailed, SlaveDrained, SlaveDegraded, SlaveRestored):
+            bus.subscribe(cls, self._on_chaos)
+        bus.subscribe(Reallocated, self._on_reallocated)
+        bus.subscribe(Completion, self._on_completion)
+        return self
+
+    # ---------------------------------------------------------- handlers
+
+    def _lost_frac(self) -> float:
+        lost = ((1.0 - self._scale)[:, None] * self._cap).sum(axis=0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(self.total_cap > 0, lost / self.total_cap, 0.0)
+        return float(frac.sum())
+
+    def _integrate_to(self, t: float) -> None:
+        if t > self._last_t:
+            self.lost_capacity_seconds += self._lost_frac() * (t - self._last_t)
+            self._last_t = t
+
+    def _on_chaos(self, ev: ChaosEvent) -> None:
+        j = self._pos.get(ev.slave_id)
+        if j is None:
+            return
+        self._integrate_to(ev.t)
+        if isinstance(ev, SlaveFailed):
+            self.counts["failed"] += 1
+            self._scale[j] = 0.0
+        elif isinstance(ev, SlaveDrained):
+            self.counts["drained"] += 1
+            self._scale[j] = 0.0
+        elif isinstance(ev, SlaveDegraded):
+            self.counts["degraded"] += 1
+            self._scale[j] = ev.factor
+        else:
+            self.counts["restored"] += 1
+            self._scale[j] = 1.0
+
+    def _on_reallocated(self, ev: Reallocated) -> None:
+        res = ev.result
+        self.forced_adjustments += len(res.forced_adjusted_app_ids)
+        self.voluntary_adjustments += (len(res.adjusted_app_ids)
+                                       - len(res.forced_adjusted_app_ids))
+        if res.displaced_app_ids:
+            self.displaced_total += len(res.displaced_app_ids)
+            self.parked_total += len(res.parked_app_ids)
+            self._open.append({"t0": ev.t,
+                               "waiting": set(res.displaced_app_ids)})
+            for a in res.displaced_app_ids:
+                self._displaced_open.setdefault(a, ev.t)
+        # Any solve can re-place displaced/parked apps: resolve against the
+        # counts it actually granted.
+        if self._open or self._displaced_open:
+            counts = res.allocation.x.sum(axis=1)
+            running = {a for a, c in zip(res.allocation.app_ids, counts)
+                       if c > 0}
+            self._resolve(running, ev.t)
+
+    def _on_completion(self, ev: Completion) -> None:
+        self._resolve({ev.app_id}, ev.t)
+
+    def _resolve(self, resolved: set, t: float) -> None:
+        for a in list(self._displaced_open):
+            if a in resolved:
+                del self._displaced_open[a]
+                self._replaced += 1
+        still_open = []
+        for rec in self._open:
+            rec["waiting"] -= resolved
+            if rec["waiting"]:
+                still_open.append(rec)
+            else:
+                self.recovery_times_s.append(t - rec["t0"])
+        self._open = still_open
+
+    # ---------------------------------------------------------- readouts
+
+    def finalize(self, t_end: float) -> None:
+        """Close the integral at the horizon (idempotent)."""
+        if self._finalized_at != t_end:
+            self._integrate_to(t_end)
+            self._finalized_at = t_end
+
+    @property
+    def replaced_fraction(self) -> float:
+        if self.displaced_total == 0:
+            return 1.0
+        return self._replaced / self.displaced_total
+
+    def median_recovery_s(self) -> Optional[float]:
+        """Median recovery time over CLOSED recovery windows; None when no
+        failure displaced anything or every window is still open."""
+        if not self.recovery_times_s:
+            return None
+        return float(np.median(self.recovery_times_s))
+
+    def summary(self) -> Dict:
+        return {
+            "events": dict(self.counts),
+            "lost_capacity_seconds": self.lost_capacity_seconds,
+            "displaced": self.displaced_total,
+            "parked": self.parked_total,
+            "replaced": self._replaced,
+            "replaced_fraction": self.replaced_fraction,
+            "unresolved_displaced": len(self._displaced_open),
+            "recovery_events": len(self.recovery_times_s),
+            "open_recoveries": len(self._open),
+            "recovery_median_s": self.median_recovery_s(),
+            "recovery_max_s": (max(self.recovery_times_s)
+                               if self.recovery_times_s else None),
+            "forced_adjustments": self.forced_adjustments,
+            "voluntary_adjustments": self.voluntary_adjustments,
+        }

@@ -26,6 +26,7 @@ Two bookkeeping engines behind the same API (`OptimizerConfig.soa`):
 """
 from __future__ import annotations
 
+import dataclasses
 import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -36,10 +37,13 @@ from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
                       resource_utilization)
 from .optimizer import OptimizerConfig, _shares_vec, make_optimizer
 from .partition import Partition, TaskExecutor, TaskScheduler
-from .runtime import ReallocationResult
+from .runtime import (ChaosEvent, ReallocationResult, SlaveDegraded,
+                      SlaveRestored)
 from .slave import DormSlave
 from .state import ClusterState, LazyAppViews, LazySlaveViews
 from .types import Allocation, ApplicationSpec, ClusterSpec, validate_allocation
+
+_EPS = 1e-9
 
 __all__ = ["DormMaster", "ReallocationResult"]
 
@@ -53,6 +57,14 @@ class DormMaster:
         cfg = optimizer_cfg
         self._soa = cfg.soa
         self.slave_ids: Tuple[str, ...] = tuple(s.slave_id for s in cluster.slaves)
+        # Chaos capacity tracking: `cluster` above is the CURRENT effective
+        # spec (swapped for a rescaled one on slave failure/degrade/restore
+        # -- see `_apply_slave_scale`); `_base_cluster` keeps the nominal
+        # capacities that restores return to.
+        self._base_cluster = cluster
+        self._slave_scale = np.ones(cluster.b)
+        self._slave_pos: Dict[str, int] = {
+            s: j for j, s in enumerate(self.slave_ids)}
         # "milp" (exact), "greedy" (heuristic), or "auto" (MILP below
         # cfg.auto_switch_vars variables, greedy above -- the scale path).
         self.optimizer = make_optimizer(optimizer_kind, cfg)
@@ -139,9 +151,210 @@ class DormMaster:
         """Periodic rebalance (runtime `Tick` event)."""
         return self.reallocate()
 
+    # ------------------------------------------------- chaos recovery hooks
+    # (runtime SlaveFailed/SlaveDrained/SlaveDegraded/SlaveRestored events;
+    #  see `repro.core.chaos` for injection and accounting.)
+
+    def on_slave_failed(self, slave_id: str) -> Optional[ReallocationResult]:
+        """Slave crashed: its capacity vanishes instantly and every
+        container it hosted is orphaned. Recovery pass: evict the dead
+        slave's allocation rows, fence the capacity, then re-place the
+        displaced apps under the existing Eq-16 adjustment budget. If the
+        shrunk cluster cannot hold every displaced app at n_min, the ones
+        below n_min are PARKED (torn down, returned to pending -- graceful
+        degradation instead of all-or-nothing rejection) and the solve
+        retries with the keep-allocations fallback. Eq-4 churn caused here
+        is attributed as FORCED (`forced_adjusted_app_ids`)."""
+        return self._chaos_capacity(slave_id, 0.0)
+
+    def on_slave_drained(self, slave_id: str) -> Optional[ReallocationResult]:
+        """Graceful decommission: mechanically identical to a crash (the
+        capacity is fenced and apps migrate off), but monitors attribute it
+        separately. A real deployment would checkpoint before the kill;
+        the simulated adjustment cost is the same either way."""
+        return self._chaos_capacity(slave_id, 0.0)
+
+    def on_slave_degraded(self, slave_id: str, factor: float = 0.5,
+                          ) -> Optional[ReallocationResult]:
+        """Straggler: the slave keeps only `factor` of its nominal
+        capacity. Containers that no longer fit are evicted (most recently
+        placed first) until the remaining usage fits."""
+        return self._chaos_capacity(slave_id,
+                                    min(max(float(factor), 0.0), 1.0))
+
+    def on_slave_restored(self, slave_id: str) -> Optional[ReallocationResult]:
+        """Capacity returned (replacement arrived / straggler recovered):
+        un-fence the slave and rebalance -- parked apps restart here."""
+        return self._chaos_capacity(slave_id, 1.0)
+
+    def _chaos_capacity(self, slave_id: str, factor: float,
+                        ) -> Optional[ReallocationResult]:
+        j = self._slave_pos.get(slave_id)
+        if j is None or self._slave_scale[j] == factor:
+            return None                      # unknown slave / no-op repeat
+        displaced, parked = self._apply_slave_scale(j, factor)
+        res = self.reallocate(reject_infeasible=True)
+        if res is None:
+            # Shrink-toward-n_min failed for the whole set: park the
+            # displaced apps the eviction left below their floor, then the
+            # keep-allocations fallback always produces a result.
+            parked = parked + self._park_below_min(displaced)
+            res = self.reallocate()
+        return self._chaos_result(res, displaced, parked)
+
+    def _apply_slave_scale(self, j: int, factor: float,
+                           ) -> Tuple[Dict[str, int], List[str]]:
+        """Set slave j's capacity multiplier: evict placements that no
+        longer fit (most recently admitted first -- specs insertion order
+        is the canonical engine-invariant order; the engines' internal
+        placement orders drift after a park/re-place cycle), swap in the
+        rescaled
+        ClusterSpec, and re-anchor prev_alloc at the post-eviction rows so
+        the recovery solve's Eq-16 budget charges forced moves.
+
+        Returns `(displaced, parked)`: displaced maps app_id -> container
+        count AFTER eviction (0 = lost everything) in eviction order;
+        parked lists the apps returned to pending (fully evicted)."""
+        t0 = _time.perf_counter()
+        self._slave_scale[j] = factor
+        from .chaos import scale_cluster
+        new_cluster = scale_cluster(self._base_cluster, self._slave_scale)
+        new_cap_row = new_cluster.capacity_matrix()[j].astype(np.float64)
+        displaced: Dict[str, int] = {}
+        parked: List[str] = []
+        if self.state is not None:
+            st = self.state
+            used_row = st.cap[j] - st.free[j]
+            if (used_row > new_cap_row + _EPS).any():
+                for app_id in reversed([a for a in self.specs
+                                        if st.is_placed(a)]):
+                    i = st.row_of[app_id]
+                    cij = int(st.x[i, j])
+                    if cij == 0:
+                        continue
+                    used_row = used_row - cij * st.demand[i]
+                    remaining = int(st.counts[i]) - cij
+                    displaced[app_id] = remaining
+                    if remaining > 0:
+                        row = st.x[i].copy()
+                        row[j] = 0
+                        st.place(app_id, row)
+                    else:
+                        self._park(app_id)
+                        parked.append(app_id)
+                    if not (used_row > new_cap_row + _EPS).any():
+                        break
+            st.set_cluster(new_cluster)
+        else:
+            sid = self.slave_ids[j]
+            slave = self.slaves[sid]
+            used_row = slave.used()
+            if (used_row > new_cap_row + _EPS).any():
+                for app_id in reversed([a for a in self.specs
+                                        if a in self.partitions]):
+                    part = self.partitions[app_id]
+                    victims = [c for c in part.containers
+                               if c.slave_id == sid]
+                    if not victims:
+                        continue
+                    d = self.specs[app_id].demand.as_array()
+                    used_row = used_row - len(victims) * d
+                    remaining = part.n_containers - len(victims)
+                    displaced[app_id] = remaining
+                    if remaining > 0:
+                        for c in victims:
+                            slave.destroy_container(c.container_id)
+                            part.containers.remove(c)
+                        self._placements[app_id][j] = 0
+                    else:
+                        self._park(app_id)
+                        parked.append(app_id)
+                    if not (used_row > new_cap_row + _EPS).any():
+                        break
+            # Swap the slave's spec so used()/available() report against
+            # the post-failure capacity.
+            slave.spec = new_cluster.slaves[j]
+        self.cluster = new_cluster
+        # Re-anchor stickiness: the recovery solve diffs against the
+        # POST-eviction placements, so re-placing a displaced app counts
+        # against the Eq-16 budget while untouched apps stay free to keep.
+        if self.prev_alloc is not None:
+            self.prev_alloc = self._current_allocation()
+        self.phase_s["enforce"] += _time.perf_counter() - t0
+        return displaced, parked
+
+    def _park(self, app_id: str) -> None:
+        """Forced surrender: tear the app down, drop its prev_alloc row and
+        return it to the admission queue. A later solve (completion freeing
+        capacity, or the slave's SlaveRestored) restarts it. Crash-path
+        kills bypass the checkpoint protocol: the containers are already
+        gone."""
+        self._teardown(app_id)
+        if self.prev_alloc is not None \
+                and app_id in self.prev_alloc.app_ids:
+            keep = [i for i, a in enumerate(self.prev_alloc.app_ids)
+                    if a != app_id]
+            self.prev_alloc = Allocation.trusted(
+                tuple(self.prev_alloc.app_ids[i] for i in keep),
+                self.prev_alloc.x[keep])
+        if app_id not in self.pending:
+            self.pending.append(app_id)
+
+    def _park_below_min(self, displaced: Dict[str, int]) -> List[str]:
+        """Park every still-placed displaced app whose post-eviction count
+        fell below its n_min floor (the infeasible-recovery path)."""
+        parked: List[str] = []
+        for app_id in displaced:
+            spec = self.specs.get(app_id)
+            if spec is None:
+                continue
+            placed = (self.state.is_placed(app_id)
+                      if self.state is not None
+                      else app_id in self.partitions)
+            if placed and self.containers_of(app_id) < spec.n_min:
+                self._park(app_id)
+                parked.append(app_id)
+        return parked
+
+    def _chaos_result(self, res: ReallocationResult,
+                      displaced: Dict[str, int], parked: List[str],
+                      ) -> ReallocationResult:
+        """Fold forced-churn attribution into a solve result: displaced
+        apps are adjusted (forced), parked apps report count 0, and the
+        eviction counts reach the runtime even when the solve fell back to
+        keep-allocations (whose changed_counts would otherwise be empty)."""
+        if not displaced and not parked:
+            return res
+        forced = tuple(a for a in displaced if a in self.specs)
+        adj = list(res.adjusted_app_ids)
+        seen = set(adj)
+        adj += [a for a in forced if a not in seen]
+        changed: Dict[str, int] = dict(displaced)
+        for a in parked:
+            changed[a] = 0
+        if res.changed_counts:
+            changed.update(res.changed_counts)
+        # An eviction-parked app the recovery solve re-placed (or that
+        # completed in the same flood) is not parked: only still-admitted
+        # apps holding nothing after the solve are.
+        counts = res.allocation.x.sum(axis=1)
+        replaced = {a for a, c in zip(res.allocation.app_ids, counts)
+                    if c > 0}
+        still_parked = tuple(a for a in parked
+                             if a in self.specs and a not in replaced)
+        return dataclasses.replace(
+            res,
+            adjusted_app_ids=tuple(adj),
+            adjustment_overhead=len(adj),
+            changed_counts=changed,
+            forced_adjusted_app_ids=forced,
+            displaced_app_ids=tuple(displaced),
+            parked_app_ids=still_parked)
+
     def on_batch(self, completions: Sequence[str],
                  resizes: Sequence[Tuple[str, Optional[int], Optional[int]]],
                  arrivals: Sequence[ApplicationSpec],
+                 chaos: Sequence[ChaosEvent] = (),
                  ) -> ReallocationResult:
         """One policy pass absorbing a mixed event flood (runtime `Storm`):
         the queue-based load-leveling endpoint of `AbsorberConfig`.
@@ -166,7 +379,30 @@ class DormMaster:
             tightening resizes individually; the absorber trades that
             granularity for one solve per flood.
 
+        A failure flood (`chaos` -- correlated rack loss) is processed
+        FIRST: dead/fenced slaves evict their rows before the completions'
+        folded free-capacity update, so the merged solve never sees
+        capacity that no longer exists. All displaced apps then share ONE
+        recovery solve; forced churn is attributed per `_chaos_result`.
+
         Merge bookkeeping is timed into the `absorb` phase bucket."""
+        displaced: Dict[str, int] = {}
+        parked: List[str] = []
+        for ev in chaos:
+            j = self._slave_pos.get(ev.slave_id)
+            if j is None:
+                continue
+            if isinstance(ev, SlaveDegraded):
+                factor = min(max(float(ev.factor), 0.0), 1.0)
+            elif isinstance(ev, SlaveRestored):
+                factor = 1.0
+            else:
+                factor = 0.0              # SlaveFailed / SlaveDrained
+            if self._slave_scale[j] == factor:
+                continue
+            dd, pp = self._apply_slave_scale(j, factor)
+            displaced.update(dd)          # latest count wins, order kept
+            parked.extend(pp)
         t0 = _time.perf_counter()
         comp_set = set(completions)
         cancelled = {s.app_id for s in arrivals} & comp_set
@@ -231,18 +467,21 @@ class DormMaster:
             self.pending.append(spec.app_id)
         self.phase_s["absorb"] += _time.perf_counter() - t0
         # -- ONE solve for the whole flood.
-        res = self.reallocate(reject_infeasible=tightening)
+        res = self.reallocate(
+            reject_infeasible=tightening or bool(displaced))
         if res is None:
-            # Group-reject the tightening resizes and solve once more with
-            # the keep-allocations fallback (always returns a result).
+            # Group-reject the tightening resizes, park displaced apps the
+            # eviction left below n_min, and solve once more with the
+            # keep-allocations fallback (always returns a result).
             t1 = _time.perf_counter()
             for spec in reverts:
                 self.specs[spec.app_id] = spec
                 if self.state is not None:
                     self.state.rebound(spec)
+            parked.extend(self._park_below_min(displaced))
             self.phase_s["absorb"] += _time.perf_counter() - t1
             res = self.reallocate()
-        return res
+        return self._chaos_result(res, displaced, parked)
 
     # ------------------------------------------------------------------ API
 
@@ -359,9 +598,18 @@ class DormMaster:
         return self._enforce(alloc, apps)
 
     def _current_allocation(self) -> Allocation:
+        # Canonical app order = specs insertion order. The engines' internal
+        # structures drift apart after a chaos eviction re-places a parked
+        # app (legacy dict re-inserts adjusted apps behind it, SoA keeps
+        # interned slots), so neither is a stable exposure order.
         if self.state is not None:
-            return self.state.allocation()
-        app_ids = tuple(self.partitions.keys())
+            alloc = self.state.allocation()
+            ids = tuple(a for a in self.specs if a in set(alloc.app_ids))
+            if ids == alloc.app_ids:
+                return alloc
+            pos = {a: i for i, a in enumerate(alloc.app_ids)}
+            return Allocation.trusted(ids, alloc.x[[pos[a] for a in ids]])
+        app_ids = tuple(a for a in self.specs if a in self._placements)
         x = np.stack([self._placements[a] for a in app_ids]) if app_ids else \
             np.zeros((0, len(self.slave_ids)), np.int64)
         return Allocation(app_ids, x)
@@ -479,10 +727,15 @@ class DormMaster:
         if self.pending:
             if pos is None:
                 pos = dict(zip(alloc.app_ids, range(len(alloc.app_ids))))
+            hits = []
             for app_id in self.pending:
                 i = pos.get(app_id)
                 if i is not None and alloc.x[i].any():
-                    to_place.append((app_id, alloc.x[i], False))
+                    hits.append(i)
+            # Allocation order, matching the legacy engine's started order
+            # (chaos parking appends to pending out of specs order).
+            for i in sorted(hits):
+                to_place.append((alloc.app_ids[i], alloc.x[i], False))
         return to_place
 
     # ------------------------------------------------------------- internal

@@ -141,6 +141,22 @@ def churn_attribution(reallocated_events: Sequence) -> Dict[str, int]:
     return out
 
 
+def forced_churn_attribution(reallocated_events: Sequence) -> Dict[str, int]:
+    """Split Eq-4 churn by COMPULSION over a `runtime.Reallocated` stream:
+    forced (the failure's doing -- `forced_adjusted_app_ids`, set by the
+    chaos recovery pass) vs voluntary (the optimizer's choice), plus the
+    displaced/parked app totals behind the forced share."""
+    out = {"forced": 0, "voluntary": 0, "displaced": 0, "parked": 0}
+    for ev in reallocated_events:
+        res = ev.result
+        out["forced"] += len(res.forced_adjusted_app_ids)
+        out["voluntary"] += (len(res.adjusted_app_ids)
+                             - len(res.forced_adjusted_app_ids))
+        out["displaced"] += len(res.displaced_app_ids)
+        out["parked"] += len(res.parked_app_ids)
+    return out
+
+
 def container_churn(prev: Optional[Allocation], new: Allocation) -> int:
     """Total containers created + destroyed between two allocations:
     sum_{i in A^t ∩ A^{t-1}} sum_j |x_{i,j} - x^{t-1}_{i,j}|.

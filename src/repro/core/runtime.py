@@ -79,6 +79,51 @@ class Tick:
     t: float
 
 
+# ---------------------------------------------------------------------------
+# Chaos events (fault injection -- see `repro.core.chaos`)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlaveFailed:
+    """Slave `slave_id` crashed at time `t`: its capacity vanishes
+    instantly and every container it hosted is orphaned. Policies with an
+    `on_slave_failed` hook run a recovery pass (evict + re-place); policies
+    without one simply never see the event (the bus still publishes it)."""
+    t: float
+    slave_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class SlaveDrained:
+    """Slave `slave_id` drained at time `t` (graceful decommission): its
+    capacity is fenced and hosted apps are migrated off. Mechanically the
+    capacity goes to zero like a crash; the distinction is semantic (the
+    ChaosMonitor attributes drains separately from crashes)."""
+    t: float
+    slave_id: str
+
+
+@dataclasses.dataclass(frozen=True)
+class SlaveDegraded:
+    """Straggler: slave `slave_id` runs at `factor` of its nominal capacity
+    from time `t` until a matching `SlaveRestored`."""
+    t: float
+    slave_id: str
+    factor: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class SlaveRestored:
+    """Slave `slave_id` returned to full nominal capacity at time `t`
+    (crash replacement arrived, drain finished, straggler recovered)."""
+    t: float
+    slave_id: str
+
+
+ChaosEvent = Union[SlaveFailed, SlaveDrained, SlaveDegraded, SlaveRestored]
+_CHAOS_TYPES = (SlaveFailed, SlaveDrained, SlaveDegraded, SlaveRestored)
+
+
 @dataclasses.dataclass(frozen=True)
 class AbsorberConfig:
     """Queue-based event-storm absorber: how `ClusterRuntime` coalesces
@@ -121,6 +166,9 @@ class Storm:
     completions: Tuple[str, ...]
     resizes: Tuple["Resize", ...]
     arrivals: Tuple[ApplicationSpec, ...]
+    # Same-instant chaos events (correlated rack loss) folded into the same
+    # recovery solve. Empty for ordinary load floods.
+    chaos: Tuple["ChaosEvent", ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +198,8 @@ class ScaleDecision:
     reason: str                      # "scale-up" | "scale-down"
 
 
-Event = Union[Arrival, Completion, Resize, Tick, Storm]
+Event = Union[Arrival, Completion, Resize, Tick, Storm, SlaveFailed,
+              SlaveDrained, SlaveDegraded, SlaveRestored]
 
 
 class EventBus:
@@ -194,6 +243,16 @@ class ReallocationResult:
     # certifies nothing (greedy heuristic, rolling horizon, keep-previous
     # fallbacks). 0.0 = proven optimal for P2's utilization objective.
     optimality_gap: Optional[float] = None
+    # Chaos recovery attribution (empty on healthy-cluster passes).
+    # `forced_adjusted_app_ids` splits Eq-4's churn: the subset of
+    # `adjusted_app_ids` whose adjustment was forced by capacity loss, not
+    # chosen by the optimizer. `displaced_app_ids` lists every app that lost
+    # containers to the dead/fenced slave (including ones that completed or
+    # were parked in the same pass); `parked_app_ids` the displaced apps the
+    # recovery could not re-place at >= n_min and returned to pending.
+    forced_adjusted_app_ids: Tuple[str, ...] = ()
+    displaced_app_ids: Tuple[str, ...] = ()
+    parked_app_ids: Tuple[str, ...] = ()
 
 
 @runtime_checkable
@@ -299,15 +358,19 @@ class PolicyTimer:
     def on_tick(self, t):
         return self._timed("tick", self.policy.on_tick, t)
 
-    def _on_batch_timed(self, completions, resizes, arrivals):
+    def _on_batch_timed(self, completions, resizes, arrivals, chaos=()):
         """One absorbed flood of K events: book K per-event-AMORTIZED
         entries under the `absorb` kind so medians/means stay comparable
         with per-event runs (a 10-event pass at 5 ms is 10 entries of
         0.5 ms, not one 5 ms outlier)."""
-        k = max(len(completions) + len(resizes) + len(arrivals), 1)
+        k = max(len(completions) + len(resizes) + len(arrivals)
+                + len(chaos), 1)
         c0 = getattr(self.policy, "backend_compile_s", 0.0)
         t0 = _time.perf_counter()
         try:
+            if chaos:
+                return self.policy.on_batch(completions, resizes, arrivals,
+                                            chaos=chaos)
             return self.policy.on_batch(completions, resizes, arrivals)
         finally:
             dt = _time.perf_counter() - t0
@@ -390,6 +453,9 @@ class MetricSample:
     adjustment_overhead: int         # Eq 4 for this reallocation event
     running: int
     pending: int
+    # Forced share of this event's Eq-4 churn (chaos recovery; 0 on
+    # healthy-cluster passes).
+    forced_adjustments: int = 0
 
 
 @dataclasses.dataclass
@@ -398,6 +464,13 @@ class SimResult:
     completions: Dict[str, AppRuntime]
     total_adjustments: int
     horizon_s: float
+    # Chaos reproducibility plumbing: the seed and config hash of the
+    # injected `ChaosConfig` schedule (None = healthy run). Any failure
+    # replay serialized from this result can be re-run bit-exact by
+    # reconstructing the same ChaosConfig and checking the hash matches.
+    chaos_seed: Optional[int] = None
+    chaos_config_hash: Optional[str] = None
+    total_forced_adjustments: int = 0
 
     def _time_averaged(self, values: np.ndarray,
                        t_max: Optional[float]) -> float:
@@ -477,7 +550,8 @@ class ClusterRuntime:
                  batch_window_s: float = 0.0,
                  tick_interval_s: float = 0.0,
                  bus: Optional[EventBus] = None,
-                 absorber: Optional[AbsorberConfig] = None):
+                 absorber: Optional[AbsorberConfig] = None,
+                 chaos: Optional[Any] = None):
         """`rate_multiplier` < 1 models task-level scheduling overhead
         (baselines.TaskLevelOverheadModel); Dorm runs at 1.0 because its
         TaskSchedulers place tasks locally (§III-D). `batch_window_s` > 0
@@ -485,8 +559,17 @@ class ClusterRuntime:
         completion or injected event) into ONE policy pass. `absorber`
         generalizes that to MIXED floods (arrivals + completions + resizes
         in one pass, see `AbsorberConfig`); the two are mutually
-        exclusive."""
+        exclusive. `chaos` is a `repro.core.chaos.ChaosConfig`: a seeded
+        slave failure/drain/straggler schedule generated from the policy's
+        cluster and injected at `run()` start."""
         self.policy = as_policy(policy)
+        self.chaos = chaos
+        self._chaos_injected = False
+        # Chaos events absorb into recovery floods only when the policy can
+        # actually recover (probed through PolicyTimer like on_batch);
+        # otherwise they are publish-only barriers.
+        self._chaos_capable = hasattr(self.policy, "on_slave_failed")
+        self.total_forced_adjustments = 0
         self.absorber = absorber
         if absorber is not None:
             if batch_window_s > 0:
@@ -557,6 +640,15 @@ class ClusterRuntime:
     # ------------------------------------------------------------------ run
 
     def run(self, workload: Sequence[WorkloadApp]) -> SimResult:
+        if self.chaos is not None and not self._chaos_injected:
+            # Lazy import: chaos.py imports this module's event types.
+            from .chaos import chaos_schedule
+            cl = getattr(self.policy, "cluster", None)
+            if cl is None:
+                raise ValueError("chaos injection requires a policy "
+                                 "exposing .cluster")
+            self.inject(*chaos_schedule(self.chaos, cl, self.horizon_s))
+            self._chaos_injected = True
         arrivals = sorted(workload, key=lambda w: w.spec.submit_time)
         inj_heap = self._inj_heap
         n_total = len(arrivals)
@@ -640,6 +732,7 @@ class ClusterRuntime:
                     paused[s] = t + self.adjustment_cost_s
                     self.runtimes[app_id].n_adjustments += 1
             self.total_adjustments += len(res.adjusted_app_ids)
+            self.total_forced_adjustments += len(res.forced_adjusted_app_ids)
 
         def admit(w: WorkloadApp, at: float) -> int:
             nonlocal next_slot
@@ -682,15 +775,19 @@ class ClusterRuntime:
 
             if absorb:
                 # Is the event at t_next absorbable (completion, injected
-                # Resize, or arrival)? Ticks and non-Resize injections are
+                # Resize/chaos, or arrival)? Ticks and other injections are
                 # barriers and fall through to the per-event branches.
+                # Chaos events absorb only for recovery-capable policies
+                # (a rack-loss flood coalesces into ONE recovery solve).
+                inj_abs = ((Resize,) + _CHAOS_TYPES if self._chaos_capable
+                           else (Resize,))
                 is_fin = (t_fin <= t_arr and t_fin <= t_ext
                           and fin_slot is not None)
                 is_ext = (not is_fin) and t_ext <= t_arr
                 is_inj = is_ext and t_inj <= next_tick
                 absorbable = (is_fin
                               or (is_inj
-                                  and isinstance(inj_heap[0][2], Resize))
+                                  and isinstance(inj_heap[0][2], inj_abs))
                               or (not is_fin and not is_ext))
                 if absorbable:
                     # Collect the flood: every absorbable event at the same
@@ -703,6 +800,7 @@ class ClusterRuntime:
                     batch_c: List[str] = []
                     batch_r: List[Resize] = []
                     batch_a: List[WorkloadApp] = []
+                    batch_x: List[ChaosEvent] = []
                     pubs: List[Event] = []
                     while True:
                         t_arr = (arrivals[ai].spec.submit_time
@@ -729,11 +827,15 @@ class ClusterRuntime:
                             pubs.append(Completion(t, app_id))
                         elif t_ext <= t_arr:
                             if not (t_inj <= next_tick and isinstance(
-                                    inj_heap[0][2], Resize)):
+                                    inj_heap[0][2], inj_abs)):
                                 break         # tick / foreign injection
                             ev = heapq.heappop(inj_heap)[2]
                             advance(t, t_inj)
                             t = t_inj
+                            if isinstance(ev, _CHAOS_TYPES):
+                                batch_x.append(ev)
+                                pubs.append(ev)
+                                continue
                             s = slot_of.get(ev.app_id)
                             if s is not None and active[s]:
                                 batch_r.append(ev)
@@ -749,7 +851,8 @@ class ClusterRuntime:
                             t = t_arr
                             admit(w, t_arr)
                             batch_a.append(w)
-                    k = len(batch_c) + len(batch_r) + len(batch_a)
+                    k = (len(batch_c) + len(batch_r) + len(batch_a)
+                         + len(batch_x))
                     st = self.absorber_stats
                     st["events"] += k
                     st["passes"] += 1
@@ -769,23 +872,33 @@ class ClusterRuntime:
                             ev = batch_r[0]
                             finish(ev, self.policy.on_resize(
                                 ev.app_id, ev.n_min, ev.n_max))
+                        elif batch_x:
+                            finish(pubs[0],
+                                   self._dispatch_chaos(batch_x[0]))
                         else:
                             w = batch_a[0]
                             finish(Arrival(t, (w.spec,)),
                                    self.policy.on_arrival((w.spec,)))
                     elif k >= 2:
                         specs = tuple(w.spec for w in batch_a)
-                        res = self.policy.on_batch(
-                            tuple(batch_c),
-                            tuple((r.app_id, r.n_min, r.n_max)
-                                  for r in batch_r),
-                            specs)
+                        if batch_x:
+                            res = self.policy.on_batch(
+                                tuple(batch_c),
+                                tuple((r.app_id, r.n_min, r.n_max)
+                                      for r in batch_r),
+                                specs, chaos=tuple(batch_x))
+                        else:
+                            res = self.policy.on_batch(
+                                tuple(batch_c),
+                                tuple((r.app_id, r.n_min, r.n_max)
+                                      for r in batch_r),
+                                specs)
                         for ev in pubs:
                             self.bus.publish(ev)
                         if specs:
                             self.bus.publish(Arrival(t, specs))
                         finish(Storm(t, tuple(batch_c), tuple(batch_r),
-                                     specs), res)
+                                     specs, tuple(batch_x)), res)
                     # k == 0: flood was only dead-target resizes, already
                     # published during collection; nothing to solve.
                     if self.absorber.adaptive and k:
@@ -818,6 +931,8 @@ class ClusterRuntime:
                                 ev.app_id, ev.n_min, ev.n_max)
                     elif isinstance(ev, Tick):
                         res = self.policy.on_tick(t)
+                    elif isinstance(ev, _CHAOS_TYPES):
+                        res = self._dispatch_chaos(ev)
                     finish(ev, res)
                 else:
                     next_tick += tick_dt
@@ -857,9 +972,38 @@ class ClusterRuntime:
             rt.containers = int(cont[s])
             rt.paused_until = float(paused[s])
 
+        chaos_seed = None
+        chaos_hash = None
+        if self.chaos is not None:
+            from .chaos import chaos_config_hash
+            chaos_seed = int(self.chaos.seed)
+            chaos_hash = chaos_config_hash(self.chaos)
         return SimResult(samples=self.samples, completions=self.runtimes,
                          total_adjustments=self.total_adjustments,
-                         horizon_s=min(self.horizon_s, t))
+                         horizon_s=min(self.horizon_s, t),
+                         chaos_seed=chaos_seed,
+                         chaos_config_hash=chaos_hash,
+                         total_forced_adjustments=(
+                             self.total_forced_adjustments))
+
+    # --------------------------------------------------------------- chaos
+
+    def _dispatch_chaos(self, ev: "ChaosEvent"
+                        ) -> Optional[ReallocationResult]:
+        """Route one chaos event to the policy's recovery hook. Policies
+        without the hook get publish-only semantics (res=None): the bus
+        still carries the event for monitors, nothing is solved."""
+        p = self.policy
+        if isinstance(ev, SlaveFailed):
+            fn = getattr(p, "on_slave_failed", None)
+        elif isinstance(ev, SlaveDrained):
+            fn = getattr(p, "on_slave_drained", None)
+        elif isinstance(ev, SlaveDegraded):
+            fn = getattr(p, "on_slave_degraded", None)
+            return fn(ev.slave_id, ev.factor) if fn is not None else None
+        else:
+            fn = getattr(p, "on_slave_restored", None)
+        return fn(ev.slave_id) if fn is not None else None
 
     # ------------------------------------------------------------- sampling
 
@@ -870,7 +1014,8 @@ class ClusterRuntime:
             fairness_loss=res.fairness_loss,
             adjustment_overhead=res.adjustment_overhead,
             running=len(res.allocation.app_ids),
-            pending=len(res.pending_app_ids)))
+            pending=len(res.pending_app_ids),
+            forced_adjustments=len(res.forced_adjusted_app_ids)))
         if self.logger is not None:
             self.logger.log("sample", t=t, utilization=res.utilization,
                             fairness_loss=res.fairness_loss,

@@ -114,11 +114,15 @@ class ClusterSimulator(_SimulatorBase):
                  batch_window_s: float = 0.0,
                  tick_interval_s: float = 0.0,
                  bus: Optional[EventBus] = None,
-                 absorber: Optional[AbsorberConfig] = None):
+                 absorber: Optional[AbsorberConfig] = None,
+                 chaos=None):
         """`absorber` (runtime.AbsorberConfig) turns on the mixed-flood
         event-storm absorber: arrivals + completions + resizes at the same
         timestamp (or inside the configured window) coalesce into ONE
-        policy pass. Mutually exclusive with `batch_window_s`."""
+        policy pass. Mutually exclusive with `batch_window_s`.
+
+        `chaos` (chaos.ChaosConfig) injects a seeded slave failure /
+        drain / straggler schedule into the run (fault-injection)."""
         super().__init__(scheduler, workload,
                          adjustment_cost_s=adjustment_cost_s,
                          rate_multiplier=rate_multiplier,
@@ -131,7 +135,7 @@ class ClusterSimulator(_SimulatorBase):
             horizon_s=horizon_s, logger=logger,
             batch_window_s=batch_window_s,
             tick_interval_s=tick_interval_s, bus=bus,
-            absorber=absorber)
+            absorber=absorber, chaos=chaos)
 
     # ------------------------------------------------------------------ run
 

@@ -289,6 +289,45 @@ class ClusterState:
         """(b, m) resources in use (derived: cap - free)."""
         return self.cap - self.free
 
+    # ----------------------------------------------- capacity fast mutation
+
+    def set_cluster(self, cluster: ClusterSpec) -> None:
+        """Swap the cluster spec after a capacity change (chaos slave
+        failure / degrade / restore -- see `repro.core.chaos`).
+
+        The slave id space must be unchanged (same ids, same order): rows
+        are RETIRED by zeroing their capacity, never removed, so interned
+        slave indices, placement rows and the delta-solve memo all stay
+        valid. `free` follows the per-row capacity delta (the caller must
+        have evicted enough placements first that free stays >= 0 on shrunk
+        rows); `total_cap` is recomputed with the same sum the constructor
+        uses, and the admission-time per-app coefficients (g, util_w) are
+        recomputed with `admit`'s exact arithmetic from the new aggregate
+        -- this is what keeps state-backed solves bit-exact with spec-only
+        solves that recompute from `cluster.total_capacity()` fresh."""
+        if tuple(s.slave_id for s in cluster.slaves) != self.slave_ids:
+            raise ValueError("set_cluster must preserve slave ids and order")
+        newcap = cluster.capacity_matrix().astype(np.float64)
+        delta = newcap - self.cap
+        rows = np.flatnonzero(delta.any(axis=1))
+        if rows.size:
+            self.free[rows] += delta[rows]
+        self.cap = newcap
+        self.total_cap = self.cap.sum(axis=0)
+        if self.row_of:
+            idx = self.rows_for(list(self.row_of))
+            dmat = self.demand[idx]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ratios = np.where(self.total_cap > 0,
+                                  dmat / self.total_cap, 0.0)
+            self.g[idx] = (ratios.max(axis=1) if ratios.size
+                           else self.g[idx])
+            self.util_w[idx] = ratios.sum(axis=1)
+        self.cluster = cluster
+        # Any capacity move (loss OR restore) invalidates the futile-top-up
+        # memo and every saturation conclusion drawn before it.
+        self.epoch += 1
+
     # ------------------------------------------- lazy object materialization
 
     def partition(self, app_id: str) -> Partition:
@@ -344,7 +383,13 @@ class StateSlaveView:
     def __init__(self, state: ClusterState, j: int):
         self._state = state
         self.j = j
-        self.spec = state.cluster.slaves[j]
+
+    @property
+    def spec(self):
+        # Read through the state: chaos capacity mutations swap
+        # `state.cluster` for a rescaled spec (`ClusterState.set_cluster`),
+        # and cached views must see the post-failure capacities.
+        return self._state.cluster.slaves[self.j]
 
     @property
     def slave_id(self) -> str:

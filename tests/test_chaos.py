@@ -1,0 +1,440 @@
+"""Directed fault-injection tests (PR 8).
+
+Covers the chaos engine's deterministic pieces -- schedule generation,
+CSV round-trip, capacity rescaling, state fast-mutations -- plus the
+recovery semantics of DormMaster and both baselines on hand-built
+scenarios, the absorber interaction on a mixed failure flood, and the
+reproducibility contract (SimResult carries chaos seed + config hash;
+the same artifact replays bit-exact).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AbsorberConfig, ApplicationSpec, ChaosConfig,
+                        ChaosMonitor, ClusterRuntime, ClusterSpec,
+                        ClusterState, DormMaster, DRFScheduler,
+                        OptimizerConfig, Reallocated, RecordingProtocol,
+                        Resize, ResourceVector, SlaveDegraded, SlaveFailed,
+                        SlaveRestored, SlaveSpec, StaticScheduler, Storm,
+                        TraceConfig,
+                        WorkloadApp, chaos_config_hash, chaos_from_csv,
+                        chaos_schedule, chaos_to_csv, generate_trace,
+                        heterogeneous_cluster, scale_cluster,
+                        ReplayLoadSignal, SLOMonitor,
+                        forced_churn_attribution)
+
+CFG = ChaosConfig(seed=11, crashes_per_day=12.0, rack_size=2,
+                  crash_restore_s=1800.0, drains_per_day=4.0,
+                  straggler_frac=0.25, degrade_factor=0.5,
+                  degrade_duration_s=900.0)
+
+
+def _master(cluster, **kw):
+    cfg = OptimizerConfig(0.2, 0.2, **kw)
+    return DormMaster(cluster, "greedy", cfg, protocol=RecordingProtocol())
+
+
+def _spec(app_id, cpu=2, mem=8, n_min=1, n_max=4, **kw):
+    return ApplicationSpec(app_id, "x", ResourceVector.of(cpu, 0, mem),
+                           1, n_max, n_min, **kw)
+
+
+# ---------------------------------------------------------------- schedule
+
+def test_chaos_schedule_is_deterministic():
+    cluster = heterogeneous_cluster(20, seed=3)
+    a = chaos_schedule(CFG, cluster, 24 * 3600.0)
+    b = chaos_schedule(CFG, cluster, 24 * 3600.0)
+    assert a == b
+    assert a, "non-zero rates must yield events"
+    ts = [e.t for e in a]
+    assert ts == sorted(ts)
+    assert chaos_config_hash(CFG) == chaos_config_hash(
+        ChaosConfig(**dataclasses.asdict(CFG)))
+    assert chaos_config_hash(CFG) != chaos_config_hash(
+        dataclasses.replace(CFG, seed=12))
+
+
+def test_chaos_schedule_restores_follow_failures():
+    cluster = heterogeneous_cluster(20, seed=3)
+    events = chaos_schedule(CFG, cluster, 24 * 3600.0)
+    down_at = {}
+    for ev in events:
+        if isinstance(ev, SlaveFailed):
+            down_at[ev.slave_id] = ev.t
+        elif isinstance(ev, SlaveRestored) and ev.slave_id in down_at:
+            assert ev.t > down_at.pop(ev.slave_id)
+    # A degraded slave is never one the crash/drain stream touched.
+    crashed = {e.slave_id for e in events if isinstance(e, SlaveFailed)}
+    degraded = {e.slave_id for e in events if isinstance(e, SlaveDegraded)}
+    assert not (crashed & degraded)
+
+
+def test_chaos_schedule_respects_t_start():
+    cluster = heterogeneous_cluster(10, seed=0)
+    cfg = dataclasses.replace(CFG, t_start_s=7200.0)
+    events = chaos_schedule(cfg, cluster, 24 * 3600.0)
+    assert all(e.t >= 7200.0 for e in events)
+
+
+def test_chaos_csv_round_trip(tmp_path):
+    cluster = heterogeneous_cluster(16, seed=1)
+    events = chaos_schedule(CFG, cluster, 24 * 3600.0)
+    text = chaos_to_csv(events)
+    back = chaos_from_csv(text)
+    assert back == sorted(events, key=lambda e: e.t)
+    p = tmp_path / "incidents.csv"
+    p.write_text(text)
+    assert chaos_from_csv(str(p)) == back
+    with pytest.raises(ValueError, match="unknown chaos kind"):
+        chaos_from_csv("t_s,kind,slave_id,factor\n1.0,exploded,s0,\n")
+
+
+# ----------------------------------------------------------- scale_cluster
+
+def test_scale_cluster_preserves_ids_and_scales_capacity():
+    base = heterogeneous_cluster(6, seed=2)
+    scale = np.array([1.0, 0.0, 0.5, 1.0, 1.0, 0.25])
+    scaled = scale_cluster(base, scale)
+    assert tuple(s.slave_id for s in scaled.slaves) == \
+        tuple(s.slave_id for s in base.slaves)
+    np.testing.assert_allclose(
+        scaled.capacity_matrix(),
+        base.capacity_matrix() * scale[:, None])
+    # Healthy slaves keep their original SlaveSpec objects (cache reuse).
+    assert scaled.slaves[0] is base.slaves[0]
+    assert scaled.slaves[1] is not base.slaves[1]
+    healthy = scale_cluster(base, np.ones(6))
+    np.testing.assert_array_equal(healthy.capacity_matrix(),
+                                  base.capacity_matrix())
+
+
+def test_state_set_cluster_adjusts_free_and_guards_ids():
+    base = ClusterSpec.homogeneous(3, ResourceVector.of(8, 0, 32))
+    st = ClusterState(base)
+    st.admit(_spec("a"))
+    st.place("a", np.array([2, 1, 0]))
+    free_before = st.free.copy()
+    scaled = scale_cluster(base, [1.0, 0.5, 1.0])
+    st.set_cluster(scaled)
+    np.testing.assert_array_equal(st.cap, scaled.capacity_matrix())
+    delta = scaled.capacity_matrix() - base.capacity_matrix()
+    np.testing.assert_allclose(st.free, free_before + delta)
+    np.testing.assert_allclose(st.total_cap,
+                               scaled.capacity_matrix().sum(axis=0))
+    wrong = ClusterSpec(
+        resource_types=base.resource_types,
+        slaves=tuple(SlaveSpec(f"other-{j}", s.capacity)
+                     for j, s in enumerate(base.slaves)))
+    with pytest.raises(ValueError, match="slave ids"):
+        st.set_cluster(wrong)
+
+
+# --------------------------------------------------- DormMaster recovery
+
+@pytest.mark.parametrize("soa", [True, False])
+def test_master_failure_displaces_and_replaces(soa):
+    # 3 roomy slaves; the app fits on any one of them, so losing its host
+    # must re-place it immediately in the SAME recovery solve.
+    cluster = ClusterSpec.homogeneous(3, ResourceVector.of(16, 0, 64))
+    m = _master(cluster, soa=soa)
+    m.on_arrival((_spec("a", n_min=2, n_max=2),))
+    row = (m.state.placement("a") if m.state is not None
+           else m._placements["a"])
+    host = int(np.flatnonzero(row)[0])
+    sid = cluster.slaves[host].slave_id
+    res = m.on_slave_failed(sid)
+    assert res is not None
+    assert res.displaced_app_ids == ("a",)
+    assert res.forced_adjusted_app_ids == ("a",)
+    assert "a" in res.adjusted_app_ids
+    assert res.parked_app_ids == ()
+    i = res.allocation.app_ids.index("a")
+    assert res.allocation.x[i, host] == 0
+    assert int(res.allocation.x[i].sum()) == 2
+    # The dead slave's capacity is fenced in the effective spec.
+    assert m.cluster.capacity_matrix()[host].sum() == 0.0
+    # Double failure of the same slave is a no-op.
+    assert m.on_slave_failed(sid) is None
+    assert m.on_slave_failed("no-such-slave") is None
+
+
+@pytest.mark.parametrize("soa", [True, False])
+def test_master_parks_unplaceable_then_recovers_on_restore(soa):
+    # Two slaves; the app needs BOTH (n_min 8, 4 per slave max). Losing
+    # one makes it unplaceable -> parked. Restoring re-places it.
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    m = _master(cluster, soa=soa)
+    m.on_arrival((_spec("a", n_min=8, n_max=8),))
+    assert m.containers_of("a") == 8
+    res = m.on_slave_failed("slave-0")
+    assert res is not None
+    assert res.parked_app_ids == ("a",)
+    assert "a" in m.pending and m.containers_of("a") == 0
+    assert res.changed_counts.get("a") == 0
+    back = m.on_slave_restored("slave-0")
+    assert back is not None
+    assert "a" in back.started_app_ids
+    assert m.containers_of("a") == 8 and "a" not in m.pending
+
+
+@pytest.mark.parametrize("soa", [True, False])
+def test_master_degrade_shrinks_within_bounds(soa):
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    m = _master(cluster, soa=soa)
+    m.on_arrival((_spec("a", cpu=2, mem=8, n_min=2, n_max=8),))
+    assert m.containers_of("a") == 8
+    res = m.on_slave_degraded("slave-1", factor=0.5)
+    assert res is not None
+    n = m.containers_of("a")
+    assert 2 <= n <= 8
+    used = sum(m.specs["a"].demand.as_array() * n)
+    assert used <= m.cluster.capacity_matrix().sum() + 1e-9
+    res2 = m.on_slave_restored("slave-1")
+    assert res2 is not None
+    assert m.containers_of("a") == 8
+
+
+def test_master_on_batch_processes_chaos_before_completions():
+    # Satellite: a flood carrying {SlaveFailed, Completion of an app on
+    # that slave, Resize of another app on it} must drop the dead slave's
+    # rows FIRST, then apply the merged completion + resize -- one solve,
+    # consistent capacity, no phantom containers on the dead slave.
+    cluster = ClusterSpec.homogeneous(3, ResourceVector.of(8, 0, 32))
+    m = _master(cluster)
+    m.on_arrival((_spec("a", n_min=3, n_max=3),
+                  _spec("b", n_min=3, n_max=3),
+                  _spec("c", n_min=2, n_max=6)))
+    res = m.on_batch(("a",), (("c", 1, 6),), (),
+                     chaos=(SlaveFailed(100.0, "slave-0"),))
+    assert res is not None
+    assert "a" not in m.specs
+    assert m.cluster.capacity_matrix()[0].sum() == 0.0
+    for app_id in ("b", "c"):
+        i = res.allocation.app_ids.index(app_id)
+        assert res.allocation.x[i, 0] == 0, "row on dead slave survived"
+        spec = m.specs[app_id]
+        assert spec.n_min <= int(res.allocation.x[i].sum()) <= spec.n_max
+    assert (m.specs["c"].n_min, m.specs["c"].n_max) == (1, 6)
+    assert "a" not in res.parked_app_ids        # completed, not parked
+    # Forced churn only covers apps the failure displaced and that are
+    # still admitted; the completed app is not adjusted.
+    assert "a" not in res.adjusted_app_ids
+    assert set(res.forced_adjusted_app_ids) <= {"b", "c"}
+
+
+# ----------------------------------------------------- baseline degrading
+
+def test_static_scheduler_survives_slave_loss():
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    s = StaticScheduler(cluster, {"a": 4, "b": 4})
+    s.on_arrival((_spec("a", n_min=4, n_max=4),))
+    s.on_arrival((_spec("b", n_min=4, n_max=4),))
+    hosts_a = s.placements["a"].copy()
+    victim = int(np.flatnonzero(hosts_a)[0])
+    sid = cluster.slaves[victim].slave_id
+    res = s._chaos(sid, 0.0)
+    assert res is not None
+    assert "a" in res.displaced_app_ids
+    assert np.all(s.slave_free >= -1e-9), "free capacity went negative"
+    assert np.all(s.slave_free <= s.slave_cap + 1e-9), \
+        "freed more capacity than exists (double count)"
+    assert s.slave_cap[victim].sum() == 0.0
+    # Displaced apps re-queue (FCFS) or restart; never silently vanish.
+    for a in res.displaced_app_ids:
+        assert (a in s.placements) or (a in s.queue)
+    assert res.forced_adjusted_app_ids == res.adjusted_app_ids
+    # Restore brings capacity back and re-admits the queue.
+    res2 = s.on_slave_restored(sid)
+    assert res2 is not None
+    assert not s.queue
+    assert set(s.placements) == {"a", "b"}
+    np.testing.assert_allclose(s.slave_cap, s._base_cap)
+
+
+def test_static_scheduler_double_failure_is_noop():
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    s = StaticScheduler(cluster, {})
+    assert s.on_slave_failed("slave-0") is not None
+    assert s.on_slave_failed("slave-0") is None
+    assert s.on_slave_failed("bogus") is None
+
+
+def test_drf_scheduler_survives_slave_loss():
+    cluster = ClusterSpec.homogeneous(2, ResourceVector.of(8, 0, 32))
+    s = DRFScheduler(cluster)
+    s.on_arrival((_spec("a"), _spec("b")))
+    displaced_hosts = {a for a, row in s.placements.items() if row[0] > 0}
+    res = s.on_slave_failed("slave-0")
+    assert res is not None
+    assert set(res.displaced_app_ids) == displaced_hosts
+    assert set(res.forced_adjusted_app_ids) <= set(res.adjusted_app_ids)
+    # The repack must respect the reduced capacity: nothing on slave 0.
+    for a, row in s.placements.items():
+        assert row[0] == 0, a
+    cap = s.cluster.capacity_matrix()
+    used = np.zeros_like(cap)
+    for a, row in s.placements.items():
+        used += row[:, None] * s.specs[a].demand.as_array()[None, :]
+    assert np.all(used <= cap + 1e-9)
+    assert s.on_slave_failed("slave-0") is None       # no-op repeat
+    res2 = s.on_slave_restored("slave-0")
+    assert res2 is not None
+    np.testing.assert_array_equal(s.cluster.capacity_matrix(),
+                                  cluster.capacity_matrix())
+
+
+# ------------------------------------------------- runtime + reproducibility
+
+def _wl(n=8, seed=7):
+    return generate_trace(TraceConfig(n_apps=n, seed=seed,
+                                      mean_interarrival_s=400.0))
+
+
+def test_runtime_records_chaos_seed_and_hash():
+    cluster = heterogeneous_cluster(12, seed=3)
+    m = _master(cluster)
+    rt = ClusterRuntime(m, horizon_s=12 * 3600.0, chaos=CFG)
+    res = rt.run(_wl())
+    assert res.chaos_seed == CFG.seed
+    assert res.chaos_config_hash == chaos_config_hash(CFG)
+    healthy = ClusterRuntime(_master(cluster), horizon_s=12 * 3600.0)
+    res_h = healthy.run(_wl())
+    assert res_h.chaos_seed is None and res_h.chaos_config_hash is None
+    assert res_h.total_forced_adjustments == 0
+
+
+def test_chaos_replay_is_bit_exact():
+    """Same config + cluster + horizon => identical timeline (the
+    reproducibility contract behind SimResult.chaos_seed/.chaos_config_hash:
+    the artifact alone is enough to re-run the failure replay)."""
+    cluster = heterogeneous_cluster(12, seed=3)
+
+    def run():
+        m = _master(cluster)
+        rt = ClusterRuntime(m, horizon_s=12 * 3600.0, chaos=CFG)
+        allocs = []
+        rt.bus.subscribe(Reallocated,
+                         lambda e: allocs.append(
+                             (e.t, e.result.allocation.app_ids,
+                              e.result.allocation.x.copy())))
+        return rt.run(_wl()), allocs
+
+    res_a, al_a = run()
+    res_b, al_b = run()
+    assert res_a.samples == res_b.samples
+    assert len(al_a) == len(al_b)
+    for (t1, i1, x1), (t2, i2, x2) in zip(al_a, al_b):
+        assert t1 == t2 and i1 == i2
+        np.testing.assert_array_equal(x1, x2)
+
+
+def test_chaos_requires_cluster_capable_policy():
+    class Bare:
+        def on_arrival(self, specs): return None
+        def on_completion(self, app_id): return None
+        def on_resize(self, app_id, n_min=None, n_max=None): return None
+        def on_tick(self, t): return None
+        def containers_of(self, app_id): return 0
+    rt = ClusterRuntime(Bare(), chaos=CFG)
+    with pytest.raises(ValueError, match="cluster"):
+        rt.run([])
+
+
+def test_absorber_coalesces_rack_failure_flood():
+    # A rack failure (2 slaves at one instant) + a same-instant completion
+    # and resize coalesce into ONE Storm pass carrying the chaos events.
+    cluster = ClusterSpec.homogeneous(4, ResourceVector.of(8, 0, 32))
+    t_flood = 500.0
+    # a runs 2 containers on serial_work 2*t_flood => completes AT t_flood.
+    spec_a = _spec("a", n_min=2, n_max=2, submit_time=0.0,
+                   serial_work=2 * t_flood)
+    spec_b = _spec("b", n_min=2, n_max=6, submit_time=0.0,
+                   serial_work=80_000.0)
+    wl = [WorkloadApp(spec=spec_a, class_index=0, base_duration_s=t_flood),
+          WorkloadApp(spec=spec_b, class_index=0,
+                      base_duration_s=80_000.0)]
+    m = _master(cluster)
+    rt = ClusterRuntime(m, horizon_s=12 * 3600.0,
+                        absorber=AbsorberConfig())
+    rt.inject(SlaveFailed(t_flood, "slave-0"),
+              SlaveFailed(t_flood, "slave-1"),
+              Resize(t_flood, "b", 2, 4))
+    storms = []
+    rt.bus.subscribe(Storm, storms.append)
+    reallocs = []
+    rt.bus.subscribe(Reallocated, reallocs.append)
+    res = rt.run(wl)
+    flood = [s for s in storms if s.t == t_flood]
+    assert len(flood) == 1, storms
+    st_ = flood[0]
+    assert len(st_.chaos) == 2 and len(st_.resizes) == 1
+    assert "a" in st_.completions
+    # One merged recovery solve handled the whole flood; b's rows on the
+    # dead slaves are gone and it landed back within its (new) bounds.
+    for j in (0, 1):
+        assert m.cluster.capacity_matrix()[j].sum() == 0.0
+    at_flood = [e.result for e in reallocs if e.t == t_flood]
+    assert len(at_flood) == 1
+    r = at_flood[0]
+    assert "b" in r.displaced_app_ids
+    i = r.allocation.app_ids.index("b")
+    assert r.allocation.x[i, 0] == 0 and r.allocation.x[i, 1] == 0
+    assert 2 <= int(r.allocation.x[i].sum()) <= 4
+    assert res.total_forced_adjustments >= 1
+
+
+def test_chaos_monitor_accounting():
+    base = ClusterSpec.homogeneous(4, ResourceVector.of(8, 0, 32))
+    mon = ChaosMonitor(base)
+    # Hand-driven integral: slave 0 fully down for 100 s on a 4-slave,
+    # 2-positive-resource cluster -> (1/4 + 1/4) * 100 = 50 units.
+    mon._on_chaos(SlaveFailed(100.0, "slave-0"))
+    mon._on_chaos(SlaveRestored(200.0, "slave-0"))
+    mon.finalize(1000.0)
+    assert mon.lost_capacity_seconds == pytest.approx(50.0)
+    assert mon.counts["failed"] == 1 and mon.counts["restored"] == 1
+    mon.finalize(1000.0)                  # idempotent
+    assert mon.lost_capacity_seconds == pytest.approx(50.0)
+    assert mon.replaced_fraction == 1.0   # nothing displaced
+    assert mon.median_recovery_s() is None
+
+
+def test_chaos_monitor_end_to_end_recovery():
+    cluster = heterogeneous_cluster(24, seed=3)
+    cfg = ChaosConfig(seed=2, crashes_per_day=30.0, rack_size=2,
+                      crash_restore_s=1800.0)
+    m = _master(cluster)
+    rt = ClusterRuntime(m, horizon_s=12 * 3600.0, chaos=cfg)
+    mon = ChaosMonitor(cluster).attach(rt)
+    rt.run(_wl(n=10))
+    mon.finalize(12 * 3600.0)
+    s = mon.summary()
+    assert s["events"]["failed"] > 0
+    assert s["lost_capacity_seconds"] > 0.0
+    assert s["forced_adjustments"] == rt.total_forced_adjustments
+    if s["displaced"]:
+        assert s["replaced"] + s["unresolved_displaced"] == s["displaced"]
+
+
+def test_slo_monitor_reports_forced_churn_under_chaos():
+    # Autoscale interaction: the serving-SLO panel splits Eq-4 churn by
+    # compulsion, so overload/lag numbers can be read against the
+    # capacity the failures took away.
+    cluster = heterogeneous_cluster(24, seed=3)
+    cfg = ChaosConfig(seed=2, crashes_per_day=30.0, rack_size=2,
+                      crash_restore_s=1800.0)
+    m = _master(cluster)
+    rt = ClusterRuntime(m, horizon_s=12 * 3600.0, chaos=cfg)
+    wl = _wl(n=10)
+    slo = SLOMonitor({w.spec.app_id: ReplayLoadSignal([0.0], [1.0])
+                      for w in wl}).attach(rt)
+    rt.run(wl)
+    comp = slo.summary(12 * 3600.0)["churn_by_compulsion"]
+    assert comp == forced_churn_attribution(slo.reallocated)
+    assert comp["forced"] == rt.total_forced_adjustments
+    assert comp["displaced"] >= comp["parked"] >= 0
+    total = sum(slo.summary(12 * 3600.0)["churn_by_trigger"].values())
+    assert comp["forced"] + comp["voluntary"] == total
