@@ -12,9 +12,9 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (bench_autoscale, bench_chaos, bench_kernels, bench_replay,
-               bench_scale, fig1_durations, fig6_utilization, fig7_fairness,
-               fig8_adjustment, fig9a_speedup, fig9b_overhead)
+from . import (bench_autoscale, bench_chaos, bench_goodput, bench_kernels,
+               bench_replay, bench_scale, fig1_durations, fig6_utilization,
+               fig7_fairness, fig8_adjustment, fig9a_speedup, fig9b_overhead)
 
 MODULES = {
     "fig1": fig1_durations,
@@ -26,6 +26,7 @@ MODULES = {
     "kernels": bench_kernels,
     "scale": bench_scale,
     "autoscale": bench_autoscale,
+    "goodput": bench_goodput,
     "replay": bench_replay,
     "chaos": bench_chaos,
 }

@@ -1,0 +1,106 @@
+"""Goodput-aware allocation walkthrough: why the knee beats n_max.
+
+Three stages:
+
+ 1. Inspect the roofline-derived `GoodputCurve`s for a few registry
+    architectures -- MoE models (olmoe, dbrx) saturate at a handful of
+    containers because the gradient all-reduce moves TOTAL parameters
+    while compute only shrinks with ACTIVE parameters; dense models stay
+    near-linear much longer.
+ 2. One contended solve: a MoE app and a dense app share a cluster too
+    small for both n_max requests. Count-linear allocation splits by DRF
+    counts; goodput-aware allocation caps the MoE app at its knee and
+    routes the freed containers to the dense app -- more aggregate
+    goodput from the SAME hardware.
+ 3. A simulated half-day on a curved trace, count-linear vs goodput-aware
+    (the benchmarks/bench_goodput.py comparison at example scale).
+
+Run:  PYTHONPATH=src python examples/goodput_allocation.py
+"""
+import argparse
+
+from repro.core import (ApplicationSpec, ClusterSimulator, ClusterSpec,
+                        DormMaster, OptimizerConfig, RecordingProtocol,
+                        ResourceVector, TraceConfig, derive_curve,
+                        generate_trace, heterogeneous_cluster,
+                        make_optimizer)
+
+
+def show_curves() -> None:
+    print("1. roofline-derived goodput curves (goodput(1) = 1.0)")
+    print(f"   {'arch':16s} {'knee':>4s}  goodput at N = 1, 2, 4, 8, 16")
+    for arch in ("olmoe-1b-7b", "dbrx-132b", "gemma2-9b", "mistral-nemo-12b"):
+        c = derive_curve(arch, 16)
+        pts = "  ".join(f"{c.at(n):5.2f}" for n in (1, 2, 4, 8, 16))
+        print(f"   {arch:16s} {c.knee(16):4d}  {pts}")
+    print("   (knee = last N whose marginal goodput >= half a container)\n")
+
+
+def contended_solve() -> None:
+    print("2. one contended solve: MoE + dense on 6 x (8 cpu, 32 GB)")
+    cluster = ClusterSpec.homogeneous(6, ResourceVector.of(8, 0, 32))
+    moe = derive_curve("olmoe-1b-7b", 24)
+    dense = derive_curve("gemma2-9b", 24)
+    apps = [
+        ApplicationSpec("moe", "jax", ResourceVector.of(2, 0, 8), 1, 24, 1,
+                        model="olmoe-1b-7b", goodput=moe),
+        ApplicationSpec("dense", "jax", ResourceVector.of(2, 0, 8), 1, 24, 1,
+                        model="gemma2-9b", goodput=dense),
+    ]
+    for aware in (False, True):
+        opt = make_optimizer(
+            "greedy", OptimizerConfig(0.5, 0.5, goodput_aware=aware))
+        alloc = opt.solve(apps, cluster, None)
+        counts = {a: int(alloc.x[i].sum())
+                  for i, a in enumerate(alloc.app_ids)}
+        total_gp = moe.at(counts["moe"]) + dense.at(counts["dense"])
+        label = "goodput-aware" if aware else "count-linear "
+        print(f"   {label}: moe={counts['moe']:2d}  dense={counts['dense']:2d}"
+              f"  aggregate goodput={total_gp:5.2f} container-eq")
+    print("   (same 48 containers; capping the MoE app at its knee moves"
+          " near-worthless\n    grants to the dense app, which still converts"
+          " them ~1:1)\n")
+
+
+def simulated_day(n_slaves: int, n_apps: int, seed: int) -> None:
+    print(f"3. simulated half-day: {n_apps} curved train jobs on "
+          f"{n_slaves} slaves")
+    cluster = heterogeneous_cluster(n_slaves, seed=seed)
+    wl = generate_trace(TraceConfig(
+        n_apps=n_apps, seed=seed, mean_interarrival_s=90.0,
+        diurnal_amplitude=0.5, serving_fraction=0.0, goodput_curves=True))
+    print(f"   {'policy':14s} {'goodput':>8s} {'util':>6s} {'meanFL':>7s} "
+          f"{'done':>5s} {'meanCT_h':>9s}")
+    for aware in (False, True):
+        master = DormMaster(
+            cluster, "greedy",
+            OptimizerConfig(0.2, 0.2, goodput_aware=aware),
+            protocol=RecordingProtocol())
+        res = ClusterSimulator(master, wl, adjustment_cost_s=60.0,
+                               horizon_s=12 * 3600.0).run()
+        done = [r for r in res.completions.values()
+                if r.finished_at is not None]
+        ct = (sum(r.finished_at - r.submitted_at for r in done)
+              / max(len(done), 1) / 3600.0)
+        label = "goodput-aware" if aware else "count-linear"
+        print(f"   {label:14s} {res.time_averaged_goodput():8.2f} "
+              f"{res.time_averaged_utilization():6.3f} "
+              f"{res.time_averaged_fairness_loss():7.4f} "
+              f"{len(done):5d} {ct:9.2f}")
+    print("   (goodput in container-equivalents; both runs progress jobs by"
+          " the TRUE curves,\n    only the allocation targets differ)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slaves", type=int, default=60)
+    ap.add_argument("--apps", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    show_curves()
+    contended_solve()
+    simulated_day(args.slaves, args.apps, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,8 +5,9 @@
 #
 #   scripts/check.sh                 # tier-1 tests
 #   scripts/check.sh --bench        # tests + benchmarks -> BENCH_scale.json,
-#                                   #   BENCH_replay.json, BENCH_chaos.json
-#                                   #   (perf + recovery regression gates)
+#                                   #   BENCH_replay.json, BENCH_chaos.json,
+#                                   #   BENCH_goodput.json
+#                                   #   (perf + recovery + goodput gates)
 #   scripts/check.sh -k runtime     # extra args forwarded to pytest
 set -uo pipefail
 cd "$(dirname "$0")/.."
@@ -146,5 +147,24 @@ for name in ("dorm", "static", "drf"):
           + ("" if ok_repl else "  FAIL"))
     failed |= not (ok_done and ok_med and ok_repl)
 sys.exit(1 if failed else 0)
+PY
+    echo "== goodput benchmark (writes BENCH_goodput.json) =="
+    # Goodput-aware vs count-linear allocation on the SAME curved trace in
+    # ONE process (benchmarks/bench_goodput.py): ratios only, deterministic.
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.bench_goodput --json BENCH_goodput.json
+    python - <<'PY'
+import json, sys
+rep = json.load(open("BENCH_goodput.json"))
+ratio = rep["goodput_ratio"]
+delta = rep["fairness_delta"]
+ok_ratio = ratio > 1.0
+ok_fair = rep["accept"]
+print(f"  goodput ratio (aware/linear): {ratio:.4f} (floor: > 1.0)"
+      + ("" if ok_ratio else "  FAIL"))
+print(f"  goodput fairness delta: {delta:+.4f} "
+      f"(ceiling: 1% of Eq-15 budget)"
+      + ("" if ok_fair else "  FAIL"))
+sys.exit(0 if (ok_ratio and ok_fair) else 1)
 PY
 fi

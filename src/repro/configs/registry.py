@@ -7,6 +7,7 @@ for SSM/hybrid; sliding-window variant for attention archs; None = skipped).
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, Optional
 
 from ..models.config import (DECODE_32K, INPUT_SHAPES, LONG_500K,
@@ -31,7 +32,11 @@ _MODULES = {
 ARCH_IDS = tuple(_MODULES.keys())
 
 
+@functools.lru_cache(maxsize=None)
 def get_config(arch_id: str) -> ModelConfig:
+    """Exact assigned configuration. Cached: `ModelConfig` is frozen, and
+    goodput-curve derivation (`core.goodput.derive_curve`) rebuilds the
+    roofline per (arch, N) so scheduler paths hit this per solve."""
     if arch_id not in _MODULES:
         raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
     return _MODULES[arch_id].config()

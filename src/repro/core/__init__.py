@@ -14,6 +14,8 @@ from .chaos import (ChaosConfig, ChaosMonitor, chaos_config_hash,
 from .drf import (IncrementalDRF, dominant_share, drf_container_counts,
                   drf_container_counts_reference, drf_shares, fairness_loss,
                   saturating_counts)
+from .goodput import (GoodputCurve, amdahl_curve, anchored_serial_work,
+                      curve_for_model, derive_curve, work_anchor)
 from .master import DormMaster
 from .metrics import (actual_shares, adjusted_apps, churn_attribution,
                       cluster_fairness_loss, container_churn,
@@ -56,7 +58,9 @@ __all__ = [
     "StaticScheduler", "TaskLevelOverheadModel", "IncrementalDRF",
     "dominant_share", "drf_container_counts",
     "drf_container_counts_reference", "drf_shares", "fairness_loss",
-    "saturating_counts", "DormMaster", "ReallocationResult",
+    "saturating_counts", "GoodputCurve", "amdahl_curve",
+    "anchored_serial_work", "curve_for_model", "derive_curve", "work_anchor",
+    "DormMaster", "ReallocationResult",
     "actual_shares", "adjusted_apps", "cluster_fairness_loss",
     "container_churn", "forced_churn_attribution",
     "per_resource_utilization",

@@ -1,0 +1,248 @@
+"""Goodput curves: throughput vs container count with diminishing returns.
+
+Dorm's P2 objective and the runtime work model assume LINEAR speedup
+(`serial_work / N`); real distributed training has diminishing returns --
+the gap Pollux/AdaptDL's SpeedupFunction and Shockwave close. This module
+is the one place that models it:
+
+* `GoodputCurve` -- a monotone, concave-capped table of goodput vs
+  container count, normalized so goodput(1) == 1.0 (one container makes
+  one container-second of progress per second, the linear model's unit).
+  Attached to `ApplicationSpec.goodput`; `None` (the default everywhere)
+  means exact-linear `goodput(N) = N`, so every existing timeline stays
+  bit-exact.
+* `derive_curve(arch_id, n_max)` -- per-model curves DERIVED from the
+  repo's own roofline analysis (`launch.roofline.data_parallel_step_time`)
+  over the configs registry, instead of assumed: compute shrinks 1/N
+  under data parallelism while resident-parameter HBM traffic and the
+  gradient all-reduce do not, and their ratio sets where goodput
+  saturates (MoE models saturate early: active params drive compute,
+  total params drive the all-reduce).
+* `amdahl_curve` / `curve_for_model` -- analytic fallback for replay and
+  synthetic apps whose `model` is not a registry architecture.
+* `work_anchor` / `anchored_serial_work` -- THE definition of how a
+  recorded duration converts to `serial_work` (previously replay.py and
+  workload.py disagreed; under goodput curves the anchor is
+  load-bearing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "DEFAULT_KNEE_FRAC", "GoodputCurve", "amdahl_curve", "anchored_serial_work",
+    "curve_for_model", "derive_curve", "work_anchor",
+]
+
+# A container's marginal goodput below this fraction of the first
+# container's marginal is past the knee (see `GoodputCurve.knee`).
+DEFAULT_KNEE_FRAC = 0.5
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodputCurve:
+    """Monotone, concave-capped goodput vs container count.
+
+    `table[k]` is the goodput at N = k + 1 containers; `goodput(0) == 0`.
+    Normalized curves have `table[0] == 1.0`. Beyond the table the curve
+    extrapolates linearly at the LAST marginal (constant returns past the
+    measured range -- keeps monotonicity and the concave cap when a
+    Resize raises `n_max` past the derivation range).
+
+    Construct via `from_samples` (enforces the invariants), `linear`
+    (the exact-linear table: attaching it is bit-identical to attaching
+    no curve), `amdahl_curve`, or `derive_curve`.
+    """
+    table: Tuple[float, ...]
+    source: str = "table"          # "linear" | "roofline:<arch>" | "amdahl:a"
+
+    def __post_init__(self):
+        if not self.table:
+            raise ValueError("GoodputCurve needs at least one point")
+        object.__setattr__(self, "table",
+                           tuple(float(v) for v in self.table))
+        if self.table[0] <= 0.0:
+            raise ValueError("goodput(1) must be positive")
+
+    # ------------------------------------------------------------ factories
+
+    @staticmethod
+    def linear(n_max: int) -> "GoodputCurve":
+        """The exact-linear curve goodput(N) = N: progress arithmetic with
+        this table attached is bit-identical to no curve at all."""
+        return GoodputCurve(tuple(float(i) for i in range(1, max(n_max, 1) + 1)),
+                            source="linear")
+
+    @staticmethod
+    def from_samples(throughputs: Sequence[float],
+                     source: str = "table") -> "GoodputCurve":
+        """Build a curve from raw throughput samples at N = 1, 2, ...:
+        normalize by the N=1 sample, then enforce monotonicity (running
+        max) and the concave cap (marginal gains forced non-increasing --
+        a noisy sample can never make container N+1 look better than
+        container N did)."""
+        t = np.asarray(list(throughputs), dtype=np.float64)
+        if t.size == 0:
+            raise ValueError("need at least one throughput sample")
+        if t[0] <= 0.0:
+            raise ValueError("throughput at N=1 must be positive")
+        t = np.maximum.accumulate(t / t[0])          # normalize + monotone
+        marg = np.diff(t, prepend=0.0)
+        marg = np.minimum.accumulate(marg)           # concave cap
+        return GoodputCurve(tuple(np.cumsum(marg)), source=source)
+
+    # ----------------------------------------------------------- evaluation
+
+    @property
+    def is_linear(self) -> bool:
+        """True iff the table IS goodput(N) = N (cached: probed per solve
+        on the optimizer's knee-capping path)."""
+        v = self.__dict__.get("_is_linear")
+        if v is None:
+            v = all(val == float(k + 1) for k, val in enumerate(self.table))
+            object.__setattr__(self, "_is_linear", v)
+        return v
+
+    @property
+    def _last_marginal(self) -> float:
+        if len(self.table) >= 2:
+            return self.table[-1] - self.table[-2]
+        return self.table[0]
+
+    def at(self, n: int) -> float:
+        """Goodput at n containers (0 for n <= 0; linear extrapolation at
+        the last marginal past the table)."""
+        n = int(n)
+        if n <= 0:
+            return 0.0
+        k = len(self.table)
+        if n <= k:
+            return self.table[n - 1]
+        return self.table[-1] + (n - k) * self._last_marginal
+
+    def eval(self, counts: np.ndarray) -> np.ndarray:
+        """Vectorized `at` over an integer count array."""
+        c = np.asarray(counts, dtype=np.int64)
+        k = len(self.table)
+        tab = np.concatenate(([0.0], np.asarray(self.table)))
+        out = tab[np.clip(c, 0, k)]
+        over = c > k
+        if over.any():
+            out = np.where(over, tab[k] + (c - k) * self._last_marginal, out)
+        return out
+
+    def knee(self, n_max: Optional[int] = None,
+             frac: float = DEFAULT_KNEE_FRAC) -> int:
+        """Largest N in [1, n_max] whose marginal goodput is still at least
+        `frac` of the first container's marginal. Past this point each
+        extra container buys less than `frac` of a container's worth of
+        progress -- the greedy/DRF allocation target (vs `n_max` under
+        the linear model). Marginals are non-increasing by the concave
+        cap, so the knee is the first crossing. Cached per (n_max, frac):
+        curve objects are shared across apps (lru_cached factories) and
+        the optimizer asks per solve."""
+        limit = int(n_max) if n_max is not None else len(self.table)
+        cache = self.__dict__.get("_knee_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_knee_cache", cache)
+        key = (limit, frac)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+        cut = frac * self.at(1) - _EPS
+        best = 1
+        for n in range(2, max(limit, 1) + 1):
+            if self.at(n) - self.at(n - 1) < cut:
+                break
+            best = n
+        cache[key] = best
+        return best
+
+
+def amdahl_curve(n_max: int, alpha: float,
+                 source: Optional[str] = None) -> "GoodputCurve":
+    """Analytic diminishing-returns fallback: goodput(N) = N / (1 + a(N-1))
+    (per-worker coordination overhead `a`; saturates at 1/a). Used for
+    replay/synthetic apps with no registry architecture to derive from."""
+    n = np.arange(1, max(int(n_max), 1) + 1, dtype=np.float64)
+    return GoodputCurve.from_samples(
+        n / (1.0 + alpha * (n - 1.0)),
+        source=source or f"amdahl:{alpha:g}")
+
+
+@functools.lru_cache(maxsize=512)
+def derive_curve(arch_id: str, n_max: int) -> "GoodputCurve":
+    """Derive a model's goodput curve from the repo's own roofline analysis:
+    one data-parallel training step is bounded by
+    max(compute/N, HBM traffic, gradient all-reduce) -- see
+    `launch.roofline.data_parallel_step_time` -- and goodput(N) is the
+    step-time ratio step(1)/step(N). The derivation shape uses a modest
+    global batch (strong scaling: the per-chip share shrinks with N), so
+    the constant all-reduce/HBM terms surface within scheduler-scale N."""
+    from ..configs.registry import get_config
+    from ..launch.roofline import data_parallel_step_time
+    from ..models.config import InputShape
+    cfg = get_config(arch_id)
+    shape = InputShape("goodput_derive", 2048, 32, "train")
+    s1 = data_parallel_step_time(cfg, shape, 1)
+    return GoodputCurve.from_samples(
+        [s1 / data_parallel_step_time(cfg, shape, n)
+         for n in range(1, max(int(n_max), 1) + 1)],
+        source=f"roofline:{arch_id}")
+
+
+@functools.lru_cache(maxsize=4096)
+def curve_for_model(model: str, n_max: int) -> "GoodputCurve":
+    """Curve for an `ApplicationSpec.model` string: roofline-derived when it
+    names a registry architecture, else the analytic Amdahl fallback with
+    a deterministic per-model overhead (hash-seeded so replayed traces
+    get diverse but reproducible curves)."""
+    from ..configs.registry import ARCH_IDS
+    if model in ARCH_IDS:
+        return derive_curve(model, n_max)
+    h = zlib.crc32(model.encode("utf-8")) if model else 0
+    alpha = 0.02 + 0.08 * ((h % 7) / 6.0)        # 0.02 .. 0.10
+    return amdahl_curve(n_max, alpha)
+
+
+# ---------------------------------------------------------------------------
+# Work anchoring: recorded duration -> serial_work
+# ---------------------------------------------------------------------------
+
+def work_anchor(n_min: int, n_max: int,
+                requested: Optional[int] = None) -> int:
+    """The container count a job's recorded duration is anchored at:
+    `serial_work = duration * goodput(anchor)` (`anchored_serial_work`),
+    i.e. a scheduler granting exactly the anchor count finishes the job
+    in its recorded duration.
+
+    Real traces record the duration AT the size the job actually ran, so
+    replay passes the parsed request (`requested`, its n_max). Synthetic
+    generators have no recorded size and anchor at the [n_min, n_max]
+    midpoint (the seed's convention, kept bit-exact). Before this helper
+    replay.py anchored at n_max while workload.py anchored at the
+    midpoint with no shared definition -- harmless under linear scaling
+    only by luck of each path's internal consistency; under goodput
+    curves the anchor decides how much work a recorded duration implies,
+    so both paths route through here."""
+    if requested is not None:
+        return max(1, int(requested))
+    return max(1, (int(n_min) + int(n_max)) // 2)
+
+
+def anchored_serial_work(duration_s: float, anchor_n: int,
+                         curve: Optional[GoodputCurve] = None) -> float:
+    """Container-seconds implied by a duration recorded at `anchor_n`
+    containers: `duration * goodput(anchor)`. With no curve this is the
+    seed's exact arithmetic `duration * anchor` (bit-exact float path)."""
+    if curve is None:
+        return duration_s * anchor_n
+    return duration_s * curve.at(anchor_n)

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .adjustment import AdjustmentProtocol, CheckpointHandle, RecordingProtocol
+from .goodput import GoodputCurve
 from .metrics import (cluster_fairness_loss, resource_adjustment_overhead,
                       resource_utilization)
 from .optimizer import OptimizerConfig, _shares_vec, make_optimizer
@@ -71,6 +72,13 @@ class DormMaster:
         self.protocol: AdjustmentProtocol = protocol or RecordingProtocol()
         self.specs: Dict[str, ApplicationSpec] = {}      # running + pending
         self.pending: List[str] = []                     # admitted, not placed
+        # Admitted apps carrying a goodput curve (see core.goodput). The
+        # cluster-goodput metric in `_result` turns on at the FIRST curved
+        # admission and stays on (a sample timeline mixing real sums with
+        # gated 0.0s would corrupt time averages); uncurved (seed)
+        # workloads never flip it and pay nothing per event.
+        self._curved: Dict[str, GoodputCurve] = {}
+        self._goodput_on = False
         self.prev_alloc: Optional[Allocation] = None
         self.checkpoints: Dict[str, CheckpointHandle] = {}
         # Per-phase wall time (solve vs enforce vs metrics; the optimizer
@@ -415,6 +423,7 @@ class DormMaster:
                 self.protocol.kill(self.specs[app_id])
             self._teardown(app_id)
             self.specs.pop(app_id, None)
+            self._curved.pop(app_id, None)
             if self.state is not None and app_id in self.state:
                 self.state.forget(app_id)
             if app_id in self.pending:
@@ -465,6 +474,8 @@ class DormMaster:
         for spec in arrivals:
             self.specs[spec.app_id] = spec
             self.pending.append(spec.app_id)
+            if spec.goodput is not None:
+                self._curved[spec.app_id] = spec.goodput
         self.phase_s["absorb"] += _time.perf_counter() - t0
         # -- ONE solve for the whole flood.
         res = self.reallocate(
@@ -514,6 +525,8 @@ class DormMaster:
         for spec in specs:
             self.specs[spec.app_id] = spec
             self.pending.append(spec.app_id)
+            if spec.goodput is not None:
+                self._curved[spec.app_id] = spec.goodput
         return self.reallocate()
 
     def complete(self, app_id: str) -> ReallocationResult:
@@ -524,6 +537,7 @@ class DormMaster:
             self.protocol.kill(self.specs[app_id])
         self._teardown(app_id)
         self.specs.pop(app_id, None)
+        self._curved.pop(app_id, None)
         if self.state is not None and app_id in self.state:
             self.state.forget(app_id)
         if app_id in self.pending:
@@ -823,6 +837,20 @@ class DormMaster:
             loss = cluster_fairness_loss(sub, apps, self.cluster,
                                          theoretical=shares,
                                          d=d, totals=totals)
+        # Instantaneous cluster goodput Σ gp_i(N_i) in container-equivalents
+        # (gp_i(N) = N for uncurved apps). Only computed when some admitted
+        # app carries a curve; every other workload keeps the 0.0 default.
+        goodput = 0.0
+        if self._curved:
+            self._goodput_on = True
+        if self._goodput_on:
+            cnts = totals if totals is not None else sub.x.sum(axis=1)
+            goodput = float(cnts.sum())
+            for i, a in enumerate(apps):
+                curve = self._curved.get(a.app_id)
+                if curve is not None:
+                    n_i = int(cnts[i])
+                    goodput += curve.at(n_i) - float(n_i)
         result = ReallocationResult(
             allocation=sub,
             adjusted_app_ids=adjusted,
@@ -838,6 +866,7 @@ class DormMaster:
             # Certified gap of the solve (colgen LP bound / monolithic MILP
             # dual bound); None when the path proves nothing.
             optimality_gap=getattr(self.optimizer, "last_gap", None),
+            goodput=goodput,
         )
         self.phase_s["metrics"] += _time.perf_counter() - t0
         return result

@@ -145,6 +145,20 @@ class OptimizerConfig:
     # changes (REPRO_BACKEND=jax).
     backend: str = dataclasses.field(
         default_factory=lambda: os.environ.get("REPRO_BACKEND", "numpy"))
+    # Goodput-aware allocation (speedup curves, see core.goodput). True:
+    # the greedy solver targets each curved app at its goodput KNEE
+    # instead of n_max (containers past the knee buy < goodput_knee of a
+    # container's progress -- better spent on apps still on the steep
+    # part), and the column-generation exact route weights every column
+    # by its goodput w_i * gp_i(N) instead of the count w_i * N. Apps
+    # without a curve -- every seed workload -- are untouched on both
+    # paths, so existing solves stay bit-identical; the monolithic MILP
+    # and rolling-horizon paths keep the count-linear Eq-10 objective
+    # either way (P2's linearization needs s_i = g_i * N_i).
+    goodput_aware: bool = True
+    # Knee definition: the marginal-goodput fraction below which an extra
+    # container is no longer targeted (GoodputCurve.knee's `frac`).
+    goodput_knee: float = 0.5
 
 
 def fairness_budget(cfg: OptimizerConfig, m: int) -> float:
@@ -177,6 +191,27 @@ def _util_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     with np.errstate(divide="ignore", invalid="ignore"):
         ratios = np.where(cap > 0, d / cap, 0.0)
     return ratios.sum(axis=1)
+
+
+def _knee_caps(apps: Sequence[ApplicationSpec], nmin_v: np.ndarray,
+               nmax_v: np.ndarray, frac: float) -> Optional[np.ndarray]:
+    """Effective n_max under goodput-aware allocation: each app carrying a
+    non-linear speedup curve is capped at max(n_min, its goodput knee).
+    Returns the capped copy, or None when no cap bites (no curved apps --
+    the bit-exactness guarantee: the caller then keeps its own nmax_v
+    object and every downstream array is unchanged)."""
+    capped = None
+    for i, a in enumerate(apps):
+        curve = a.goodput
+        if curve is None or curve.is_linear:
+            continue
+        eff = max(int(nmin_v[i]),
+                  min(int(nmax_v[i]), curve.knee(int(nmax_v[i]), frac)))
+        if eff < int(nmax_v[i]):
+            if capped is None:
+                capped = nmax_v.copy()
+            capped[i] = eff
+    return capped
 
 
 def _shares_vec(counts: np.ndarray, d: np.ndarray, total: np.ndarray,
@@ -746,6 +781,34 @@ class MilpOptimizer:
         nmin_v = np.fromiter((a.n_min for a in apps), np.int64, n)
         nmax_v = np.fromiter((a.n_max for a in apps), np.int64, n)
 
+        # Goodput weighting (cfg.goodput_aware): a column is one app at one
+        # count, so attaching its measured goodput is free -- the objective
+        # weight becomes w_i * gp_i(N) instead of w_i * N. `gp_tab[i, N]`
+        # is the speedup at N (the count itself for uncurved apps), padded
+        # to the widest n_max. With no curved apps every code path below
+        # takes the original count-linear branch unchanged.
+        curves = [a.goodput for a in apps]
+        use_gp = self.cfg.goodput_aware and any(
+            c is not None and not c.is_linear for c in curves)
+        if use_gp:
+            nmx = int(nmax_v.max())
+            gp_tab = np.tile(np.arange(nmx + 1, dtype=np.float64), (n, 1))
+            for i, c in enumerate(curves):
+                if c is not None and not c.is_linear:
+                    gp_tab[i] = c.eval(np.arange(nmx + 1))
+
+        def col_gp(ca: np.ndarray, cn: np.ndarray) -> np.ndarray:
+            """Per-column speedup value: gp_i(N) (== N when not use_gp)."""
+            if use_gp:
+                return gp_tab[ca, cn]
+            return cn.astype(np.float64)
+
+        def ach_obj(alloc: Allocation) -> float:
+            """Achieved objective of an allocation under the active
+            weighting (count-linear, or goodput-weighted)."""
+            cnts = alloc.x.sum(axis=1)
+            return float(util_w @ col_gp(np.arange(n), cnts))
+
         prev_map = prev.as_dict() if prev is not None else {}
         prev_n = np.full(n, -1, np.int64)             # -1 = not in prev
         for i, a in enumerate(app_ids):
@@ -842,7 +905,7 @@ class MilpOptimizer:
         for _ in range(max(1, cfg.colgen_max_iters)):
             iters += 1
             P = col_n.size
-            c_lp = -(util_w[col_app] * col_n)
+            c_lp = -(util_w[col_app] * col_gp(col_app, col_n))
             A_ub = _col_rows(col_app, col_n)
             A_eq = _sp.coo_array(
                 (np.ones(P), (col_app, np.arange(P))), shape=(n, P)).tocsr()
@@ -860,7 +923,8 @@ class MilpOptimizer:
                 if guide is None:
                     return None
                 return self._colgen_finish(apps, cluster, guide, None,
-                                           util_w, d)
+                                           util_w, d,
+                                           objective=ach_obj(guide))
             z_rmp = float(res.fun)
             y_ub = np.asarray(res.ineqlin.marginals, np.float64)
             sigma = np.asarray(res.eqlin.marginals, np.float64)
@@ -869,24 +933,54 @@ class MilpOptimizer:
 
             # -- pricing (timed: the phase breakdown's colgen_pricing).
             t0 = _time.perf_counter()
-            a_lin = -util_w - (cap_mask * d[:, cap_k].T
-                               * pi_cap[:, None]).sum(axis=0)  # slope in N
-            with np.errstate(divide="ignore", invalid="ignore"):
-                bp = np.where(g > 0, s_hat_vec / np.maximum(g, 1e-300),
-                              nmin_v.astype(np.float64))
-            # pre-clip keeps floor/ceil inside int64 range for tiny g
-            bp = np.clip(bp, 0.0, nmax_v.astype(np.float64) + 1.0)
-            cand = np.stack([
-                nmin_v, nmax_v,
-                np.floor(bp).astype(np.int64), np.ceil(bp).astype(np.int64),
-                np.where(prev_n >= 0, prev_n, nmin_v)], axis=1)
-            cand = np.clip(cand, nmin_v[:, None], nmax_v[:, None])
-            loss_c = np.abs(g[:, None] * cand - s_hat_vec[:, None])
-            chg_c = (prev_n[:, None] >= 0) & (cand != prev_n[:, None])
-            rc = (a_lin[:, None] * cand - pi_f * loss_c
-                  - pi_r * chg_c - sigma[:, None])
-            best = np.argmin(rc, axis=1)
-            min_rc = rc[np.arange(n), best]
+            if use_gp:
+                # Goodput objective: -w_i gp_i(N) is convex piecewise
+                # linear with a breakpoint at EVERY integer, so the
+                # 5-candidate closed form below is no longer the exact
+                # minimizer -- price over the full level range instead
+                # (same enumeration the pool enrichment uses; exactness is
+                # what keeps the Lagrangian bound rigorous).
+                cap_slope = -(cap_mask * d[:, cap_k].T
+                              * pi_cap[:, None]).sum(axis=0)
+                lv = nmax_v - nmin_v + 1
+                starts = np.cumsum(lv) - lv
+                l_app = np.repeat(np.arange(n), lv)
+                l_n = nmin_v[l_app] \
+                    + (np.arange(int(lv.sum())) - starts[l_app])
+                rc_l = (-util_w[l_app] * gp_tab[l_app, l_n]
+                        + cap_slope[l_app] * l_n
+                        - pi_f * np.abs(g[l_app] * l_n - s_hat_vec[l_app])
+                        - pi_r * ((prev_n[l_app] >= 0)
+                                  & (l_n != prev_n[l_app]))
+                        - sigma[l_app])
+                best_n = np.empty(n, np.int64)
+                min_rc = np.empty(n)
+                for i in range(n):
+                    sl = rc_l[starts[i]: starts[i] + lv[i]]
+                    k = int(np.argmin(sl))
+                    min_rc[i] = sl[k]
+                    best_n[i] = int(nmin_v[i]) + k
+            else:
+                a_lin = -util_w - (cap_mask * d[:, cap_k].T
+                                   * pi_cap[:, None]).sum(axis=0)  # slope in N
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    bp = np.where(g > 0, s_hat_vec / np.maximum(g, 1e-300),
+                                  nmin_v.astype(np.float64))
+                # pre-clip keeps floor/ceil inside int64 range for tiny g
+                bp = np.clip(bp, 0.0, nmax_v.astype(np.float64) + 1.0)
+                cand = np.stack([
+                    nmin_v, nmax_v,
+                    np.floor(bp).astype(np.int64),
+                    np.ceil(bp).astype(np.int64),
+                    np.where(prev_n >= 0, prev_n, nmin_v)], axis=1)
+                cand = np.clip(cand, nmin_v[:, None], nmax_v[:, None])
+                loss_c = np.abs(g[:, None] * cand - s_hat_vec[:, None])
+                chg_c = (prev_n[:, None] >= 0) & (cand != prev_n[:, None])
+                rc = (a_lin[:, None] * cand - pi_f * loss_c
+                      - pi_r * chg_c - sigma[:, None])
+                best = np.argmin(rc, axis=1)
+                min_rc = rc[np.arange(n), best]
+                best_n = cand[np.arange(n), best]
             # Lagrangian bound: z_LP >= z_RMP + sum_i min(0, min_rc_i)
             # (each convexity block contributes exactly one unit of weight;
             # the candidate set provably contains the true minimizer).
@@ -899,8 +993,8 @@ class MilpOptimizer:
                 # Converged: `bound` (with its tiny within-tolerance
                 # Lagrangian correction) is already the rigorous value.
                 break
-            new = [(int(i), int(cand[i, best[i]])) for i in improving
-                   if (int(i), int(cand[i, best[i]])) not in seen]
+            new = [(int(i), int(best_n[i])) for i in improving
+                   if (int(i), int(best_n[i])) not in seen]
             if not new or col_n.size + len(new) > cfg.colgen_pool_max:
                 break
             seen.update(new)
@@ -947,7 +1041,7 @@ class MilpOptimizer:
         # A selection whose counts provably cannot pack per-slave is cut
         # off (no-good cut on its exact column set) and re-selected.
         P = col_n.size
-        c_ip = -(util_w[col_app] * col_n)
+        c_ip = -(util_w[col_app] * col_gp(col_app, col_n))
         A_ub = _col_rows(col_app, col_n)
         A_eq = _sp.coo_array(
             (np.ones(P), (col_app, np.arange(P))), shape=(n, P)).tocsc()
@@ -978,7 +1072,7 @@ class MilpOptimizer:
                 apps, app_ids, d, cap, counts, prev_map, prev_n,
                 nmin_v, nmax_v, g, s_hat_vec, budget_l, util_w, guide)
             if alloc is not None:
-                obj = float(util_w @ alloc.x.sum(axis=1))
+                obj = ach_obj(alloc)
                 if best is None or obj > best[0] + 1e-12:
                     best = (obj, alloc)
             if realized or choice is None:
@@ -991,7 +1085,7 @@ class MilpOptimizer:
             # previous allocations (paper semantics).
             return None
         return self._colgen_finish(apps, cluster, best[1], util_bound,
-                                   util_w, d)
+                                   util_w, d, objective=best[0])
 
     def _colgen_place(self, apps, app_ids, d, cap, counts, prev_map, prev_n,
                       nmin_v, nmax_v, g, s_hat_vec, budget_l, util_w,
@@ -1231,10 +1325,15 @@ class MilpOptimizer:
 
     def _colgen_finish(self, apps, cluster, alloc: Allocation,
                        util_bound: Optional[float], util_w: np.ndarray,
-                       d: np.ndarray) -> Allocation:
-        """Validate + record the certified-gap report of a colgen solve."""
+                       d: np.ndarray,
+                       objective: Optional[float] = None) -> Allocation:
+        """Validate + record the certified-gap report of a colgen solve.
+        `objective`: the achieved objective under the solve's weighting
+        (goodput-weighted colgen passes it; default = count-linear)."""
         validate_allocation(alloc, apps, cluster, d=d)
-        self._record_gap(util_bound, float(util_w @ alloc.x.sum(axis=1)))
+        if objective is None:
+            objective = float(util_w @ alloc.x.sum(axis=1))
+        self._record_gap(util_bound, objective)
         return alloc
 
 
@@ -1413,6 +1512,27 @@ class GreedyOptimizer:
         total_cap = cluster.total_capacity()
         budget_l = fairness_budget(self.cfg, m)
 
+        # Goodput knee-capping (cfg.goodput_aware): apps with a non-linear
+        # speedup curve are targeted at their knee instead of n_max --
+        # containers past it buy < goodput_knee of a container's progress
+        # and are better spent on apps still on the steep part. The cap is
+        # an effective-BOUNDS shrink applied before the DRF refill, so the
+        # shares, the utilization push and the placement all see the same
+        # (capped) problem and Eq-15's budget stays self-consistent. With
+        # no curved apps (_knee_caps -> None; every seed workload) nothing
+        # changes and the solve is bit-identical. Skipped when the caller
+        # supplies `_targets`: MILP warm starts own the problem definition
+        # (the exact paths keep P2's count-linear objective).
+        apps_fill: Sequence[ApplicationSpec] = apps
+        if self.cfg.goodput_aware and _targets is None:
+            kc = _knee_caps(apps, nmin_v, nmax_v, self.cfg.goodput_knee)
+            if kc is not None:
+                nmax_v = kc
+                apps_fill = [
+                    a if a.n_max <= int(kc[i])
+                    else a.with_bounds(n_max=int(kc[i]))
+                    for i, a in enumerate(apps)]
+
         # -- DRF refill (timed: the phase breakdown's drf_refill bucket).
         t_refill = _time.perf_counter()
         fast = False
@@ -1458,7 +1578,7 @@ class GreedyOptimizer:
                 # Incremental DRF refill: O(n*m) saturating fast path when
                 # it provably matches the full filling, full otherwise.
                 drf_counts, shares, fast = self.drf.targets(
-                    apps, cluster, reference=not soa)
+                    apps_fill, cluster, reference=not soa)
                 self.last_shares = shares
                 s_hat_vec = np.fromiter((shares[a] for a in app_ids),
                                         np.float64, n)
@@ -1467,7 +1587,7 @@ class GreedyOptimizer:
         else:
             # Full re-solve semantics (the seed's per-event behaviour):
             # progressive filling from scratch on every event.
-            drf_counts, s_hat_vec = _drf_targets(apps, cluster,
+            drf_counts, s_hat_vec = _drf_targets(apps_fill, cluster,
                                                  reference=not soa, d=d)
             self.last_shares = dict(zip(app_ids, map(float, s_hat_vec)))
             target = np.fromiter((drf_counts[a] for a in app_ids),

@@ -36,10 +36,12 @@ Supported formats (`fmt=`):
 
 Elasticity: real traces record one REQUESTED size, not [n_min, n_max]
 bounds. Replay maps the request to n_max and `n_min = max(1,
-ceil(n_max * min_fraction))`, and anchors `serial_work = duration_s *
-n_max` -- a scheduler granting the full request finishes the job in its
-recorded duration; a starved job drags (same anchoring idea as the
-synthetic generator).
+ceil(n_max * min_fraction))`, and anchors the recorded duration AT the
+requested size via `goodput.work_anchor(..., requested=n_max)` --
+a scheduler granting the full request finishes the job in its recorded
+duration; a starved job drags (the synthetic generator shares the same
+`work_anchor` helper but anchors at the bounds midpoint, having no
+recorded size).
 """
 from __future__ import annotations
 
@@ -50,6 +52,7 @@ import math
 import os
 from typing import Dict, Iterable, List, Optional, Sequence, Union
 
+from .goodput import anchored_serial_work, curve_for_model, work_anchor
 from .types import ApplicationSpec, ResourceVector
 from .workload import WorkloadApp
 
@@ -72,6 +75,11 @@ class ReplayConfig:
     ram_unit_gb: float = 64.0         # alibaba: GB per plan_mem unit
     max_apps: Optional[int] = None    # truncate long traces
     weight: int = 1                   # default DRF weight
+    # Attach analytic goodput curves (`goodput.curve_for_model` -- the
+    # Amdahl fallback, hash-seeded per app id for diversity; real traces
+    # name no registry architecture). Off by default: replayed specs stay
+    # linear and every pinned replay timeline is unchanged.
+    goodput_curves: bool = False
 
 
 Source = Union[str, os.PathLike, Iterable[str]]
@@ -152,7 +160,13 @@ def _bounds(n_request: int, cfg: ReplayConfig) -> tuple:
 
 def _mk_app(app_id: str, executor: str, demand: ResourceVector, weight: int,
             n_min: int, n_max: int, duration_s: float, submit_time: float,
-            ) -> WorkloadApp:
+            cfg: ReplayConfig = ReplayConfig()) -> WorkloadApp:
+    # A scheduler granting the requested n_max finishes in the trace's
+    # recorded duration: the anchor is the request (goodput.work_anchor,
+    # shared with the synthetic generator's midpoint anchoring).
+    anchor = work_anchor(n_min, n_max, requested=n_max)
+    curve = (curve_for_model(f"replay:{app_id}", n_max)
+             if cfg.goodput_curves else None)
     spec = ApplicationSpec(
         app_id=app_id,
         executor=executor,
@@ -162,10 +176,9 @@ def _mk_app(app_id: str, executor: str, demand: ResourceVector, weight: int,
         n_min=n_min,
         cmd=("start.sh", "resume.sh"),
         model="replay",
-        # A scheduler granting the requested n_max finishes in the trace's
-        # recorded duration (same anchoring as the synthetic generator).
-        serial_work=duration_s * n_max,
+        serial_work=anchored_serial_work(duration_s, anchor, curve),
         submit_time=submit_time,
+        goodput=curve,
     )
     return WorkloadApp(spec=spec, class_index=REPLAY_CLASS_INDEX,
                        base_duration_s=duration_s)
@@ -202,7 +215,7 @@ def _parse_philly(rows: List[List[str]], cfg: ReplayConfig,
             executor="philly",
             demand=demand, weight=cfg.weight,
             n_min=n_min, n_max=n_max, duration_s=duration,
-            submit_time=_f(row, cols["submitted_time"])))
+            submit_time=_f(row, cols["submitted_time"]), cfg=cfg))
     return out
 
 
@@ -239,7 +252,7 @@ def _parse_alibaba(rows: List[List[str]], cfg: ReplayConfig,
             app_id=app_id, executor="alibaba-batch",
             demand=demand, weight=cfg.weight,
             n_min=n_min, n_max=n_max, duration_s=duration,
-            submit_time=start))
+            submit_time=start, cfg=cfg))
     return out
 
 
@@ -266,7 +279,7 @@ def _parse_generic(rows: List[List[str]], cfg: ReplayConfig,
                 weight=max(1, int(_f(row, cols["weight"], cfg.weight))),
                 n_min=min(n_min, n_max), n_max=n_max,
                 duration_s=duration,
-                submit_time=_f(row, cols["submit_time"])))
+                submit_time=_f(row, cols["submit_time"]), cfg=cfg))
         except (ValueError, IndexError) as err:
             # A row that is still invalid after clamping (negative demand,
             # unparsable cell, truncated row) names itself instead of

@@ -253,6 +253,11 @@ class ReallocationResult:
     forced_adjusted_app_ids: Tuple[str, ...] = ()
     displaced_app_ids: Tuple[str, ...] = ()
     parked_app_ids: Tuple[str, ...] = ()
+    # Instantaneous cluster goodput sum_i goodput_i(N_i) of this
+    # allocation, in container-equivalents (equals the total granted
+    # container count when every app scales linearly). Policies that do
+    # not track speedup curves leave the 0.0 default.
+    goodput: float = 0.0
 
 
 @runtime_checkable
@@ -442,7 +447,9 @@ class AppRuntime:
     def rate(self, t: float) -> float:
         if t < self.paused_until - _EPS:
             return 0.0
-        return float(self.containers)
+        # speedup() is float(containers) for the default linear model and
+        # goodput(containers) when the spec carries a curve.
+        return self.app.spec.speedup(self.containers)
 
 
 @dataclasses.dataclass
@@ -456,6 +463,10 @@ class MetricSample:
     # Forced share of this event's Eq-4 churn (chaos recovery; 0 on
     # healthy-cluster passes).
     forced_adjustments: int = 0
+    # Instantaneous cluster goodput sum_i goodput_i(N_i) in container-
+    # equivalents (== total granted containers under the linear model).
+    # 0.0 for policies that do not report it.
+    goodput: float = 0.0
 
 
 @dataclasses.dataclass
@@ -506,6 +517,17 @@ class SimResult:
         ns = len(self.samples)
         return self._time_averaged(
             np.fromiter((s.fairness_loss for s in self.samples),
+                        np.float64, ns), t_max)
+
+    def time_averaged_goodput(self, t_max: Optional[float] = None) -> float:
+        """Time-weighted mean of instantaneous cluster goodput
+        sum_i goodput_i(N_i) over [0, t_max] -- the tentpole metric
+        benchmarks/bench_goodput.py compares between count-linear and
+        goodput-aware allocation. 0.0 when the driving policy does not
+        report goodput (see `ReallocationResult.goodput`)."""
+        ns = len(self.samples)
+        return self._time_averaged(
+            np.fromiter((s.goodput for s in self.samples),
                         np.float64, ns), t_max)
 
     def max_fairness_loss(self) -> float:
@@ -665,6 +687,11 @@ class ClusterRuntime:
         svc = np.zeros(n_total, dtype=bool)      # service-lifetime apps
         slot_ids: List[Optional[str]] = [None] * n_total
         slot_of: Dict[str, int] = {}
+        # Batch slots whose spec carries a goodput curve: rate is
+        # goodput(N) * rate_mult instead of N * rate_mult. Empty for every
+        # seed workload, so the all-linear rates() array is untouched
+        # (bit-exact timelines).
+        curved: Dict[int, Any] = {}
         next_slot = 0
         rate_mult = self.rate_multiplier
         use_batch = self.batch_window_s > 0
@@ -672,12 +699,15 @@ class ClusterRuntime:
 
         def rates() -> np.ndarray:
             """Per-slot progress rate. Batch jobs burn container-seconds
-            (linear data-parallel scaling); SERVICE apps burn wall-clock
-            seconds of being up -- rate 1 while any container is placed,
-            regardless of count (extra containers are serving capacity,
-            not speedup)."""
-            return np.where(svc, (cont > 0).astype(np.float64),
-                            cont * rate_mult)
+            (linear data-parallel scaling, or goodput(N) for curved apps);
+            SERVICE apps burn wall-clock seconds of being up -- rate 1
+            while any container is placed, regardless of count (extra
+            containers are serving capacity, not speedup)."""
+            r = np.where(svc, (cont > 0).astype(np.float64),
+                         cont * rate_mult)
+            for s, curve in curved.items():
+                r[s] = curve.at(int(cont[s])) * rate_mult
+            return r
 
         def advance(t0: float, t1: float) -> None:
             """Integrate progress over [t0, t1] (rates are piecewise-
@@ -745,6 +775,8 @@ class ClusterRuntime:
             slot_ids[s] = w.spec.app_id
             slot_of[w.spec.app_id] = s
             svc[s] = is_svc
+            if not is_svc and w.spec.goodput is not None:
+                curved[s] = w.spec.goodput
             rem[s] = budget
             cont[s] = 0
             paused[s] = 0.0
@@ -823,6 +855,7 @@ class ClusterRuntime:
                             active[fin_slot] = False
                             cont[fin_slot] = 0
                             del slot_of[app_id]
+                            curved.pop(fin_slot, None)
                             batch_c.append(app_id)
                             pubs.append(Completion(t, app_id))
                         elif t_ext <= t_arr:
@@ -918,6 +951,7 @@ class ClusterRuntime:
                 active[fin_slot] = False
                 cont[fin_slot] = 0
                 del slot_of[app_id]
+                curved.pop(fin_slot, None)
                 finish(Completion(t, app_id),
                        self.policy.on_completion(app_id))
             elif t_ext <= t_arr:
@@ -1015,7 +1049,8 @@ class ClusterRuntime:
             adjustment_overhead=res.adjustment_overhead,
             running=len(res.allocation.app_ids),
             pending=len(res.pending_app_ids),
-            forced_adjustments=len(res.forced_adjusted_app_ids)))
+            forced_adjustments=len(res.forced_adjusted_app_ids),
+            goodput=res.goodput))
         if self.logger is not None:
             self.logger.log("sample", t=t, utilization=res.utilization,
                             fairness_loss=res.fairness_loss,

@@ -86,7 +86,8 @@ class _SimulatorBase:
             fairness_loss=res.fairness_loss,
             adjustment_overhead=res.adjustment_overhead,
             running=len(res.allocation.app_ids),
-            pending=len(res.pending_app_ids)))
+            pending=len(res.pending_app_ids),
+            goodput=res.goodput))
         if self.logger is not None:
             self.logger.log("sample", t=t, utilization=res.utilization,
                             fairness_loss=res.fairness_loss,
@@ -208,15 +209,19 @@ class ReferenceClusterSimulator(_SimulatorBase):
                 lo = min(rt.paused_until, t1)
             dt = t1 - lo
             if dt > 0:
+                # speedup() is the container count itself under the
+                # default linear model (seed arithmetic unchanged) and
+                # goodput(N) for curved apps.
+                spd = rt.app.spec.speedup(rt.containers)
                 rt.remaining_work = max(
                     0.0, rt.remaining_work
-                    - dt * rt.containers * self.rate_multiplier)
+                    - dt * spd * self.rate_multiplier)
 
     def _next_completion(self, active: Dict[str, AppRuntime], t: float,
                          ) -> Tuple[float, Optional[str]]:
         best_t, best_a = np.inf, None
         for a, rt in active.items():
-            rate = rt.containers * self.rate_multiplier
+            rate = rt.app.spec.speedup(rt.containers) * self.rate_multiplier
             if rate <= 0:
                 continue
             start = max(t, rt.paused_until)
@@ -243,7 +248,39 @@ class ReferenceClusterSimulator(_SimulatorBase):
         self.total_adjustments += len(res.adjusted_app_ids)
 
 
-def speedup_ratios(dorm: SimResult, baseline: SimResult) -> Dict[str, float]:
-    """Fig 9(a): per-app duration(baseline) / duration(dorm)."""
+def speedup_ratios(dorm: SimResult, baseline: SimResult,
+                   skipped: Optional[Dict[str, str]] = None,
+                   ) -> Dict[str, float]:
+    """Fig 9(a): per-app duration(baseline) / duration(dorm).
+
+    Only apps that completed in BOTH runs are comparable; previously the
+    others (and any zero-duration dorm app) were dropped SILENTLY, so a
+    run where Dorm finished half the jobs could report a great "speedup"
+    over the half it happened to share with the baseline. Now:
+
+    * pass `skipped` (a dict) to receive every non-comparable app with
+      the reason -- "dorm-only" (finished under Dorm but not the
+      baseline) or "baseline-only";
+    * a non-positive duration for a dorm-completed app raises instead of
+      being filtered: completions always carry finished_at > submitted_at
+      in a healthy run, so a zero/negative duration means broken clock
+      bookkeeping, not a fast job, and dividing by it would fabricate an
+      infinite speedup.
+    """
     d1, d0 = dorm.durations(), baseline.durations()
-    return {a: d0[a] / d1[a] for a in d1 if a in d0 and d1[a] > 0}
+    out: Dict[str, float] = {}
+    for a, dur in d1.items():
+        if a not in d0:
+            if skipped is not None:
+                skipped[a] = "dorm-only"
+            continue
+        if dur <= 0:
+            raise ValueError(
+                f"non-positive dorm duration for {a!r}: {dur} "
+                f"(finished_at <= submitted_at -- corrupt completion record)")
+        out[a] = d0[a] / dur
+    if skipped is not None:
+        for a in d0:
+            if a not in d1:
+                skipped[a] = "baseline-only"
+    return out

@@ -14,6 +14,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .goodput import GoodputCurve
+
 # Canonical resource-type names for the paper's testbed (m = 3).
 DEFAULT_RESOURCE_TYPES: Tuple[str, ...] = ("cpu", "gpu", "ram")
 
@@ -84,6 +86,18 @@ class ApplicationSpec:
     # container count (extra containers add serving capacity, they do not
     # finish the app sooner). 0 = work-based batch job (the default).
     service_s: float = 0.0
+    # Speedup model: None (default) = exact-linear goodput(N) = N, the
+    # seed's bit-exact work accounting. A `GoodputCurve` makes progress
+    # follow goodput(N) instead (diminishing returns) and lets the
+    # optimizer target the curve's knee -- see `core.goodput`.
+    goodput: Optional[GoodputCurve] = None
+
+    def speedup(self, n: int) -> float:
+        """Progress rate at n containers in container-equivalents: n under
+        the linear model, goodput(n) with a curve attached."""
+        if self.goodput is None:
+            return float(n)
+        return self.goodput.at(n)
 
     def __post_init__(self):
         if self.n_min < 1 or self.n_max < self.n_min:

@@ -26,6 +26,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .goodput import anchored_serial_work, curve_for_model, work_anchor
 from .types import ApplicationSpec, ClusterSpec, ResourceVector, SlaveSpec
 
 # (system, dataset, model, (cpu, gpu, ram_gb), weight, n_max, n_min, count)
@@ -162,6 +163,9 @@ def generate_workload(seed: int = 0,
         t += float(rng.exponential(mean_interarrival_s))
         dur = sample_app_duration_s(rng)
         static_n = BASELINE_STATIC_CONTAINERS[ci]
+        # Fig-1 durations are recorded AT the baseline static size, so the
+        # anchor is that known count (goodput.work_anchor).
+        anchor = work_anchor(n_min, n_max, requested=static_n)
         spec = ApplicationSpec(
             app_id=f"app-{slot:02d}-{model}-{inst}",
             executor=system,
@@ -171,7 +175,7 @@ def generate_workload(seed: int = 0,
             n_min=n_min,
             cmd=("start.sh", "resume.sh"),
             model=model,
-            serial_work=dur * static_n,     # container-seconds
+            serial_work=anchored_serial_work(dur, anchor),
             submit_time=t,
         )
         apps.append(WorkloadApp(spec=spec, class_index=ci,
@@ -253,6 +257,12 @@ class TraceConfig:
     qps_burst_prob: float = 0.3               # per burst-slot draw (2 slots)
     qps_burst_mult: Tuple[float, float] = (1.8, 3.5)
     qps_burst_len_s: Tuple[float, float] = (600.0, 2400.0)
+    # Goodput curves: substitute each train-class job's model with a
+    # configs-registry architecture (round-robin over ARCH_IDS) and attach
+    # its roofline-derived `GoodputCurve` -- the mixed configs-registry
+    # workload benchmarks/bench_goodput.py runs. Off by default: specs
+    # carry no curve and every historical timeline stays bit-exact.
+    goodput_curves: bool = False
 
 
 def heterogeneous_cluster(n_slaves: int = 1000, seed: int = 0,
@@ -368,7 +378,14 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
             mu = 0.5 * (np.log(lo) + np.log(hi))
             sigma = (np.log(hi) - np.log(lo)) / 4.0
             dur = float(np.clip(rng.lognormal(mu, sigma), lo, hi))
-            anchor = max(1, (n_min + n_max) // 2)
+            # Synthetic durations have no recorded size: anchor at the
+            # elasticity midpoint (goodput.work_anchor, the seed convention).
+            anchor = work_anchor(n_min, n_max)
+            curve = None
+            if cfg.goodput_curves and kind == "train":
+                from ..configs.registry import ARCH_IDS
+                model = ARCH_IDS[slot % len(ARCH_IDS)]
+                curve = curve_for_model(model, n_max)
             t_k = t
             if k > 0 and cfg.burst_spread_s > 0:
                 # Spread later burst members over the window; a burst drawn
@@ -386,10 +403,11 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[WorkloadApp]:
                 n_min=n_min,
                 cmd=("start.sh", "resume.sh"),
                 model=model,
-                serial_work=dur * anchor,
+                serial_work=anchored_serial_work(dur, anchor, curve),
                 submit_time=t_k,
                 service_s=(dur if kind == "serve" and cfg.serve_lifetime
                            else 0.0),
+                goodput=curve,
             )
             load = (_serving_load_profile(cfg, slot, anchor, t_k, dur)
                     if kind == "serve" and cfg.qps_traces else None)

@@ -27,6 +27,7 @@ from typing import Any, Dict, Optional, Tuple
 PEAK_FLOPS = 197e12          # bf16 FLOP/s
 HBM_BW = 819e9               # bytes/s
 LINK_BW = 50e9               # bytes/s per ICI link
+HBM_BYTES = 16e9             # per-chip HBM capacity
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -221,6 +222,69 @@ def analytic_hbm_bytes_per_chip(cfg, shape, params_like, *,
     # decode
     return (p_resident + 2 * cache_per_chip
             + tokens_local * (logits_row + L * act_per_tok_layer))
+
+
+def analytic_param_counts(cfg) -> Tuple[float, float, float]:
+    """(total, active, embedding) parameter-count ESTIMATE from the config
+    alone -- no jax, no weights. Used by the goodput-curve derivation
+    (`core.goodput.derive_curve`), where only the curve SHAPE matters;
+    `count_params` over a real shape pytree stays the accounting source.
+    `active` differs from `total` only for MoE (top-k experts per token)."""
+    d, L = cfg.d_model, cfg.num_layers
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    hd = cfg.resolved_head_dim
+    attn = (d * hd * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+            if cfg.num_heads else 0)
+    gate = 3 if cfg.act == "silu" else 2            # SwiGLU vs plain MLP
+    if cfg.num_experts:
+        ffn_total = gate * d * cfg.d_ff * cfg.num_experts
+        ffn_active = gate * d * cfg.d_ff * max(cfg.num_experts_per_tok, 1)
+    else:
+        ffn_total = ffn_active = gate * d * cfg.d_ff
+    ssm = (2 * d * cfg.d_inner + cfg.d_inner * (cfg.ssm_state + 2)
+           if cfg.ssm_state else 0)
+    if cfg.arch_type == "ssm":
+        layer_t = layer_a = ssm
+    elif cfg.arch_type == "hybrid":
+        # Zamba2: one weight-shared attention block invoked every k layers.
+        shared = (attn + ffn_total) / max(cfg.hybrid_attn_every, 1)
+        layer_t = layer_a = ssm + shared
+    else:
+        layer_t = attn + ffn_total
+        layer_a = attn + ffn_active
+    enc = (cfg.encoder_layers * (attn + ffn_total)
+           if cfg.encoder_layers else 0)
+    return (float(emb + L * layer_t + enc),
+            float(emb + L * layer_a + enc), float(emb))
+
+
+def data_parallel_step_time(cfg, shape, n: int) -> float:
+    """Roofline bound on ONE data-parallel training step at `n` chips
+    (strong scaling: the global batch is fixed, each chip works
+    tokens/n). Compute shrinks 1/n; resident-parameter HBM traffic
+    (weights re-read + Adam state every step, replicated under pure data
+    parallelism) and the ring all-reduce of gradients do NOT -- their
+    ratio against the compute term sets where goodput saturates. Same
+    conservative single-link ICI model as `RooflineTerms.collective_s`;
+    step bound = max of the three terms, matching `step_time_bound_s`."""
+    total, active, emb = analytic_param_counts(cfg)
+    wb = 2 if cfg.dtype == "bfloat16" else 4
+    tokens = float(shape.global_batch * shape.seq_len)
+    compute_s = 6.0 * max(active - emb, 1.0) * tokens / (n * PEAK_FLOPS)
+    if cfg.num_experts:
+        f_active = cfg.d_ff * cfg.num_experts_per_tok
+    elif cfg.arch_type == "ssm":
+        f_active = 2 * cfg.d_inner
+    else:
+        f_active = cfg.d_ff
+    act_tok_layer = (4 * cfg.d_model + 4 * f_active) * wb
+    # weights x (3 reads + 1 write) + f32 Adam m,v (16B) + f32 grads (8B)
+    param_traffic = 4.0 * total * wb + 24.0 * total
+    memory_s = (param_traffic
+                + tokens / n * (2.0 * cfg.num_layers * act_tok_layer
+                                + 8.0 * cfg.vocab_size)) / HBM_BW
+    collective_s = 2.0 * (n - 1) / n * total * wb / LINK_BW
+    return max(compute_s, memory_s, collective_s)
 
 
 def model_flops(cfg, params_like, tokens: int, decode: bool = False,

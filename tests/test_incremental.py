@@ -150,7 +150,10 @@ def test_incremental_bit_exact_property():
     """Property: for random generator traces on random cluster sizes, the
     incremental and full re-solve masters produce identical allocation
     streams (the headline guarantee of the incremental path)."""
-    pytest.importorskip("hypothesis")
+    pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis is not in the baked image (no pip install "
+               "allowed); this property test runs wherever it is available")
     from hypothesis import given, settings, strategies as st
 
     @given(st.integers(0, 10 ** 6), st.integers(12, 80),

@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis is not in the baked image (no pip install allowed); "
+           "these property tests run wherever it is available")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Allocation, ApplicationSpec, ClusterSpec,
