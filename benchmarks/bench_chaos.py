@@ -1,9 +1,10 @@
-"""Fault-injection benchmark: DormMaster vs Static vs DRF under the SAME
-seeded failure replay (PR-8 robustness panel).
+"""Fault-injection benchmark: DormMaster vs Static vs Tetris vs DRF under
+the SAME seeded failure replay (PR-8 robustness panel).
 
 One `chaos.ChaosConfig` schedule -- correlated rack crashes, drains and
 stragglers drawn from a seeded Poisson process -- is replayed against all
-three cluster managers over the same trace on the same cluster. A
+four cluster managers (Tetris is the alignment-score packer of Grandl et
+al. with non-strict FCFS admission, static partitions like Static). A
 `chaos.ChaosMonitor` on each run's bus computes the recovery panel:
 
   * `recovery_median_s` -- failure to every-displaced-app-running-again
@@ -41,8 +42,8 @@ import time
 from repro.core import (ChaosConfig, ChaosMonitor, ClusterSimulator,
                         DormMaster, DRFScheduler, OptimizerConfig,
                         Reallocated, RecordingProtocol, StaticScheduler,
-                        TraceConfig, chaos_config_hash, chaos_schedule,
-                        container_churn, generate_trace,
+                        TetrisScheduler, TraceConfig, chaos_config_hash,
+                        chaos_schedule, container_churn, generate_trace,
                         heterogeneous_cluster)
 
 from .common import emit
@@ -115,6 +116,7 @@ def run(n_slaves: int = 1000, n_apps: int = 500, seed: int = 0,
     runs = {}
     for name, sched in (("dorm", dorm()),
                         ("static", StaticScheduler(cluster, static)),
+                        ("tetris", TetrisScheduler(cluster, static)),
                         ("drf", DRFScheduler(cluster))):
         runs[name], _ = _run_once(name, sched, cluster, wl, chaos,
                                   horizon_s)

@@ -13,8 +13,9 @@ import sys
 import time
 
 from . import (bench_autoscale, bench_chaos, bench_goodput, bench_kernels,
-               bench_replay, bench_scale, fig1_durations, fig6_utilization,
-               fig7_fairness, fig8_adjustment, fig9a_speedup, fig9b_overhead)
+               bench_replay, bench_scale, bench_shard, fig1_durations,
+               fig6_utilization, fig7_fairness, fig8_adjustment,
+               fig9a_speedup, fig9b_overhead)
 
 MODULES = {
     "fig1": fig1_durations,
@@ -29,6 +30,7 @@ MODULES = {
     "goodput": bench_goodput,
     "replay": bench_replay,
     "chaos": bench_chaos,
+    "shard": bench_shard,
 }
 
 

@@ -5,9 +5,9 @@ from .adjustment import (AdjustmentEvent, AdjustmentProtocol, CheckpointHandle,
 from .autoscale import (AutoscaleConfig, AutoscalePolicy, LoadSignal,
                         ReplayLoadSignal, SLOMonitor, signals_from_workload)
 from .backend import (AutoBackend, Backend, JaxBackend, NumpyBackend,
-                      backend_available, get_backend)
+                      auto_dispatch_report, backend_available, get_backend)
 from .baselines import (MESOS_SCHED_LATENCY_S, DRFScheduler, StaticScheduler,
-                        TaskLevelOverheadModel)
+                        TaskLevelOverheadModel, TetrisScheduler)
 from .chaos import (ChaosConfig, ChaosMonitor, chaos_config_hash,
                     chaos_from_csv, chaos_schedule, chaos_to_csv,
                     scale_cluster)
@@ -24,15 +24,17 @@ from .metrics import (actual_shares, adjusted_apps, churn_attribution,
                       resource_utilization)
 from .optimizer import (AutoOptimizer, GreedyOptimizer, MilpOptimizer,
                         OptimizerConfig, adjust_budget, fairness_budget,
-                        make_optimizer)
+                        make_optimizer, utilization_objective)
 from .partition import Partition, TaskExecutor, TaskScheduler
 from .replay import REPLAY_CLASS_INDEX, ReplayConfig, replay_trace
 from .runtime import (AbsorberConfig, AppRuntime, Arrival, ChaosEvent,
                       ClusterRuntime, Completion, Event, EventBus,
-                      MetricSample, PolicyTimer, Reallocated,
+                      MetricSample, Migrate, PolicyTimer, Reallocated,
                       ReallocationResult, Resize, ScaleDecision,
                       SchedulerPolicy, SimResult, SlaveDegraded, SlaveDrained,
                       SlaveFailed, SlaveRestored, Storm, Tick, as_policy)
+from .shard import (Coordinator, ShardConfig, ShardedControlPlane,
+                    cross_shard_certificate, partition_cluster)
 from .simulator import (ClusterSimulator, ReferenceClusterSimulator,
                         speedup_ratios)
 from .slave import Container, DormSlave
@@ -49,7 +51,10 @@ from .workload import (BASELINE_STATIC_CONTAINERS, MEAN_INTERARRIVAL_S,
 
 __all__ = [
     "AutoBackend", "Backend", "JaxBackend", "NumpyBackend",
-    "backend_available", "get_backend",
+    "auto_dispatch_report", "backend_available", "get_backend",
+    "Coordinator", "Migrate", "ShardConfig", "ShardedControlPlane",
+    "TetrisScheduler", "cross_shard_certificate", "partition_cluster",
+    "utilization_objective",
     "AdjustmentEvent", "AdjustmentProtocol", "CheckpointHandle",
     "RecordingProtocol", "AutoscaleConfig", "AutoscalePolicy", "LoadSignal",
     "ReplayLoadSignal", "SLOMonitor", "signals_from_workload",

@@ -785,6 +785,26 @@ class AutoBackend(Backend):
             x, free, d, inv_cap, items)
 
 
+def auto_dispatch_report(n_slaves: int, n_apps: int,
+                         backend: Optional["AutoBackend"] = None,
+                         ) -> Dict[str, object]:
+    """Which delegate `backend="auto"` picks at a given problem size.
+
+    The placement kernels dispatch on the slave axis, the ladder/probe
+    kernels on the app axis, so the two can disagree. The sharded control
+    plane calls this per shard (shards are small, so the crossover that
+    was moot for one 100k-slave master now decides each shard's engine)
+    and `bench_shard.py` records it next to the throughput numbers."""
+    be = backend if backend is not None else AutoBackend()
+    return {
+        "placement": be._pick(int(n_slaves), be.crossover_slaves).name,
+        "ladder": be._pick(int(n_apps), be.crossover_apps).name,
+        "jax_available": be._jax_ok,
+        "crossover_slaves": be.crossover_slaves,
+        "crossover_apps": be.crossover_apps,
+    }
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------

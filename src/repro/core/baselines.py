@@ -17,6 +17,10 @@ baseline owns a private event loop.
   churns nearly every running application -- exactly the unbounded
   adjustment overhead Dorm's Eq-16 constraint is designed to avoid.
 
+* `TetrisScheduler` -- Tetris-style multi-resource packing (alignment-score
+  placement + non-strict FCFS) over the same static container targets: the
+  strongest static competitor in the panel.
+
 * `TaskLevelOverheadModel` -- models task-level sharing (Mesos task mode):
   every task first waits for a resource offer. With the paper's measured
   ~430 ms mean scheduling latency and the Fig-1(b) task-duration CDF
@@ -430,6 +434,64 @@ class DRFScheduler:
         )
         self.prev_alloc = alloc
         return res
+
+
+class TetrisScheduler(StaticScheduler):
+    """Tetris-style multi-resource packing (Grandl et al., SIGCOMM'14).
+
+    Same static container targets and FCFS queue as `StaticScheduler`,
+    but two packing-quality changes that are the Tetris contribution:
+
+      * ALIGNMENT-SCORE placement: containers go to slaves in descending
+        `dot(free_j, d)` order -- a machine whose remaining capacity
+        vector aligns with the demand vector is filled first, packing
+        complementary demands together instead of fragmenting every
+        machine equally (first-fit-in-index-order's failure mode);
+      * NON-STRICT FCFS: a blocked head-of-queue app does not block the
+        apps behind it (Tetris trades strict ordering for packing
+        efficiency; starvation is bounded in the original by a waiting
+        score this baseline does not need -- completions re-run `_admit`
+        in arrival order anyway).
+
+    Still a static baseline: never resizes a placed app, never charges
+    Eq-4 adjustments -- its panel role in bench_chaos.py is to show how
+    much of Dorm's utilization edge survives against a GOOD packer that
+    lacks dynamic repartitioning."""
+
+    def _admit(self) -> List[str]:
+        started: List[str] = []
+        progressing = True
+        while progressing:
+            progressing = False
+            for app_id in list(self.queue):
+                if app_id in self.placements:
+                    self.queue.remove(app_id)
+                    continue
+                spec = self.specs[app_id]
+                want = self.static.get(app_id, spec.n_min)
+                want = min(max(want, spec.n_min), spec.n_max)
+                row = self._first_fit(spec, want)
+                if row is not None:
+                    self.placements[app_id] = row
+                    self.queue.remove(app_id)
+                    started.append(app_id)
+                    progressing = True
+                # non-strict: a blocked app is skipped, not a barrier
+        return started
+
+    def _first_fit(self, spec: ApplicationSpec, count: int,
+                   ) -> Optional[np.ndarray]:
+        d = spec.demand.as_array()
+        # Stable sort on the negated score: ties (e.g. all-empty slaves)
+        # keep index order, so an empty cluster places like first-fit.
+        order = np.argsort(-(self.slave_free @ d), kind="stable")
+        packed = _first_fit_row(self.slave_free[order], d, count)
+        if int(packed.sum()) < count:
+            return None
+        row = np.zeros(self.cluster.b, np.int64)
+        row[order] = packed
+        self.slave_free = self.slave_free - row[:, None] * d[None, :]
+        return row
 
 
 @dataclasses.dataclass(frozen=True)

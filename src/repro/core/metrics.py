@@ -146,7 +146,8 @@ def forced_churn_attribution(reallocated_events: Sequence) -> Dict[str, int]:
     forced (the failure's doing -- `forced_adjusted_app_ids`, set by the
     chaos recovery pass) vs voluntary (the optimizer's choice), plus the
     displaced/parked app totals behind the forced share."""
-    out = {"forced": 0, "voluntary": 0, "displaced": 0, "parked": 0}
+    out = {"forced": 0, "voluntary": 0, "displaced": 0, "parked": 0,
+           "migrated": 0}
     for ev in reallocated_events:
         res = ev.result
         out["forced"] += len(res.forced_adjusted_app_ids)
@@ -154,6 +155,9 @@ def forced_churn_attribution(reallocated_events: Sequence) -> Dict[str, int]:
                              - len(res.forced_adjusted_app_ids))
         out["displaced"] += len(res.displaced_app_ids)
         out["parked"] += len(res.parked_app_ids)
+        # Cross-shard moves (sharded plane only; a running migrant's
+        # adjustment is already inside "forced" -- this counts the moves).
+        out["migrated"] += len(getattr(res, "migrated_app_ids", ()))
     return out
 
 

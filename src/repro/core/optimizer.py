@@ -193,6 +193,29 @@ def _util_coeff(apps: Sequence[ApplicationSpec], cluster: ClusterSpec,
     return ratios.sum(axis=1)
 
 
+def utilization_objective(alloc: Allocation,
+                          apps: Sequence[ApplicationSpec],
+                          cluster: ClusterSpec,
+                          d: Optional[np.ndarray] = None) -> float:
+    """P2's Eq-10 utilization value of an allocation, normalized by
+    `cluster.total_capacity()`: sum_i w_i * N_i with w_i = sum_k d_ik/C_k.
+
+    The normalizing cluster is a parameter on purpose: a per-shard solve
+    certifies its bound against the SHARD's capacity, so re-scoring the
+    shard's allocation here against the GLOBAL spec expresses it in global
+    units -- the cross-shard certificate (`repro.core.shard.
+    cross_shard_certificate`) sums these against the single-master colgen
+    bound. `apps` may be any superset of the allocation's apps."""
+    if not alloc.app_ids:
+        return 0.0
+    by_id = {a.app_id: a for a in apps}
+    specs = [by_id[i] for i in alloc.app_ids]
+    w = _util_coeff(specs, cluster,
+                    d if d is not None else demand_matrix(specs))
+    counts = alloc.x.sum(axis=1).astype(np.float64)
+    return float(w @ counts)
+
+
 def _knee_caps(apps: Sequence[ApplicationSpec], nmin_v: np.ndarray,
                nmax_v: np.ndarray, frac: float) -> Optional[np.ndarray]:
     """Effective n_max under goodput-aware allocation: each app carrying a

@@ -172,6 +172,23 @@ class Storm:
 
 
 @dataclasses.dataclass(frozen=True)
+class Migrate:
+    """App migration between control-plane shards (see `repro.core.shard`):
+    teardown on the source shard + re-admission on the destination, one
+    first-class runtime event. Published by the coordinator for every
+    rebalance move it executes, and injectable like `Resize` to force a
+    move by hand (dispatched to the policy's `on_migrate` hook; policies
+    without the hook get publish-only semantics). `forced` marks moves of
+    RUNNING apps (teardown churn charged like PR-8's evictions); a pending
+    app's move is free and reported with forced=False."""
+    t: float
+    app_id: str
+    src_shard: int
+    dst_shard: int
+    forced: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class Reallocated:
     """Published on the bus after every applied policy decision."""
     t: float
@@ -198,8 +215,8 @@ class ScaleDecision:
     reason: str                      # "scale-up" | "scale-down"
 
 
-Event = Union[Arrival, Completion, Resize, Tick, Storm, SlaveFailed,
-              SlaveDrained, SlaveDegraded, SlaveRestored]
+Event = Union[Arrival, Completion, Resize, Tick, Storm, Migrate,
+              SlaveFailed, SlaveDrained, SlaveDegraded, SlaveRestored]
 
 
 class EventBus:
@@ -253,6 +270,12 @@ class ReallocationResult:
     forced_adjusted_app_ids: Tuple[str, ...] = ()
     displaced_app_ids: Tuple[str, ...] = ()
     parked_app_ids: Tuple[str, ...] = ()
+    # Apps moved between control-plane shards in this pass (sharded plane
+    # only, see `repro.core.shard`). A migrated RUNNING app also appears in
+    # `adjusted_app_ids` + `forced_adjusted_app_ids` (teardown +
+    # re-admission = one forced Eq-4 adjustment); a migrated PENDING app
+    # only appears here (moving a queued app costs nothing).
+    migrated_app_ids: Tuple[str, ...] = ()
     # Instantaneous cluster goodput sum_i goodput_i(N_i) of this
     # allocation, in container-equivalents (equals the total granted
     # container count when every app scales linearly). Policies that do
@@ -965,6 +988,13 @@ class ClusterRuntime:
                                 ev.app_id, ev.n_min, ev.n_max)
                     elif isinstance(ev, Tick):
                         res = self.policy.on_tick(t)
+                    elif isinstance(ev, Migrate):
+                        # First-class migration: route to the sharded
+                        # plane's hook. Single-master policies have no
+                        # shards to move between -- publish-only.
+                        fn = getattr(self.policy, "on_migrate", None)
+                        if fn is not None:
+                            res = fn(ev.app_id, ev.dst_shard)
                     elif isinstance(ev, _CHAOS_TYPES):
                         res = self._dispatch_chaos(ev)
                     finish(ev, res)

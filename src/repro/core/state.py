@@ -245,6 +245,14 @@ class ClusterState:
         i = self.row_of.get(app_id)
         return int(self.counts[i]) if i is not None else 0
 
+    def used_totals(self) -> np.ndarray:
+        """Aggregate committed capacity per resource: sum_k over slaves of
+        cap - free, i.e. Eq-1's numerator as a (m,) vector. O(b*m) from the
+        incrementally-maintained free matrix -- the sharded control plane
+        reads this per shard to merge a GLOBAL Eq-1 without an O(n*b)
+        allocation reduction."""
+        return self.total_cap - self.free.sum(axis=0)
+
     def placement(self, app_id: str) -> np.ndarray:
         """The app's x row (a copy -- the internal row mutates in place)."""
         return self.x[self.row_of[app_id]].copy()

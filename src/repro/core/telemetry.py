@@ -35,8 +35,8 @@ class MetricsLogger:
         kind="event" row (the samples already flow in via the runtime's
         `logger=` hook; this adds the event stream itself -- arrivals with
         app ids, completions, resizes, ticks)."""
-        from .runtime import (Arrival, Completion, Reallocated, Resize,
-                              ScaleDecision, Tick)
+        from .runtime import (Arrival, Completion, Migrate, Reallocated,
+                              Resize, ScaleDecision, Tick)
 
         bus.subscribe(Arrival, lambda e: self.log(
             "event", event="arrival", t=e.t,
@@ -48,6 +48,10 @@ class MetricsLogger:
             n_min=e.n_min, n_max=e.n_max))
         bus.subscribe(Tick, lambda e: self.log(
             "event", event="tick", t=e.t))
+        bus.subscribe(Migrate, lambda e: self.log(
+            "event", event="migrate", t=e.t, app=e.app_id,
+            src_shard=e.src_shard, dst_shard=e.dst_shard,
+            forced=e.forced))
         bus.subscribe(Reallocated, lambda e: self.log(
             "event", event="reallocated", t=e.t,
             adjusted=list(e.result.adjusted_app_ids),

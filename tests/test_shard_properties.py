@@ -1,0 +1,398 @@
+"""Property suite for the sharded control plane (PR 10).
+
+Random interleavings of Arrival / Completion / Resize / chaos / Migrate
+events driven through `ShardedControlPlane`. Invariants, after every
+single event:
+
+  * a 1-shard plane is BIT-EXACT vs a bare `DormMaster` event-for-event
+    (every result field, master-level and runtime-level, absorber and
+    chaos included) -- sharding with K=1 is free;
+  * no app is ever owned by two shards: the per-shard specs maps stay
+    pairwise disjoint and their union is exactly the admitted set;
+  * migration never loses work beyond Eq-4: the migrant's spec arrives
+    on the destination unchanged, a running migrant is charged exactly
+    one forced adjustment, and the app is placed-or-pending afterwards
+    -- never vanished, never half-placed;
+  * per-shard capacity is never exceeded under chaos floods (each
+    shard's effective capacity honors the same invariant the single
+    master does).
+
+Runs under hypothesis when available; falls back to a seeded-random
+sweep of the same checks otherwise."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (AbsorberConfig, ApplicationSpec, ChaosConfig,
+                        ClusterRuntime, ClusterSpec, Coordinator, DormMaster,
+                        OptimizerConfig, Reallocated, RecordingProtocol,
+                        ResourceVector, ShardConfig, ShardedControlPlane,
+                        TraceConfig, cross_shard_certificate, generate_trace,
+                        partition_cluster)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+THETAS = ((0.2, 0.2), (1.0, 1.0), (0.1, 0.3))
+
+
+# ---------------------------------------------------------------------------
+# random event scripts
+# ---------------------------------------------------------------------------
+
+def _gen_ops(rng, n_shards):
+    """Random shard-stressing event script: (cluster, theta, ops)."""
+    b = n_shards * int(rng.integers(2, 5))     # b % K == 0: proportional
+    cap = ResourceVector.of(int(rng.integers(6, 14)),
+                            int(rng.integers(1, 3)),
+                            int(rng.integers(16, 49)))
+    cluster = ClusterSpec.homogeneous(b, cap)
+    theta = THETAS[int(rng.integers(len(THETAS)))]
+
+    ops = []
+    alive = []
+    down = set()
+    next_id = 0
+    for _ in range(int(rng.integers(10, 21))):
+        choices = ["arrive", "arrive", "fail", "degrade"]
+        if alive:
+            choices += ["complete", "resize"]
+            if n_shards > 1:
+                choices += ["migrate", "migrate"]
+        if down:
+            choices += ["restore", "restore"]
+        op = choices[int(rng.integers(len(choices)))]
+        if op == "arrive":
+            n_min = int(rng.integers(1, 3))
+            n_max = n_min + int(rng.integers(0, 6))
+            spec = ApplicationSpec(
+                f"a{next_id}", "x",
+                ResourceVector.of(int(rng.integers(1, 4)),
+                                  int(rng.integers(0, 2)),
+                                  int(rng.integers(1, 13))),
+                int(rng.integers(1, 4)), n_max, n_min)
+            next_id += 1
+            alive.append(spec.app_id)
+            ops.append(("arrive", spec))
+        elif op == "complete":
+            app = alive.pop(int(rng.integers(len(alive))))
+            ops.append(("complete", app))
+        elif op == "resize":
+            app = alive[int(rng.integers(len(alive)))]
+            lo = int(rng.integers(1, 4))
+            ops.append(("resize", app, lo, lo + int(rng.integers(0, 7))))
+        elif op == "migrate":
+            app = alive[int(rng.integers(len(alive)))]
+            ops.append(("migrate", app, int(rng.integers(n_shards))))
+        elif op == "fail":
+            j = int(rng.integers(b))
+            down.add(j)
+            kind = "fail" if rng.random() < 0.7 else "drain"
+            ops.append((kind, f"slave-{j}"))
+        elif op == "degrade":
+            j = int(rng.integers(b))
+            down.add(j)
+            f = float(rng.choice([0.25, 0.5, 0.75]))
+            ops.append(("degrade", f"slave-{j}", f))
+        else:  # restore
+            j = down.pop() if rng.random() < 0.8 else int(rng.integers(b))
+            ops.append(("restore", f"slave-{j}"))
+    return cluster, theta, ops
+
+
+def _apply(policy, op):
+    kind = op[0]
+    if kind == "arrive":
+        return policy.on_arrival((op[1],))
+    if kind == "complete":
+        return policy.on_completion(op[1])
+    if kind == "resize":
+        return policy.on_resize(op[1], op[2], op[3])
+    if kind == "migrate":
+        return policy.migrate(op[1], op[2])
+    if kind == "fail":
+        return policy.on_slave_failed(op[1])
+    if kind == "drain":
+        return policy.on_slave_drained(op[1])
+    if kind == "degrade":
+        return policy.on_slave_degraded(op[1], op[2])
+    return policy.on_slave_restored(op[1])
+
+
+def _plane(cluster, theta, n_shards):
+    cfg = OptimizerConfig(*theta)
+    return ShardedControlPlane(cluster, ShardConfig(n_shards=n_shards),
+                               optimizer_kind="greedy", optimizer_cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+def _check_shard_invariants(plane, res):
+    """Per-shard capacity/bounds + global single-ownership, from the
+    masters' own post-event view."""
+    seen = {}
+    for sh in plane.shards:
+        m = sh.master
+        cap = m.cluster.capacity_matrix()
+        used = np.zeros_like(cap, dtype=np.float64)
+        placed = set()
+        for app_id in list(m.partitions):
+            spec = m.specs[app_id]
+            row = m.state.placement(app_id) if m.state is not None \
+                else m._placements[app_id]
+            count = int(row.sum())
+            placed.add(app_id)
+            assert spec.n_min <= count <= spec.n_max, \
+                f"shard {sh.index} {app_id}: {count} outside bounds"
+            used += row[:, None] * spec.demand.as_array()[None, :]
+        assert np.all(used <= cap + 1e-6), \
+            f"shard {sh.index}: effective capacity exceeded"
+        assert placed | set(m.pending) == set(m.specs), sh.index
+        for app_id in m.specs:
+            assert app_id not in seen, \
+                f"{app_id} owned by shards {seen[app_id]} and {sh.index}"
+            seen[app_id] = sh.index
+    # The owner map is exactly the union of the shards' admitted sets.
+    assert dict(plane.owner) == seen
+    if res is not None:
+        assert set(res.forced_adjusted_app_ids) <= set(res.adjusted_app_ids)
+
+
+def _check_plane_storm(seed, n_shards):
+    rng = np.random.default_rng(seed)
+    cluster, theta, ops = _gen_ops(rng, n_shards)
+    plane = _plane(cluster, theta, n_shards)
+    for op in ops:
+        if op[0] == "migrate":
+            src = plane.owner.get(op[1])
+            src_spec = (plane.shards[src].master.specs.get(op[1])
+                        if src is not None else None)
+            was_running = plane.containers_of(op[1]) > 0
+            res = _apply(plane, op)
+            _check_shard_invariants(plane, res)
+            if res is None:
+                # Unknown app or src == dst: nothing may have moved.
+                assert plane.owner.get(op[1]) == src
+                continue
+            # -- migration loses no work beyond Eq-4:
+            dst = op[2]
+            assert res.migrated_app_ids == (op[1],)
+            assert plane.owner[op[1]] == dst
+            # the spec crossed shards unchanged (same bounds, demand, work)
+            assert plane.shards[dst].master.specs[op[1]] == src_spec
+            if was_running:
+                # exactly one forced Eq-4 adjustment, never a fresh start
+                assert op[1] in res.forced_adjusted_app_ids
+                assert op[1] in res.adjusted_app_ids
+                assert op[1] not in res.started_app_ids
+            # placed within bounds on dst, or pending there -- never gone
+            dst_m = plane.shards[dst].master
+            c = dst_m.containers_of(op[1])
+            if c > 0:
+                assert src_spec.n_min <= c <= src_spec.n_max
+            else:
+                assert op[1] in dst_m.pending
+            assert res.changed_counts is not None \
+                and op[1] in res.changed_counts
+        else:
+            res = _apply(plane, op)
+            _check_shard_invariants(plane, res)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 32 - 1), st.integers(2, 4))
+    @settings(max_examples=60, deadline=None)
+    def test_shard_storms_hold_invariants(seed, n_shards):
+        _check_plane_storm(seed, n_shards)
+else:
+    @pytest.mark.parametrize("chunk", range(6))
+    def test_shard_storms_hold_invariants(chunk):
+        # Seeded fallback: 6 chunks x 10 seeds = 60 examples.
+        for k in range(10):
+            seed = chunk * 10 + k
+            _check_plane_storm(seed, 2 + seed % 3)
+
+
+# ---------------------------------------------------------------------------
+# 1-shard bit-exactness (master-level)
+# ---------------------------------------------------------------------------
+
+def _check_one_shard_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    cluster, theta, ops = _gen_ops(rng, 1)
+    plane = _plane(cluster, theta, 1)
+    cfg = OptimizerConfig(*theta)
+    master = DormMaster(cluster, "greedy", cfg,
+                        protocol=RecordingProtocol())
+    for op in ops:
+        res_p = _apply(plane, op)
+        res_m = _apply(master, op)
+        assert (res_p is None) == (res_m is None), op
+        if res_m is None:
+            continue
+        assert res_p.allocation.app_ids == res_m.allocation.app_ids, op
+        np.testing.assert_array_equal(res_p.allocation.x, res_m.allocation.x,
+                                      err_msg=str(op))
+        assert res_p.adjusted_app_ids == res_m.adjusted_app_ids, op
+        assert res_p.started_app_ids == res_m.started_app_ids, op
+        assert res_p.pending_app_ids == res_m.pending_app_ids, op
+        assert res_p.forced_adjusted_app_ids == \
+            res_m.forced_adjusted_app_ids, op
+        assert res_p.displaced_app_ids == res_m.displaced_app_ids, op
+        assert res_p.parked_app_ids == res_m.parked_app_ids, op
+        assert res_p.changed_counts == res_m.changed_counts, op
+        assert res_p.utilization == res_m.utilization, op
+        assert res_p.fairness_loss == res_m.fairness_loss, op
+        assert res_p.adjustment_overhead == res_m.adjustment_overhead, op
+        assert res_p.goodput == res_m.goodput, op
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_one_shard_plane_bit_exact_vs_master(seed):
+        _check_one_shard_bit_exact(seed)
+else:
+    @pytest.mark.parametrize("chunk", range(6))
+    def test_one_shard_plane_bit_exact_vs_master(chunk):
+        for k in range(10):
+            _check_one_shard_bit_exact(chunk * 10 + k)
+
+
+# ---------------------------------------------------------------------------
+# 1-shard bit-exactness (runtime-level, absorber + chaos)
+# ---------------------------------------------------------------------------
+
+def _run(policy_factory, cluster, wl, chaos, absorber=None):
+    rt = ClusterRuntime(policy_factory(cluster), horizon_s=12 * 3600.0,
+                        chaos=chaos, absorber=absorber)
+    allocs = []
+    rt.bus.subscribe(Reallocated,
+                     lambda e: allocs.append((e.t,
+                                              e.result.allocation.app_ids,
+                                              e.result.allocation.x.copy())))
+    res = rt.run(wl)
+    return res, allocs, rt
+
+
+def _assert_timelines_equal(a, b, ctx=""):
+    (res_a, al_a, _), (res_b, al_b, _) = a, b
+    assert len(al_a) == len(al_b), ctx
+    for (t1, ids1, x1), (t2, ids2, x2) in zip(al_a, al_b):
+        assert t1 == t2 and ids1 == ids2, ctx
+        np.testing.assert_array_equal(x1, x2, err_msg=ctx)
+    assert res_a.durations() == res_b.durations(), ctx
+    assert res_a.total_forced_adjustments == \
+        res_b.total_forced_adjustments, ctx
+    assert len(res_a.samples) == len(res_b.samples), ctx
+    for sa, sb in zip(res_a.samples, res_b.samples):
+        assert sa.t == sb.t and sa.running == sb.running, ctx
+        assert sa.pending == sb.pending, ctx
+        assert sa.adjustment_overhead == sb.adjustment_overhead, ctx
+        assert sa.forced_adjustments == sb.forced_adjustments, ctx
+        assert sa.utilization == pytest.approx(sb.utilization, abs=0.0)
+        assert sa.fairness_loss == pytest.approx(sb.fairness_loss, abs=0.0)
+
+
+def _check_one_shard_runtime(seed):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterSpec.homogeneous(
+        int(rng.integers(6, 12)), ResourceVector.of(8, 2, 32))
+    wl = generate_trace(TraceConfig(n_apps=int(rng.integers(8, 14)),
+                                    seed=seed, mean_interarrival_s=400.0))
+    chaos = ChaosConfig(seed=int(seed) % 1009, crashes_per_day=20.0,
+                        rack_size=2, crash_restore_s=1800.0)
+    cfg = OptimizerConfig(0.2, 0.2)
+
+    def master(cl):
+        return DormMaster(cl, "greedy", cfg, protocol=RecordingProtocol())
+
+    def plane(cl):
+        return ShardedControlPlane(cl, ShardConfig(n_shards=1),
+                                   optimizer_kind="greedy",
+                                   optimizer_cfg=cfg)
+
+    for absorber in (None, AbsorberConfig()):
+        ref = _run(master, cluster, wl, chaos, absorber=absorber)
+        got = _run(plane, cluster, wl, chaos, absorber=absorber)
+        _assert_timelines_equal(ref, got,
+                                f"seed={seed} absorber={absorber}")
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_one_shard_runtime_timeline_bit_exact(seed):
+        _check_one_shard_runtime(seed)
+else:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_one_shard_runtime_timeline_bit_exact(seed):
+        _check_one_shard_runtime(seed)
+
+
+# ---------------------------------------------------------------------------
+# deterministic units: partitioning, coordinator, certificate
+# ---------------------------------------------------------------------------
+
+def test_partition_cluster_round_robin_proportional():
+    cluster = ClusterSpec.homogeneous(12, ResourceVector.of(8, 2, 32))
+    shards = partition_cluster(cluster, 4)
+    assert [s.b for s in shards] == [3, 3, 3, 3]
+    # shard s owns global slaves s, s+4, s+8 -- ids preserved verbatim
+    assert [s.slave_id for s in shards[1].slaves] == \
+        ["slave-1", "slave-5", "slave-9"]
+    for s in shards:
+        np.testing.assert_allclose(s.total_capacity(),
+                                   cluster.total_capacity() / 4)
+    with pytest.raises(ValueError):
+        partition_cluster(cluster, 13)
+
+
+def _spec(i, n_min=1, n_max=3):
+    return ApplicationSpec(f"m{i}", "x", ResourceVector.of(2, 1, 8),
+                           1, n_max, n_min)
+
+
+def test_coordinator_relieves_imbalance():
+    """Kill every app on one shard; the next rebalance must move load
+    toward the emptied shard (the CI smoke's migration >= 1 guarantee)."""
+    cluster = ClusterSpec.homogeneous(8, ResourceVector.of(8, 2, 32))
+    plane = ShardedControlPlane(
+        cluster, ShardConfig(n_shards=2, rebalance_interval_s=600.0,
+                             imbalance_threshold=0.2),
+        optimizer_kind="greedy")
+    plane.on_arrival(tuple(_spec(i) for i in range(8)))
+    for app_id, owner in list(plane.owner.items()):
+        if owner == 1:
+            plane.on_completion(app_id)
+    assert all(s == 0 for s in plane.owner.values())
+    coord = Coordinator(plane)
+    moves = coord.rebalance(t=1000.0)
+    assert len(moves) >= 1
+    assert plane.migration_count == len(moves)
+    assert all(mv.src_shard == 0 and mv.dst_shard == 1 for mv in moves)
+    _check_shard_invariants(plane, None)
+    # a second rebalance inside the interval is gated off entirely
+    assert coord.rebalance(t=1100.0) == []
+    assert coord.migrations == moves
+
+
+def test_cross_shard_certificate_small():
+    cluster = ClusterSpec.homogeneous(8, ResourceVector.of(8, 2, 32))
+    plane = ShardedControlPlane(cluster, ShardConfig(n_shards=2),
+                                optimizer_kind="greedy")
+    plane.on_arrival(tuple(_spec(i, n_min=1, n_max=4) for i in range(6)))
+    cert = cross_shard_certificate(plane)
+    assert cert["global_bound"] is not None
+    assert cert["sharded_bound"] is not None      # proportional shards
+    assert cert["cross_shard_gap"] is not None
+    assert 0.0 <= cert["cross_shard_gap"] < 1.0
+    # the sharded achieved value can never beat the certified global bound
+    assert cert["sharded_objective"] <= cert["global_bound"] + 1e-6
+    assert cert["partition_gap"] <= cert["cross_shard_gap"] + 1e-6
